@@ -1,0 +1,50 @@
+"""Pallas kernel micro-bench: call time (interpret mode on CPU) + packing
+throughput factor vs the unpacked integer path."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.packed_matmul.ops import choose_config, packed_dense, packed_dense_reference
+from repro.kernels.filter_conv.ops import choose_filter_config, packed_conv1d
+from repro.kernels.quant_matmul.ops import quant_dense
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    x = jax.random.uniform(key, (64, 256))
+    w = jax.random.normal(key, (256, 128))
+    for wb, ab in ((2, 2), (4, 4)):
+        us = _time(lambda: packed_dense(x, w, w_bits=wb, a_bits=ab))
+        cfg = choose_config(wb, ab)
+        rows.append(
+            (f"kernel_packed_matmul_w{wb}a{ab}", us,
+             f"n_seg={cfg['n_seg']};acc_chunk={cfg['acc_chunk']};muls_per_int_mul={cfg['n_seg']}")
+        )
+    s = jnp.asarray(jax.random.randint(key, (8, 16, 64), 0, 4), jnp.int32)
+    f = jnp.asarray(jax.random.randint(key, (16, 3), 0, 4), jnp.int32)
+    us = _time(lambda: packed_conv1d(s, f, w_bits=2, a_bits=2))
+    fc = choose_filter_config(2, 2, 3)
+    rows.append(
+        ("kernel_filter_conv_w2a2", us,
+         f"k_p={fc['k_p']};n_p={fc['n_p']};coeffs_per_mul={fc['k_p']+fc['n_p']-1}")
+    )
+    us = _time(lambda: quant_dense(x, w))
+    rows.append(("kernel_quant_matmul_w8a8", us, "int8_mxu_path"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""Fig. 4 reproduction: DSP Packing Optimizer vs HiKonv / vendor packing.
+
+Builds the T_mul lookup tables for 1x1 / 3x3 / 5x5 kernels on the
+DSP48E2 profile and counts improved cells vs the baselines, plus the
+estimated LUT overhead of the enhanced placements (paper: ~16.4 LUTs).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from repro.core.packing import (
+    DSP48E2,
+    build_lut,
+    compare_luts,
+    lut_overhead_estimate,
+)
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    results = {}
+    for k in (1, 3, 5):
+        t0 = time.perf_counter()
+        ours = build_lut(DSP48E2, kernel_len=k, seq_len=32, method="mixq")
+        dt = (time.perf_counter() - t0) * 1e6 / 49  # per-cell search time
+        cmp_h = compare_luts(ours, build_lut(DSP48E2, kernel_len=k, seq_len=32, method="hikonv"))
+        cmp_x = compare_luts(ours, build_lut(DSP48E2, kernel_len=k, seq_len=32, method="xilinx"))
+        overheads = [lut_overhead_estimate(c) for c in ours.table.values()]
+        results[f"{k}x{k}"] = {
+            "improved_vs_hikonv": cmp_h["better"],
+            "worse_vs_hikonv": cmp_h["worse"],
+            "improved_vs_xilinx": cmp_x["better"],
+            "mean_lut_overhead": sum(overheads) / len(overheads),
+            "t_mul_w4a4": ours.t_mul(4, 4),
+            "t_mul_w2a2": ours.t_mul(2, 2),
+            "t_mul_w8a8": ours.t_mul(8, 8),
+        }
+        rows.append(
+            (
+                f"fig4_packing_{k}x{k}",
+                dt,
+                f"improved={cmp_h['better']}/49_vs_hikonv;worse={cmp_h['worse']};"
+                f"lut_ovh={results[f'{k}x{k}']['mean_lut_overhead']:.1f}",
+            )
+        )
+    out = ROOT / "artifacts" / "fig4_packing.json"
+    out.parent.mkdir(exist_ok=True)
+    out.write_text(json.dumps(results, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,70 @@
+"""Render the EXPERIMENTS.md tables from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks import roofline
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | chips | mem GB/dev | jaxpr FLOPs | coll B/chip | compile s |",
+            "|---|---|---|---|---|---|---|---|"]
+    for path in sorted((ROOT / "artifacts" / "dryrun").glob("*.json")):
+        rec = json.loads(path.read_text())
+        if rec.get("serve_int8") or rec.get("overrides"):
+            continue
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | {rec['chips']} "
+            f"| {rec['memory']['per_device_total_gb']} "
+            f"| {rec.get('jaxpr_cost', {}).get('flops', 0):.3e} "
+            f"| {rec['collectives']['total_bytes']:.3e} | {rec['compile_s']} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | dominant | useful | roofline frac | mem GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in roofline.load_all("single"):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['mem_gb_per_dev']} |"
+        )
+    return "\n".join(rows)
+
+
+def sweep_delta_table() -> str:
+    base_dir = ROOT / "artifacts" / "dryrun_baseline"
+    opt_dir = ROOT / "artifacts" / "dryrun"
+    rows = ["| cell | coll B/chip baseline | optimized | delta | mem GB baseline | optimized |",
+            "|---|---|---|---|---|---|"]
+    for path in sorted(opt_dir.glob("*__single.json")):
+        b_path = base_dir / path.name
+        if not b_path.exists():
+            continue
+        opt = json.loads(path.read_text())
+        base = json.loads(b_path.read_text())
+        cb, co = base["collectives"]["total_bytes"], opt["collectives"]["total_bytes"]
+        mb, mo = base["memory"]["per_device_total_gb"], opt["memory"]["per_device_total_gb"]
+        delta = (co - cb) / cb * 100 if cb else 0.0
+        rows.append(
+            f"| {opt['arch']}/{opt['shape']} | {cb:.2e} | {co:.2e} | {delta:+.0f}% | {mb} | {mo} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    md = (ROOT / "EXPERIMENTS.md").read_text()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
+    md = md.replace("<!-- SWEEP_DELTA_TABLE -->", sweep_delta_table())
+    (ROOT / "EXPERIMENTS.md").write_text(md)
+    print("tables rendered into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark driver: one entry per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per artifact) and
+caches heavyweight results under artifacts/.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import comparison, deployment, kernel_bench, nas_pareto, packing_efficiency
+
+    suites = [
+        ("fig4", packing_efficiency.run),
+        ("fig5+6", nas_pareto.run),
+        ("table1", deployment.run),
+        ("table2", comparison.run),
+        ("kernels", kernel_bench.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{label},-1,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc(limit=3, file=sys.stderr)
+
+    # roofline summary (requires dry-run artifacts)
+    try:
+        from benchmarks import roofline
+
+        rows = roofline.load_all("single")
+        if rows:
+            worst = min(rows, key=lambda r: r["roofline_fraction"])
+            best = max(rows, key=lambda r: r["roofline_fraction"])
+            print(
+                f"roofline_summary,0.0,cells={len(rows)};"
+                f"best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f};"
+                f"worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
+            )
+        else:
+            print("roofline_summary,0.0,no_dryrun_artifacts_yet")
+    except Exception as e:  # noqa: BLE001
+        failures += 1
+        print(f"roofline,-1,FAILED:{type(e).__name__}:{e}")
+
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.configs.shapes import LONG_ELIGIBLE, SHAPES, ShapeSpec, cells_for
+from repro.configs.registry import ARCHS, get_config
+
+__all__ = ["LONG_ELIGIBLE", "SHAPES", "ShapeSpec", "cells_for", "ARCHS", "get_config"]

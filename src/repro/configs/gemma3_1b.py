@@ -1,0 +1,23 @@
+"""gemma3-1b [dense]: 26L d1152 4H (GQA kv=1, head_dim 256) ff6912
+vocab 262144; 5 local (1024-token sliding window) : 1 global pattern.
+[hf:google/gemma-3-1b-pt]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b",
+        n_layers=26, d_model=1152, n_heads=4, kv_heads=1, head_dim=256,
+        d_ff=6912, vocab=262_144, mlp_kind="geglu", rope_theta=1_000_000.0,
+        window_pattern=(1024, 1024, 1024, 1024, 1024, 0),
+        cache_shard="seq_mp",  # kv_heads=1 cannot use TP head sharding
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-1b-smoke",
+        n_layers=3, d_model=64, n_heads=2, kv_heads=1, head_dim=32,
+        d_ff=128, vocab=512, mlp_kind="geglu",
+        window_pattern=(8, 8, 0), q_chunk=64, cache_shard="seq_mp",
+    )

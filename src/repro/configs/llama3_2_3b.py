@@ -1,0 +1,19 @@
+"""llama3.2-3b [dense]: 28L d3072 24H (GQA kv=8) ff8192 vocab 128256.
+[hf:meta-llama/Llama-3.2-3B]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b",
+        n_layers=28, d_model=3072, n_heads=24, kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=128_256, mlp_kind="swiglu", rope_theta=500_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b-smoke",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, mlp_kind="swiglu", q_chunk=64,
+    )

@@ -1,0 +1,22 @@
+"""llama4-scout-17b-a16e [moe]: 48L d5120 40H (GQA kv=8) expert_ff=8192,
+vocab 202048, MoE 16 experts top-1.  [hf:meta-llama/Llama-4-Scout-17B-16E]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e",
+        n_layers=48, d_model=5120, n_heads=40, kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=202_048, mlp_kind="swiglu", rope_theta=500_000.0,
+        n_experts=16, top_k=1, expert_d_ff=8192,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-scout-17b-a16e-smoke",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, mlp_kind="swiglu",
+        n_experts=4, top_k=1, expert_d_ff=128, capacity_factor=4.0,
+        q_chunk=64,
+    )

@@ -1,0 +1,21 @@
+"""mamba2-130m [ssm]: 24L d768 attn-free, ssm_state=128 (SSD), vocab 50280.
+[arXiv:2405.21060]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m",
+        n_layers=24, d_model=768, n_heads=1, kv_heads=1,
+        d_ff=0, vocab=50_432, family="ssm",  # vocab padded from 50280 for TP divisibility
+        ssm_state=128, ssm_head_dim=64,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-130m-smoke",
+        n_layers=2, d_model=64, n_heads=1, kv_heads=1,
+        d_ff=0, vocab=512, family="ssm",
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+    )

@@ -1,0 +1,19 @@
+"""nemotron-4-340b [dense]: 96L d18432 96H (GQA kv=8) ff73728 vocab 256000,
+squared-ReLU MLP.  [arXiv:2402.16819]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b",
+        n_layers=96, d_model=18432, n_heads=96, kv_heads=8, head_dim=192,
+        d_ff=73728, vocab=256_000, mlp_kind="squared_relu", rope_theta=10_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b-smoke",
+        n_layers=2, d_model=96, n_heads=6, kv_heads=2, head_dim=16,
+        d_ff=256, vocab=512, mlp_kind="squared_relu", q_chunk=64,
+    )

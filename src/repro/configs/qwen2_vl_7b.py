@@ -1,0 +1,21 @@
+"""qwen2-vl-7b [vlm]: 28L d3584 28H (GQA kv=4) ff18944 vocab 152064 with
+M-RoPE (3-D positions).  Patch frontend is a STUB: input_specs provides
+3-D position ids alongside tokens.  [arXiv:2409.12191]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b",
+        n_layers=28, d_model=3584, n_heads=28, kv_heads=4, head_dim=128,
+        d_ff=18944, vocab=152_064, mlp_kind="swiglu", rope_theta=1_000_000.0,
+        use_mrope=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-7b-smoke",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, mlp_kind="swiglu", use_mrope=True, q_chunk=64,
+    )

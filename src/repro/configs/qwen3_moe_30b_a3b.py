@@ -1,0 +1,22 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d2048 32H (GQA kv=4) expert_ff=768,
+vocab 151936, MoE 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b",
+        n_layers=48, d_model=2048, n_heads=32, kv_heads=4, head_dim=64,
+        d_ff=768, vocab=151_936, mlp_kind="swiglu", rope_theta=1_000_000.0,
+        n_experts=128, top_k=8, expert_d_ff=768,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b-smoke",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+        d_ff=96, vocab=512, mlp_kind="swiglu",
+        n_experts=8, top_k=2, expert_d_ff=96, capacity_factor=4.0,
+        q_chunk=64,
+    )

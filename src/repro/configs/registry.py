@@ -1,0 +1,36 @@
+"""Architecture registry: ``get_config(arch, smoke=...)`` for every
+assigned architecture (each also has its own module in this package)."""
+from __future__ import annotations
+
+from repro.configs import (
+    gemma3_1b,
+    llama3_2_3b,
+    llama4_scout_17b_a16e,
+    mamba2_130m,
+    nemotron_4_340b,
+    qwen2_vl_7b,
+    qwen3_moe_30b_a3b,
+    whisper_tiny,
+    yi_6b,
+    zamba2_1_2b,
+)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "yi-6b": yi_6b,
+    "gemma3-1b": gemma3_1b,
+    "nemotron-4-340b": nemotron_4_340b,
+    "llama3.2-3b": llama3_2_3b,
+    "zamba2-1.2b": zamba2_1_2b,
+    "whisper-tiny": whisper_tiny,
+    "qwen2-vl-7b": qwen2_vl_7b,
+    "mamba2-130m": mamba2_130m,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_config(arch: str, *, smoke: bool = False):
+    mod = _MODULES[arch]
+    return mod.smoke() if smoke else mod.full()

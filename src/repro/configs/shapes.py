@@ -1,0 +1,32 @@
+"""Assigned input-shape sets (one per LM arch; 4 cells each)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: run only for SSM / hybrid /
+# sliding-window archs; skip (documented in DESIGN.md) for pure
+# full-attention archs.
+LONG_ELIGIBLE = {"mamba2-130m", "zamba2-1.2b", "gemma3-1b"}
+
+
+def cells_for(arch: str) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if arch in LONG_ELIGIBLE:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,23 @@
+"""whisper-tiny [audio]: enc-dec, 4+4L d384 6H ff1536 vocab 51865.
+Conv frontend is a STUB: input_specs provides precomputed frame embeddings.
+[arXiv:2212.04356]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny",
+        n_layers=4, d_model=384, n_heads=6, kv_heads=6, head_dim=64,
+        d_ff=1536, vocab=51_968,  # vocab padded from 51865 for TP divisibility
+        mlp_kind="gelu",
+        family="encdec", enc_layers=4,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny-smoke",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512, mlp_kind="gelu",
+        family="encdec", enc_layers=2, q_chunk=64,
+    )

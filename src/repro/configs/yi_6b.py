@@ -1,0 +1,19 @@
+"""yi-6b [dense]: 32L d4096 32H (GQA kv=4) ff11008 vocab 64000 (llama-arch).
+[arXiv:2403.04652]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="yi-6b",
+        n_layers=32, d_model=4096, n_heads=32, kv_heads=4, head_dim=128,
+        d_ff=11008, vocab=64_000, mlp_kind="swiglu", rope_theta=5_000_000.0,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="yi-6b-smoke",
+        n_layers=2, d_model=64, n_heads=4, kv_heads=2, head_dim=16,
+        d_ff=160, vocab=512, mlp_kind="swiglu", q_chunk=64,
+    )

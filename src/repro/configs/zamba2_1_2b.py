@@ -1,0 +1,23 @@
+"""zamba2-1.2b [hybrid]: 38 Mamba2 layers (ssm_state=64) + one SHARED
+attention+MLP block applied every 6 layers; d2048, attn 32H (MHA kv=32),
+ff8192, vocab 32000.  [arXiv:2411.15242]"""
+from repro.models.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b",
+        n_layers=38, d_model=2048, n_heads=32, kv_heads=32, head_dim=64,
+        d_ff=8192, vocab=32_000, mlp_kind="swiglu",
+        family="hybrid", ssm_state=64, ssm_head_dim=64, hybrid_attn_every=6,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b-smoke",
+        n_layers=5, d_model=64, n_heads=4, kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512, mlp_kind="swiglu",
+        family="hybrid", ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+        hybrid_attn_every=2, q_chunk=64,
+    )

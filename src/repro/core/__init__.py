@@ -1,0 +1,1 @@
+"""DeepBurning-MixQ core: DSP packing, DSP-aware NAS, accelerator customization."""

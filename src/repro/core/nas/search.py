@@ -1,0 +1,154 @@
+"""NAS search / QAT fine-tune drivers (§V + §VII-C).
+
+``search`` trains the super-net weights and architecture logits jointly
+against Loss_acc + eta * Loss_comp (Eq. 9) and returns the argmax
+bit-width selection plus its Eq.-6 DSP-operation count.  ``finetune``
+then trains the selected fixed mixed-precision model (standard QAT).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nas import supernet
+from repro.core.packing import PackingLUT
+from repro.data import synthetic
+from repro.models import convnets
+from repro.optim import AdamW
+
+
+@dataclasses.dataclass
+class SearchResult:
+    bits: list[tuple[int, int]]
+    op_dsp: float
+    final_task_loss: float
+    final_metric: float
+    history: list[dict]
+    alphas: dict
+    params: dict
+
+
+def _dataset(spec: convnets.ConvNetSpec, seed: int, n: int):
+    if spec.head == "classify":
+        return synthetic.classification_set(seed, n, hw=spec.in_hw[0])
+    return synthetic.detection_set(seed, n, hw=spec.in_hw)
+
+
+def _metric(spec, pred, labels):
+    if spec.head == "classify":
+        return convnets.accuracy(pred, labels)
+    return convnets.iou(pred, labels)
+
+
+def search(
+    spec: convnets.ConvNetSpec,
+    luts: Mapping[int, PackingLUT],
+    *,
+    eta: float = 0.1,
+    proxy: str = "dsp",
+    steps: int = 200,
+    batch: int = 32,
+    n_data: int = 512,
+    seed: int = 0,
+    space: supernet.SearchSpace = supernet.SearchSpace(),
+) -> SearchResult:
+    key = jax.random.PRNGKey(seed)
+    params = convnets.init_params(key, spec)
+    alphas = supernet.init_alphas(spec, space)
+    tables = supernet.t_mul_tables(spec, luts, space)
+    ops = supernet.op_muls(spec)
+    data, labels = _dataset(spec, seed, n_data)
+
+    opt_w = AdamW(lr=2e-3, grad_clip_norm=5.0)
+    opt_a = AdamW(lr=5e-2)
+    state_w = opt_w.init(params)
+    state_a = opt_a.init(alphas)
+
+    @jax.jit
+    def step(params, alphas, state_w, state_a, x, y):
+        def loss_fn(params, alphas):
+            pred = supernet.supernet_apply(params, alphas, spec, x, space)
+            acc = convnets.task_loss(pred, y, spec.head)
+            comp = supernet.complexity_loss(
+                alphas, tables, ops, proxy=proxy, bit_choices=space.bit_choices
+            )
+            return acc + eta * comp, (acc, comp)
+
+        (loss, (acc, comp)), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+            params, alphas
+        )
+        params, state_w = opt_w.update(grads[0], state_w, params)
+        alphas, state_a = opt_a.update(grads[1], state_a, alphas)
+        return params, alphas, state_w, state_a, loss, acc, comp
+
+    history = []
+    it = synthetic.batches(data, labels, batch, seed=seed, epochs=10_000)
+    for i in range(steps):
+        x, y = next(it)
+        params, alphas, state_w, state_a, loss, acc, comp = step(
+            params, alphas, state_w, state_a, x, y
+        )
+        if i % max(1, steps // 10) == 0 or i == steps - 1:
+            history.append(
+                {"step": i, "loss": float(loss), "task": float(acc), "comp": float(comp)}
+            )
+
+    bits = supernet.select_bits(alphas, space)
+    pred = supernet.supernet_apply(params, alphas, spec, data[:128], space)
+    metric = float(_metric(spec, pred, labels[:128]))
+    return SearchResult(
+        bits=bits,
+        op_dsp=supernet.op_dsp(spec, bits, luts),
+        final_task_loss=float(convnets.task_loss(pred, labels[:128], spec.head)),
+        final_metric=metric,
+        history=history,
+        alphas=alphas,
+        params=params,
+    )
+
+
+def finetune(
+    spec: convnets.ConvNetSpec,
+    bits: list[tuple[int, int]],
+    *,
+    steps: int = 300,
+    batch: int = 32,
+    n_data: int = 512,
+    seed: int = 0,
+    params: dict | None = None,
+) -> dict:
+    """QAT fine-tune of a fixed mixed-precision assignment; returns metrics."""
+    key = jax.random.PRNGKey(seed + 1)
+    params = params if params is not None else convnets.init_params(key, spec)
+    data, labels = _dataset(spec, seed, n_data)
+    opt = AdamW(lr=2e-3, grad_clip_norm=5.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        def loss_fn(p):
+            pred = convnets.apply(p, spec, x, bits=bits)
+            return convnets.task_loss(pred, y, spec.head)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    it = synthetic.batches(data, labels, batch, seed=seed, epochs=10_000)
+    loss = jnp.inf
+    for i in range(steps):
+        x, y = next(it)
+        params, state, loss = step(params, state, x, y)
+
+    test_x, test_y = _dataset(spec, seed + 7, 256)
+    pred = convnets.apply(params, spec, test_x, bits=bits)
+    return {
+        "params": params,
+        "train_loss": float(loss),
+        "test_loss": float(convnets.task_loss(pred, test_y, spec.head)),
+        "metric": float(_metric(spec, pred, test_y)),
+    }

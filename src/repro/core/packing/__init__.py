@@ -1,0 +1,32 @@
+from .profiles import PROFILES, DSP48E2, TPU_MXU8, TPU_VPU15, MulProfile
+from .strategies import PackingConfig, all_placements, filter_placements, kernel_placements
+from .optimizer import (
+    DEFAULT_BITS,
+    PackingLUT,
+    best_packing,
+    build_lut,
+    compare_luts,
+    default_lut_cache,
+    lut_overhead_estimate,
+)
+from . import bitpack
+
+__all__ = [
+    "PROFILES",
+    "DSP48E2",
+    "TPU_MXU8",
+    "TPU_VPU15",
+    "MulProfile",
+    "PackingConfig",
+    "all_placements",
+    "filter_placements",
+    "kernel_placements",
+    "DEFAULT_BITS",
+    "PackingLUT",
+    "best_packing",
+    "build_lut",
+    "compare_luts",
+    "default_lut_cache",
+    "lut_overhead_estimate",
+    "bitpack",
+]

@@ -1,0 +1,188 @@
+"""DSP Packing Optimizer (DeepBurning-MixQ §IV).
+
+For every (weight_bits, activation_bits) combination the optimizer
+traverses all feasible placements of all strategies and enhancements and
+keeps the best one under the paper's lexicographic objective
+(maximize T_mul, then E_g).  Results are stored in lookup tables, which
+(a) direct the DSP-aware quantization NAS (§V, Eq. 6-8) and
+(b) feed the accelerator customization resource model (§VI).
+
+Baselines implemented for the Fig. 4 comparison:
+  * ``hikonv``       — Filter Packing only, no overpacking / separation
+                       (HiKonv's polynomial 1-D conv packing, ASP-DAC'22);
+  * ``xilinx``       — vendor INT8/INT4 style Kernel Packing only,
+                       no overpacking / separation / filter strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Mapping
+
+from .profiles import PROFILES, DSP48E2, MulProfile
+from .strategies import PackingConfig, all_placements, filter_placements, kernel_placements
+
+DEFAULT_BITS = tuple(range(2, 9))  # the paper's 2..8-bit search space
+
+
+def best_packing(
+    profile: MulProfile,
+    w_bits: int,
+    a_bits: int,
+    *,
+    kernel_len: int = 3,
+    seq_len: int = 32,
+    method: str = "mixq",
+) -> PackingConfig:
+    """Best placement for one bit-width combination under ``method``."""
+    if method == "mixq":
+        cands = all_placements(profile, w_bits, a_bits, kernel_len, seq_len)
+    elif method == "no_enhance":  # Mixed Packing without §IV-B enhancements
+        cands = all_placements(
+            profile, w_bits, a_bits, kernel_len, seq_len,
+            allow_overpack=False, allow_separation=False,
+        )
+    elif method == "hikonv":
+        cands = list(
+            filter_placements(profile, w_bits, a_bits, kernel_len, seq_len, allow_overpack=False)
+        ) or list(kernel_placements(profile, w_bits, a_bits, allow_overpack=False))
+    elif method == "xilinx":
+        cands = list(kernel_placements(profile, w_bits, a_bits, allow_overpack=False))
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    if not cands:
+        raise ValueError(f"no feasible packing for w{w_bits}a{a_bits} on {profile.name}")
+    return max(cands, key=lambda c: c.key)
+
+
+@dataclasses.dataclass
+class PackingLUT:
+    """T_mul / E_g lookup table for one conv-kernel geometry.
+
+    ``table[(w_bits, a_bits)]`` holds the winning :class:`PackingConfig`.
+    ``t_mul(w, a)`` is the value consumed by the NAS complexity loss and
+    the customization stage.
+    """
+
+    profile: str
+    kernel_len: int
+    seq_len: int
+    method: str
+    table: Mapping[tuple[int, int], PackingConfig]
+
+    def t_mul(self, w_bits: int, a_bits: int) -> float:
+        return self.table[(w_bits, a_bits)].t_mul
+
+    def e_g(self, w_bits: int, a_bits: int) -> int:
+        return self.table[(w_bits, a_bits)].e_g
+
+    def config(self, w_bits: int, a_bits: int) -> PackingConfig:
+        return self.table[(w_bits, a_bits)]
+
+    # -- serialization ------------------------------------------------------
+    def save(self, path: str | pathlib.Path) -> None:
+        payload = {
+            "profile": self.profile,
+            "kernel_len": self.kernel_len,
+            "seq_len": self.seq_len,
+            "method": self.method,
+            "table": {
+                f"{w},{a}": dataclasses.asdict(cfg) for (w, a), cfg in self.table.items()
+            },
+        }
+        pathlib.Path(path).write_text(json.dumps(payload, indent=1))
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "PackingLUT":
+        payload = json.loads(pathlib.Path(path).read_text())
+        table = {
+            tuple(map(int, key.split(","))): PackingConfig(**cfg)
+            for key, cfg in payload["table"].items()
+        }
+        return cls(
+            profile=payload["profile"],
+            kernel_len=payload["kernel_len"],
+            seq_len=payload["seq_len"],
+            method=payload["method"],
+            table=table,
+        )
+
+
+def build_lut(
+    profile: MulProfile = DSP48E2,
+    *,
+    kernel_len: int = 3,
+    seq_len: int = 32,
+    bits: tuple[int, ...] = DEFAULT_BITS,
+    method: str = "mixq",
+) -> PackingLUT:
+    table = {
+        (w, a): best_packing(
+            profile, w, a, kernel_len=kernel_len, seq_len=seq_len, method=method
+        )
+        for w in bits
+        for a in bits
+    }
+    return PackingLUT(
+        profile=profile.name, kernel_len=kernel_len, seq_len=seq_len, method=method, table=table
+    )
+
+
+def compare_luts(ours: PackingLUT, baseline: PackingLUT) -> dict:
+    """Fig. 4-style comparison: count cells where ours beats the baseline."""
+    better, equal, worse = 0, 0, 0
+    cells = {}
+    for key in ours.table:
+        o, b = ours.table[key].t_mul, baseline.table[key].t_mul
+        cells[f"{key[0]},{key[1]}"] = (o, b)
+        if o > b + 1e-9:
+            better += 1
+        elif o < b - 1e-9:
+            worse += 1
+        else:
+            equal += 1
+    return {"better": better, "equal": equal, "worse": worse, "cells": cells}
+
+
+def lut_overhead_estimate(cfg: PackingConfig) -> float:
+    """Extra LUT logic for decode/correction, for the resource model.
+
+    Overpacking correction needs one AND per product LSB, an XOR reduce
+    per summed segment, and one adder bit per corrected segment (Fig. 3);
+    empirically the paper reports ~16.4 LUTs per packed DSP on average.
+    """
+    if cfg.strategy == "kernel":
+        segments = cfg.n_w * cfg.n_a
+        products_per_seg = 1.0
+    else:
+        segments = cfg.n_w + cfg.n_a - 1
+        products_per_seg = min(cfg.n_w, cfg.n_a)
+    base = 2.0 * segments  # segment extraction / shift-add plumbing
+    if cfg.overlap:
+        base += segments * (1.0 + products_per_seg)  # AND/XOR tree + add
+    if cfg.separated:
+        base += 4.0  # recombination shift-add
+    return base * cfg.dsps
+
+
+def default_lut_cache(
+    cache_dir: str | pathlib.Path,
+    *,
+    profile: MulProfile = DSP48E2,
+    kernel_lens: tuple[int, ...] = (1, 3, 5),
+    seq_len: int = 32,
+    method: str = "mixq",
+) -> dict[int, PackingLUT]:
+    """Build (or load) the per-kernel-size LUTs used across the framework."""
+    cache_dir = pathlib.Path(cache_dir)
+    cache_dir.mkdir(parents=True, exist_ok=True)
+    out = {}
+    for k in kernel_lens:
+        path = cache_dir / f"lut_{profile.name}_{method}_k{k}_n{seq_len}.json"
+        if path.exists():
+            out[k] = PackingLUT.load(path)
+        else:
+            out[k] = build_lut(profile, kernel_len=k, seq_len=seq_len, method=method)
+            out[k].save(path)
+    return out

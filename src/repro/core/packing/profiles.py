@@ -1,0 +1,56 @@
+"""Hardware multiplier profiles for the packing optimizer.
+
+The paper targets the Xilinx DSP48E2 (27x18 two's complement multiplier).
+On TPU there is no DSP fabric; the analogous fixed-width primitives are
+
+  * the VPU int32 multiply lane  -> modeled as a 15x15 unsigned multiplier
+    so every packed product sum stays strictly below 2**31 and the Pallas
+    kernels can use plain int32 arithmetic, and
+  * the MXU int8 lane            -> modeled as an 8x8 multiplier (the
+    classic "two int4 ops per int8 lane" trick is the TPU twin of the
+    Xilinx INT4 DSP packing).
+
+The packing *algebra* (segment placement, guard bits, overpacking
+correction) is identical across profiles; only the port widths differ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class MulProfile:
+    """A fixed-width hardware multiplier with two input ports.
+
+    ``port_big``/``port_small`` are usable unsigned bit-widths.  For the
+    DSP48E2 the 27x18 signed multiplier gives 26x17 unsigned capacity; the
+    paper's equations treat the ports at their nominal widths with
+    unsigned operands (Fig. 2), so we keep the nominal widths and treat
+    operands as unsigned (asymmetric / zero-point quantization upstream).
+    """
+
+    name: str
+    port_big: int
+    port_small: int
+    # Cost (relative energy/area) of one multiplier invocation; used by the
+    # customization resource model, not by the packing search itself.
+    unit_cost: float = 1.0
+
+    @property
+    def ports(self) -> tuple[int, int]:
+        return (self.port_big, self.port_small)
+
+
+# The paper's primitive: Xilinx UltraScale DSP48E2, 27x18 multiplier.
+DSP48E2 = MulProfile(name="dsp48e2", port_big=27, port_small=18)
+
+# TPU VPU int32 lane modeled as 15x15 so that the full packed product
+# (sum of segment-aligned partial products) is < 2**30 and int32-safe
+# inside Pallas kernels (no int64 on TPU vector lanes).
+TPU_VPU15 = MulProfile(name="tpu_vpu15", port_big=15, port_small=15)
+
+# TPU MXU int8 lane (8x8).  Packing capacity is small (2x int4, 4x int2)
+# but it is the highest-throughput primitive on the chip.
+TPU_MXU8 = MulProfile(name="tpu_mxu8", port_big=8, port_small=8)
+
+PROFILES = {p.name: p for p in (DSP48E2, TPU_VPU15, TPU_MXU8)}

@@ -1,0 +1,76 @@
+"""Fake-quantization (QAT) primitives used by the NAS super-net and the
+fixed mixed-precision models.
+
+Weights follow the DoReFa transform (tanh-normalized, symmetric levels);
+activations are clipped to [0, 1] (post-ReLU ranges) and quantized to
+unsigned levels.  Straight-through estimators (STE) keep everything
+differentiable.  For packed integer inference the same quantizers expose
+their integer level / scale / zero-point decomposition so the Pallas
+packing kernels can consume genuinely unsigned operands (the paper's
+Fig. 2 assumption).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round() with identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def quantize_unit(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Uniformly quantize values in [0, 1] to 2**bits levels (STE)."""
+    n = (1 << bits) - 1
+    return ste_round(x * n) / n
+
+
+def fake_quant_weight(w: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """DoReFa-style weight quantizer: output in [-1, 1], 2**bits levels."""
+    if bits >= 32:
+        return w
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5  # -> [0, 1]
+    return 2.0 * quantize_unit(t, bits) - 1.0
+
+
+def fake_quant_act(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Activation quantizer: clip to [0, 1] then quantize (STE)."""
+    if bits >= 32:
+        return x
+    return quantize_unit(jnp.clip(x, 0.0, 1.0), bits)
+
+
+def weight_to_int_levels(w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, float, int]:
+    """Decompose a trained weight tensor into unsigned integer levels.
+
+    Returns (levels uint, scale, zero_point) with
+        w_q = scale * (levels - zero_point)
+    matching :func:`fake_quant_weight` exactly, so packed integer compute
+    (levels are unsigned -> packable per Fig. 2) reproduces the QAT
+    forward bit-for-bit up to float rounding of the final rescale.
+    """
+    n = (1 << bits) - 1
+    t = jnp.tanh(w)
+    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    levels = jnp.round(t * n).astype(jnp.int32)  # in [0, n]
+    # w_q = 2*levels/n - 1 = (2/n) * (levels - n/2)
+    return levels, 2.0 / n, n / 2.0
+
+
+def act_to_int_levels(x: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, float]:
+    """Unsigned activation levels: x_q = scale * levels, levels in [0, 2^b-1]."""
+    n = (1 << bits) - 1
+    levels = jnp.round(jnp.clip(x, 0.0, 1.0) * n).astype(jnp.int32)
+    return levels, 1.0 / n
+
+
+def int_conv_equivalence(w_levels, a_levels, w_scale, w_zero, a_scale):
+    """Reference identity used by tests: float conv of fake-quant tensors ==
+    scale-folded integer conv of levels.
+
+        (s_w (W - z_w)) * (s_a A) = s_w s_a (W*A - z_w * sum(A))
+    """
+    wa = w_levels.astype(jnp.int32), a_levels.astype(jnp.int32)
+    return wa, w_scale * a_scale, w_zero

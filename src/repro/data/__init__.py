@@ -1,0 +1,3 @@
+from .synthetic import batches, classification_set, detection_set
+
+__all__ = ["batches", "classification_set", "detection_set"]

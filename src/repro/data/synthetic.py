@@ -1,0 +1,54 @@
+"""Deterministic synthetic datasets.
+
+DAC-SDC and CIFAR-10 are not available offline; these stand-ins preserve
+the *shape* of the learning problems (single-object detection scored by
+IOU; 10-way classification scored by top-1) so NAS/QAT trends are
+meaningful, and they are fully deterministic given a seed.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def classification_set(seed: int, n: int, hw: int = 32, classes: int = 10):
+    """Class-conditional low-frequency templates + noise, labels 0..C-1."""
+    rng = np.random.default_rng(seed)
+    base = rng.normal(size=(classes, 4, 4, 3)).astype(np.float32)
+    templates = jax.image.resize(jnp.asarray(base), (classes, hw, hw, 3), "bilinear")
+    labels = rng.integers(0, classes, n).astype(np.int32)
+    noise = rng.normal(scale=0.6, size=(n, hw, hw, 3)).astype(np.float32)
+    images = np.asarray(templates)[labels] + noise
+    return jnp.asarray(images), jnp.asarray(labels)
+
+
+def detection_set(seed: int, n: int, hw: tuple[int, int] = (32, 64)):
+    """One bright rectangle on textured noise; label = (cx, cy, w, h) in [0,1]."""
+    rng = np.random.default_rng(seed)
+    H, W = hw
+    images = rng.normal(scale=0.35, size=(n, H, W, 3)).astype(np.float32)
+    boxes = np.zeros((n, 4), np.float32)
+    for i in range(n):
+        bw = rng.uniform(0.15, 0.5)
+        bh = rng.uniform(0.15, 0.5)
+        cx = rng.uniform(bw / 2, 1 - bw / 2)
+        cy = rng.uniform(bh / 2, 1 - bh / 2)
+        x0, x1 = int((cx - bw / 2) * W), int((cx + bw / 2) * W)
+        y0, y1 = int((cy - bh / 2) * H), int((cy + bh / 2) * H)
+        color = rng.uniform(0.8, 1.4, size=3)
+        images[i, y0:y1, x0:x1] += color
+        boxes[i] = (cx, cy, bw, bh)
+    return jnp.asarray(images), jnp.asarray(boxes)
+
+
+def batches(data, labels, batch: int, *, seed: int = 0, epochs: int = 1) -> Iterator[tuple]:
+    n = data.shape[0]
+    rng = np.random.default_rng(seed)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for i in range(0, n - batch + 1, batch):
+            idx = order[i : i + batch]
+            yield data[idx], labels[idx]

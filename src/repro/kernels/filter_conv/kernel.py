@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: Filter-Packing 1-D convolution (polynomial method).
+
+TPU adaptation of the paper's Filter Packing (Eq. 2) on int32 VPU lanes
+(15x15 modeled multiplier).  A k_p-tap filter chunk and an n_p-element
+sequence chunk are packed at ``stride``-bit segments; ONE integer
+multiply produces k_p+n_p-1 convolution coefficients.  Sub-task division
+(ceil(K/k_p) x ceil(N/n_p)) recovers arbitrarily long convolutions, and
+input-channel accumulation happens pre-decode in chunks of
+``acc_chunk`` products when the guard bits allow (Eq. 4's E_g), else
+post-decode.
+
+Container-safety: the config chooser (ops.choose_filter_config) enforces
+  w + a + (k_p + n_p - 2) * stride + log2(acc_chunk) <= 31
+so the packed accumulator never overflows an int32 lane.
+
+Blocking: one batch tile per grid step; the whole (C, N) slice of that
+tile sits in VMEM (sequence tiles of LM workloads are padded to lane
+multiples by the wrapper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(
+    s_ref,  # [bb, C, Npad] int32 sequence levels
+    fp_ref,  # [C, n_fc] int32 packed filter chunks
+    o_ref,  # [bb, Nout] int32 full convolution, summed over C
+    *,
+    k_p: int,
+    n_p: int,
+    stride: int,
+    acc_chunk: int,
+    k_len: int,
+    n_len: int,
+):
+    bb, C, n_pad = s_ref.shape
+    n_fc = fp_ref.shape[1]
+    n_sc = n_pad // n_p
+    nseg = k_p + n_p - 1
+    mask = (1 << stride) - 1
+    out = jnp.zeros(o_ref.shape, jnp.int32)
+    # pack sequence chunks: s_pack[b, c, v] = sum_j s[b, c, v*n_p + j] << j*stride
+    s = s_ref[...]
+    s_chunks = s.reshape(bb, C, n_sc, n_p)
+    shifts = (jnp.arange(n_p, dtype=jnp.int32) * stride)[None, None, None, :]
+    s_pack = jnp.sum(s_chunks << shifts, axis=-1)  # [bb, C, n_sc]
+    fp = fp_ref[...]
+    for u in range(n_fc):
+        for v in range(n_sc):
+            off = u * k_p + v * n_p
+            dec = jnp.zeros((bb, nseg), jnp.int32)
+            for c0 in range(0, C, acc_chunk):
+                c1 = min(c0 + acc_chunk, C)
+                # pre-decode accumulation over the channel chunk (E_g headroom)
+                packed = jnp.sum(
+                    s_pack[:, c0:c1, v] * fp[None, c0:c1, u], axis=1
+                )  # [bb]
+                for m in range(nseg):
+                    seg = jax.lax.shift_right_logical(packed, m * stride) & mask
+                    dec = dec.at[:, m].add(seg)
+            width = min(nseg, o_ref.shape[1] - off)
+            if width > 0:
+                out = jax.lax.dynamic_update_slice(
+                    out,
+                    jax.lax.dynamic_slice(out, (0, off), (bb, width)) + dec[:, :width],
+                    (0, off),
+                )
+    o_ref[...] = out
+
+
+def filter_conv_raw(
+    s_lvl: jax.Array,  # [B, C, Npad] int32 (padded to a multiple of n_p)
+    f_packed: jax.Array,  # [C, n_fc] int32
+    *,
+    k_p: int,
+    n_p: int,
+    stride: int,
+    acc_chunk: int,
+    k_len: int,
+    n_len: int,
+    block_b: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Full convolution summed over channels: [B, n_len + k_len - 1] int32."""
+    b, c, n_pad = s_lvl.shape
+    bb = min(block_b, b)
+    grid = (-(-b // bb),)
+    n_out = n_len + k_len - 1
+    kernel = functools.partial(
+        _kernel, k_p=k_p, n_p=n_p, stride=stride, acc_chunk=acc_chunk, k_len=k_len, n_len=n_len
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, c, n_pad), lambda i: (i, 0, 0)),
+            pl.BlockSpec((c, f_packed.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0] * bb, n_out), jnp.int32),
+        interpret=interpret,
+    )(s_lvl, f_packed)[:b]

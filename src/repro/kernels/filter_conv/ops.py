@@ -1,0 +1,86 @@
+"""Jitted public wrapper: quantized multi-channel 1-D convolution via
+Filter Packing, with int32-container-safe configuration choice.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import TPU_VPU15, filter_placements
+
+from . import ref
+from .kernel import filter_conv_raw
+
+
+@functools.lru_cache(maxsize=None)
+def choose_filter_config(w_bits: int, a_bits: int, k_len: int):
+    """Best no-overpack filter placement whose packed accumulator fits int32.
+
+    Maximizes t_mul * min(channel-chunk, 4) so a little pre-decode
+    accumulation headroom is preferred over raw density when available.
+    """
+    best = None
+    for cfg in filter_placements(
+        TPU_VPU15, w_bits, a_bits, k_len, 1 << 30, allow_overpack=False
+    ):
+        nseg = cfg.n_w + cfg.n_a - 1
+        guard = cfg.stride - (w_bits + a_bits) - _ceil_log2(min(cfg.n_w, cfg.n_a))
+        container = w_bits + a_bits + (nseg - 1) * cfg.stride
+        if container > 31 or guard < 0:
+            continue
+        acc = 1 << min(guard, 31 - container)
+        score = (cfg.t_mul * min(acc, 4), cfg.t_mul, acc)
+        if best is None or score > best[0]:
+            best = (score, cfg, acc)
+    if best is None:
+        return None
+    _, cfg, acc = best
+    return {
+        "k_p": cfg.n_w,
+        "n_p": cfg.n_a,
+        "stride": cfg.stride,
+        "acc_chunk": int(max(1, acc)),
+    }
+
+
+def _ceil_log2(x: int) -> int:
+    return math.ceil(math.log2(x)) if x > 1 else 0
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret"))
+def packed_conv1d(
+    s_lvl: jax.Array,  # [B, C, N] int32 unsigned levels (< 2**a_bits)
+    f_lvl: jax.Array,  # [C, K]    int32 unsigned levels (< 2**w_bits)
+    *,
+    w_bits: int,
+    a_bits: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Full convolution summed over channels: [B, N+K-1] int32.
+
+    Bit-exact vs :func:`ref.conv_full_levels`; falls back to the jnp path
+    when no int32-safe placement exists for (w_bits, a_bits).
+    """
+    b, c, n = s_lvl.shape
+    k = f_lvl.shape[1]
+    cfg = choose_filter_config(w_bits, a_bits, k)
+    if cfg is None or cfg["k_p"] * cfg["n_p"] <= 1:
+        return ref.conv_full_levels(f_lvl, s_lvl)
+    n_p = cfg["n_p"]
+    n_pad = -(-n // n_p) * n_p
+    s = jnp.pad(s_lvl, ((0, 0), (0, 0), (0, n_pad - n))).astype(jnp.int32)
+    fp = ref.pack_filter(f_lvl.astype(jnp.int32), cfg["k_p"], cfg["stride"])
+    return filter_conv_raw(
+        s,
+        fp,
+        k_p=cfg["k_p"],
+        n_p=n_p,
+        stride=cfg["stride"],
+        acc_chunk=cfg["acc_chunk"],
+        k_len=k,
+        n_len=n,
+        interpret=interpret,
+    )

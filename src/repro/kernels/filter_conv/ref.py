@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the filter-packing convolution kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_filter(f_lvl: jnp.ndarray, k_p: int, stride: int) -> jnp.ndarray:
+    """[C, K] int32 levels -> [C, ceil(K/k_p)] packed filter chunks."""
+    c, k = f_lvl.shape
+    n_fc = -(-k // k_p)
+    pad = n_fc * k_p - k
+    f = jnp.pad(f_lvl, ((0, 0), (0, pad)))
+    chunks = f.reshape(c, n_fc, k_p)
+    shifts = (jnp.arange(k_p, dtype=jnp.int32) * stride)[None, None, :]
+    return jnp.sum(chunks << shifts, axis=-1).astype(jnp.int32)
+
+
+def conv_full_levels(f_lvl: jnp.ndarray, s_lvl: jnp.ndarray) -> jnp.ndarray:
+    """Ground truth: sum_c full_convolution(f[c], s[b, c]) -> [B, N+K-1]."""
+
+    def one(fc, sc):
+        return jnp.convolve(sc.astype(jnp.int32), fc.astype(jnp.int32))
+
+    per_channel = jax.vmap(jax.vmap(one, in_axes=(0, 0)), in_axes=(None, 0))
+    return jnp.sum(per_channel(f_lvl, s_lvl), axis=1)

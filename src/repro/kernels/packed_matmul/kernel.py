@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: Kernel-Packing matmul on int32 VPU lanes.
+
+TPU adaptation of the paper's Kernel Packing (Eq. 1): the DSP48E2 wide
+multiplier becomes the VPU's int32 multiply lane, modeled as a 15x15
+unsigned multiplier so every packed partial product stays < 2**30.
+``n_seg`` weight levels from adjacent output channels are packed at
+``stride``-bit segments into one int32; one integer multiply by an
+activation level then computes ``n_seg`` products simultaneously, and a
+segment sum stays decodable for ``acc_chunk = 2**e_g`` accumulations
+(the guard-bit headroom of Eq. 4), after which segments are peeled into
+int32 accumulators.
+
+Blocking: [bm, K] x [K, bn_packed] tiles in VMEM; the M/N grid is
+hardware-aligned (bn_packed * n_seg is a multiple of the 128-lane VPU
+width whenever the caller's N is).  The K loop lives inside the kernel
+so the packed->decoded accumulation cadence (every ``acc_chunk`` steps)
+never leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, wp_ref, o_ref, *, n_seg: int, stride: int, acc_chunk: int, k_total: int):
+    bm = a_ref.shape[0]
+    bnp = wp_ref.shape[1]
+    mask = (1 << stride) - 1
+    acc = jnp.zeros((n_seg, bm, bnp), jnp.int32)
+    n_chunks = -(-k_total // acc_chunk)
+    for c in range(n_chunks):
+        k0 = c * acc_chunk
+        k1 = min(k0 + acc_chunk, k_total)
+        # packed partial dot: every element-wise product carries n_seg
+        # low-bit products in disjoint bit segments; the dot's additions
+        # stay segment-aligned thanks to the guard-bit headroom.
+        part = jax.lax.dot_general(
+            a_ref[:, k0:k1],
+            wp_ref[k0:k1, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        for d in range(n_seg):
+            seg = jax.lax.shift_right_logical(part, d * stride) & mask
+            acc = acc.at[d].add(seg)
+    # interleave segments back into channel order: out[:, j*n_seg + d]
+    out = jnp.stack([acc[d] for d in range(n_seg)], axis=-1).reshape(bm, bnp * n_seg)
+    o_ref[...] = out
+
+
+def packed_matmul_raw(
+    a_lvl: jax.Array,  # [M, K] int32 activation levels (unsigned, < 2**a_bits)
+    w_packed: jax.Array,  # [K, N // n_seg] int32 packed weight levels
+    *,
+    n_seg: int,
+    stride: int,
+    acc_chunk: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Integer matmul of levels; returns [M, N] int32 accumulator."""
+    m, k = a_lvl.shape
+    _, np_ = w_packed.shape
+    bm = min(block_m, m)
+    bnp = min(block_n // n_seg if block_n >= n_seg else 1, np_)
+    grid = (-(-m // bm), -(-np_ // bnp))
+    kernel = functools.partial(
+        _kernel, n_seg=n_seg, stride=stride, acc_chunk=acc_chunk, k_total=k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bnp), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bnp * n_seg), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0] * bm, grid[1] * bnp * n_seg), jnp.int32),
+        interpret=interpret,
+    )(a_lvl, w_packed)[:m, : np_ * n_seg]

@@ -1,0 +1,78 @@
+"""Jitted public wrapper: quantized dense layer via Kernel-Packing matmul.
+
+Chooses the packing configuration from the TPU VPU profile LUT (no
+overpacking inside the hardware path — the guard-bit headroom is spent
+on in-segment accumulation instead, ``acc_chunk = 2**e_g``), packs the
+weight levels once, and runs the Pallas kernel.  Falls back to n_seg=1
+when the bit-width combination has no multi-segment placement.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import TPU_VPU15, kernel_placements
+from repro.core.quant import act_to_int_levels, weight_to_int_levels
+
+from . import ref
+from .kernel import packed_matmul_raw
+
+
+@functools.lru_cache(maxsize=None)
+def choose_config(w_bits: int, a_bits: int, min_chunk: int = 4):
+    """Best no-overpack kernel placement with weights on the packed port
+    and >= min_chunk accumulation headroom."""
+    best = None
+    for cfg in kernel_placements(TPU_VPU15, w_bits, a_bits, allow_overpack=False):
+        if cfg.n_a != 1:
+            continue  # activations stay scalar per lane; weights pack
+        headroom = 1 << max(0, cfg.stride - (w_bits + a_bits))
+        if headroom < min_chunk and cfg.n_w > 1:
+            continue
+        score = (cfg.n_w, headroom)
+        if best is None or score > best[0]:
+            best = (score, cfg, headroom)
+    if best is None or best[1].n_w == 1:
+        return None  # no profitable packing; caller uses plain int path
+    _, cfg, headroom = best
+    return {"n_seg": cfg.n_w, "stride": cfg.stride, "acc_chunk": int(headroom)}
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret"))
+def packed_dense(
+    x: jax.Array,  # [M, Kdim] float activations (clipped to [0,1] upstream)
+    w: jax.Array,  # [Kdim, N] float weights
+    *,
+    w_bits: int,
+    a_bits: int,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantized dense layer, bit-exact vs the fake-quant reference."""
+    cfg = choose_config(w_bits, a_bits)
+    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
+    a_lvl, a_scale = act_to_int_levels(x, a_bits)
+    n = w.shape[1]
+    if cfg is None or n % cfg["n_seg"] != 0:
+        acc = ref.matmul_levels(a_lvl, w_lvl)
+    else:
+        wp = ref.pack_weights(w_lvl, cfg["n_seg"], cfg["stride"])
+        acc = packed_matmul_raw(
+            a_lvl.astype(jnp.int32),
+            wp,
+            n_seg=cfg["n_seg"],
+            stride=cfg["stride"],
+            acc_chunk=cfg["acc_chunk"],
+            interpret=interpret,
+        )
+    a_sum = jnp.sum(a_lvl, axis=1)
+    return ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
+
+
+def packed_dense_reference(x, w, *, w_bits, a_bits):
+    """Oracle: same math with a plain jnp integer matmul."""
+    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
+    a_lvl, a_scale = act_to_int_levels(x, a_bits)
+    acc = ref.matmul_levels(a_lvl, w_lvl)
+    return ref.dequantize(acc, jnp.sum(a_lvl, axis=1), w_scale, w_zero, a_scale)

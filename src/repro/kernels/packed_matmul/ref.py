@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the packed matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_weights(w_lvl: jnp.ndarray, n_seg: int, stride: int) -> jnp.ndarray:
+    """[K, N] int32 levels -> [K, N // n_seg] packed (channel d at bit d*stride)."""
+    k, n = w_lvl.shape
+    assert n % n_seg == 0, "N must be divisible by the packing factor"
+    grouped = w_lvl.reshape(k, n // n_seg, n_seg)
+    shifts = jnp.arange(n_seg, dtype=jnp.int32) * stride
+    return jnp.sum(grouped << shifts[None, None, :], axis=-1).astype(jnp.int32)
+
+
+def matmul_levels(a_lvl: jnp.ndarray, w_lvl: jnp.ndarray) -> jnp.ndarray:
+    """Ground-truth integer matmul of quantization levels."""
+    return jnp.dot(
+        a_lvl.astype(jnp.int32), w_lvl.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+
+
+def dequantize(acc: jnp.ndarray, a_sum: jnp.ndarray, w_scale, w_zero, a_scale) -> jnp.ndarray:
+    """Fold zero-point + scales: (s_w (W - z_w))^T (s_a A) per output.
+
+    acc[m, n] = sum_k A[m, k] W[k, n];  a_sum[m] = sum_k A[m, k].
+    """
+    return (w_scale * a_scale) * (acc.astype(jnp.float32) - w_zero * a_sum[:, None].astype(jnp.float32))

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: int8 quantized matmul (the MXU-native serve path).
+
+This is the production inference kernel for NAS-selected layers once
+their bit-widths are rounded up to the MXU's native int8 lane: weights
+are stored as int8 levels with per-output-channel scales, activations as
+int8 with one scale.  The MXU consumes int8 x int8 -> int32 directly;
+blocks are 128-aligned to the MXU systolic dimensions, the K reduction
+runs inside the kernel over VMEM-resident [bm, K] x [K, bn] tiles in
+block_k steps, and the float rescale happens once per output tile.
+
+(The sub-4-bit segment-packing path lives in kernels/packed_matmul;
+this kernel is the >=4-bit fast path the customization stage assigns to
+MXU 'DSP-equivalents'.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, w_ref, ws_ref, o_ref, *, block_k: int, k_total: int):
+    bm = a_ref.shape[0]
+    bn = w_ref.shape[1]
+    acc = jnp.zeros((bm, bn), jnp.int32)
+    for k0 in range(0, k_total, block_k):
+        k1 = min(k0 + block_k, k_total)
+        acc += jax.lax.dot_general(
+            a_ref[:, k0:k1],
+            w_ref[k0:k1, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+    o_ref[...] = acc.astype(jnp.float32) * ws_ref[...]
+
+
+def quant_matmul_raw(
+    a_i8: jax.Array,  # [M, K] int8 levels
+    w_i8: jax.Array,  # [K, N] int8 levels
+    w_scale: jax.Array,  # [1, N] float32 combined (w x a) scales
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    m, k = a_i8.shape
+    _, n = w_i8.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    grid = (-(-m // bm), -(-n // bn))
+    kernel = functools.partial(_kernel, block_k=min(block_k, k), k_total=k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0] * bm, grid[1] * bn), jnp.float32),
+        interpret=interpret,
+    )(a_i8, w_i8, w_scale)[:m, :n]

@@ -1,0 +1,24 @@
+"""Jitted public wrapper: float-in/float-out int8 matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import quant_matmul_raw
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_dense(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """W8A8 symmetric quantized dense layer via the Pallas MXU kernel."""
+    w_i8, w_scale = ref.quantize_symmetric(w)
+    a_i8, a_scale = ref.quantize_act_symmetric(x)
+    return quant_matmul_raw(a_i8, w_i8, w_scale * a_scale, interpret=interpret)
+
+
+def quant_dense_reference(x: jax.Array, w: jax.Array) -> jax.Array:
+    w_i8, w_scale = ref.quantize_symmetric(w)
+    a_i8, a_scale = ref.quantize_act_symmetric(x)
+    return ref.quant_matmul(a_i8, w_i8, w_scale, a_scale)

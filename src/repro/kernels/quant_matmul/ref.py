@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the int8 quantized matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_symmetric(w: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric quantization: w ~ levels * scale."""
+    n = (1 << (bits - 1)) - 1
+    scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / n + 1e-12
+    levels = jnp.clip(jnp.round(w / scale), -n, n).astype(jnp.int8)
+    return levels, scale.astype(jnp.float32)
+
+
+def quantize_act_symmetric(x: jnp.ndarray, bits: int = 8) -> tuple[jnp.ndarray, float]:
+    n = (1 << (bits - 1)) - 1
+    scale = jnp.max(jnp.abs(x)) / n + 1e-12
+    levels = jnp.clip(jnp.round(x / scale), -n, n).astype(jnp.int8)
+    return levels, scale
+
+
+def quant_matmul(a_i8: jnp.ndarray, w_i8: jnp.ndarray, w_scale: jnp.ndarray, a_scale) -> jnp.ndarray:
+    acc = jnp.dot(
+        a_i8.astype(jnp.int32), w_i8.astype(jnp.int32), preferred_element_type=jnp.int32
+    )
+    # single fused rescale (matches the kernel's combined-scale multiply
+    # bit-for-bit; two sequential float multiplies differ by 1 ulp)
+    return acc.astype(jnp.float32) * (w_scale * a_scale)

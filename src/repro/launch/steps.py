@@ -1,0 +1,251 @@
+"""Train / serve step builders with production sharding.
+
+``make_train_step`` returns a jit-able (params, opt, batch) -> ... with
+microbatched gradient accumulation (activation-memory bound), optional
+gradient compression, and ZeRO-style parameter sharding via the logical
+rules.  ``make_serve_step`` returns the one-token decode step.
+
+``param_shardings`` maps every parameter to a PartitionSpec by tree
+path; ``input_specs`` produces ShapeDtypeStruct stand-ins (+ specs) for
+every (arch x shape) cell so the multi-pod dry-run never allocates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import transformer as T
+from repro.optim import AdamW
+from repro.parallel.sharding import ShardingRules, use_rules
+
+
+# ---------------------------------------------------------------------------
+# parameter shardings (path-based rules)
+# ---------------------------------------------------------------------------
+
+
+from repro.parallel.sharding import param_shardings as _param_shardings
+from repro.parallel.sharding import spec_for_param_path as _spec_for_path_impl
+
+
+def _spec_for_path(path, rules, ndim):
+    return _spec_for_path_impl(path, rules, ndim)
+
+
+def param_shardings(params_shape: Any, rules: ShardingRules) -> Any:
+    return _param_shardings(params_shape, rules)
+
+
+def param_shardings_opt(opt_shape: Any, p_specs: Any) -> Any:
+    """AdamWState(step, mu, nu): moments shard exactly like the params."""
+    from repro.optim import AdamWState
+
+    return AdamWState(step=P(), mu=p_specs, nu=p_specs)
+
+
+def cache_shardings(cache_shape: Any, cfg: T.ModelConfig, rules: ShardingRules) -> Any:
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        nd = len(leaf.shape)
+        if pstr in ("k_scale", "v_scale"):  # [L, B, T, 1]
+            if cfg.cache_shard == "seq_mp":
+                return P(None, rules.batch, rules.seq_mp, None)
+            return P(None, rules.batch, None, None)
+        if pstr in ("k", "v", "enc_k", "enc_v"):  # [L, B, T, G*hd] flat
+            if cfg.cache_shard == "seq_mp":
+                return P(None, rules.batch, rules.seq_mp, None)
+            return P(None, rules.batch, None, rules.kv_heads)
+        if pstr == "ssm":  # [L, B, H, N, P] -> shard the state dim N
+            return P(None, rules.batch, None, rules.ff, None)
+        if pstr == "conv":  # [L, B, K-1, C]
+            return P(None, rules.batch, None, rules.ff)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    n_micro: int = 1
+    lr: float = 3e-4
+    grad_clip: float = 1.0
+    compress_grads: str = "none"  # none | int8 | topk
+    # "bf16": cast params to bf16 at the top of the forward so ZeRO
+    # all-gathers (and grad reduces) move 2-byte payloads; the optimizer
+    # keeps f32 masters.  "f32": gather in full precision (baseline).
+    param_dtype: str = "f32"
+    # "bf16": store Adam moments in bf16 (halves optimizer HBM)
+    moment_dtype: str = "f32"
+
+
+def make_train_step(
+    cfg: T.ModelConfig,
+    rules: ShardingRules,
+    step_cfg: TrainStepConfig = TrainStepConfig(),
+) -> Callable:
+    import jax.numpy as _jnp
+
+    opt = AdamW(
+        lr=step_cfg.lr,
+        grad_clip_norm=step_cfg.grad_clip,
+        weight_decay=0.01,
+        moment_dtype=(_jnp.bfloat16 if step_cfg.moment_dtype == "bf16" else None),
+    )
+
+    def train_step(params, opt_state, batch):
+        with use_rules(rules):
+            n_micro = step_cfg.n_micro
+
+            def loss_fn(p, micro):
+                if step_cfg.param_dtype == "bf16":
+                    p = jax.tree.map(
+                        lambda a: a.astype(jnp.bfloat16)
+                        if a.dtype == jnp.float32
+                        else a,
+                        p,
+                    )
+                return T.forward_train(p, cfg, micro)
+
+            if n_micro == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            else:
+                micro_batches = jax.tree.map(
+                    lambda a: a.reshape((n_micro, a.shape[0] // n_micro) + a.shape[1:]),
+                    batch,
+                )
+
+                def body(acc, micro):
+                    loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+                    return jax.tree.map(jnp.add, acc, grads), loss
+
+                zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+                grads, losses = jax.lax.scan(body, zeros, micro_batches)
+                grads = jax.tree.map(lambda g: g / n_micro, grads)
+                loss = jnp.mean(losses)
+
+            if step_cfg.compress_grads != "none":
+                from repro.optim.compression import compress_tree
+
+                grads = compress_tree(grads, method=step_cfg.compress_grads)
+
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return loss, new_params, new_opt
+
+    train_step.optimizer = opt  # exposed for init
+    return train_step
+
+
+def make_serve_step(cfg: T.ModelConfig, rules: ShardingRules) -> Callable:
+    def serve_step(params, cache, tokens, pos):
+        with use_rules(rules):
+            return T.forward_decode(params, cfg, cache, tokens, pos)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: T.ModelConfig, rules: ShardingRules) -> Callable:
+    """Inference-prefill: forward pass producing last-position logits."""
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            loss = T.forward_train(params, cfg, batch)
+            return loss  # CE over the prompt == teacher-forced prefill pass
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins, never allocated)
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_input_specs(cfg: T.ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.use_mrope:
+        batch["positions"] = _sds((B, S, 3), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = _sds((B, max(1, S // 2), cfg.d_model), jnp.float32)
+    return batch
+
+
+def batch_shardings(cfg: T.ModelConfig, rules: ShardingRules) -> Any:
+    spec = {"tokens": P(rules.batch, None), "labels": P(rules.batch, None)}
+    if cfg.use_mrope:
+        spec["positions"] = P(rules.batch, None, None)
+    if cfg.family == "encdec":
+        spec["enc_embeds"] = P(rules.batch, None, None)
+    return spec
+
+
+def params_spec_tree(cfg: T.ModelConfig, key=None):
+    """Shape-only params via eval_shape (no allocation)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: T.init_params(k, cfg), key)
+
+
+def opt_state_spec_tree(opt: AdamW, params_shape):
+    return jax.eval_shape(opt.init, params_shape)
+
+
+def cache_spec_tree(cfg: T.ModelConfig, batch: int, max_len: int, enc_len=None):
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, batch, max_len, enc_len=enc_len)
+    )
+
+
+_INT8_LEAF_RE = re.compile(
+    r"((wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$)|((w_up|w_gate|w_down)$)"
+)
+
+
+def int8_serving_transform(params_shape: Any, p_specs: Any):
+    """Mixed-precision serving (the paper's technique on the LM path):
+    matmul weights become int8 levels + per-out-channel f32 scales.
+
+    Returns (new shape tree, new spec tree); non-matmul leaves unchanged.
+    """
+    import jax.numpy as jnp
+
+    def one(path, leaf, spec):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if not _INT8_LEAF_RE.search(pstr) or leaf.ndim < 2:
+            return leaf, spec
+        scale_shape = leaf.shape[:-2] + (1,) + leaf.shape[-1:]
+        scale_spec = P(*spec[:-2], None, spec[-1]) if len(spec) == leaf.ndim else P()
+        new_leaf = {
+            "levels": jax.ShapeDtypeStruct(leaf.shape, jnp.int8),
+            "scale": jax.ShapeDtypeStruct(scale_shape, jnp.float32),
+        }
+        new_spec = {"levels": spec, "scale": scale_spec}
+        return new_leaf, new_spec
+
+    flat_l, tree = jax.tree_util.tree_flatten_with_path(params_shape)
+    flat_s = jax.tree_util.tree_leaves(p_specs)
+    new_l, new_s = [], []
+    for (path, leaf), spec in zip(flat_l, flat_s):
+        a, b = one(path, leaf, spec)
+        new_l.append(a)
+        new_s.append(b)
+    return (
+        jax.tree_util.tree_unflatten(tree, new_l),
+        jax.tree_util.tree_unflatten(tree, new_s),
+    )

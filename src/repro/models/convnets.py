@@ -1,0 +1,194 @@
+"""The paper's evaluation convnets (UltraNet / SkyNet / VGG-Tiny) as
+mixed-precision-first JAX models.
+
+Every conv layer carries an explicit (w_bits, a_bits) pair; the same
+``apply`` path serves the fixed-precision models, the QAT fine-tune, and
+(through composite quantizers passed in by the NAS super-net) the
+differentiable bit-width search.  BatchNorm is modeled folded
+(per-channel scale+bias), which is how these DAC-SDC designs deploy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import fake_quant_act, fake_quant_weight
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One pipeline stage: conv (+folded BN, ReLU) with optional pooling."""
+
+    cin: int
+    cout: int
+    kernel: int = 3
+    stride: int = 1
+    pool: int = 1  # max-pool window after the conv (1 = none)
+    depthwise: bool = False
+    act: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvNetSpec:
+    name: str
+    in_hw: tuple[int, int]
+    in_ch: int
+    layers: tuple[ConvSpec, ...]
+    head: str  # "classify" (logits) or "detect" (4 box coords via grid head)
+    num_out: int
+
+    def op_mul(self, idx: int) -> int:
+        """MAC count of layer ``idx`` (drives Eq. 6's Op_mul^l)."""
+        h, w = self.in_hw
+        for i, l in enumerate(self.layers[: idx + 1]):
+            h, w = h // l.stride, w // l.stride
+            if i < idx:
+                h, w = h // l.pool, w // l.pool
+        l = self.layers[idx]
+        k2 = l.kernel * l.kernel
+        cin = 1 if l.depthwise else l.cin
+        return h * w * k2 * cin * l.cout
+
+
+def ultranet(in_hw=(160, 320)) -> ConvNetSpec:
+    """UltraNet (DAC-SDC'20 winner backbone): 4x pooled + 4x plain 3x3."""
+    chans = [16, 32, 64, 64, 64, 64, 64, 64]
+    layers, cin = [], 3
+    for i, c in enumerate(chans):
+        layers.append(ConvSpec(cin, c, kernel=3, pool=2 if i < 4 else 1))
+        cin = c
+    layers.append(ConvSpec(cin, 5, kernel=1, act=False))  # obj + 4 coords
+    return ConvNetSpec("ultranet", in_hw, 3, tuple(layers), "detect", 5)
+
+
+def skynet(in_hw=(160, 320)) -> ConvNetSpec:
+    """SkyNet: stacked depthwise+pointwise bundles (MLSys'20)."""
+    bundles = [(3, 48), (48, 96), (96, 192), (192, 384), (384, 512), (512, 96)]
+    layers = []
+    for i, (cin, cout) in enumerate(bundles):
+        layers.append(ConvSpec(cin, cin, kernel=3, depthwise=True, pool=2 if i < 3 else 1))
+        layers.append(ConvSpec(cin, cout, kernel=1))
+    layers.append(ConvSpec(96, 5, kernel=1, act=False))
+    return ConvNetSpec("skynet", in_hw, 3, tuple(layers), "detect", 5)
+
+
+def vgg_tiny(in_hw=(32, 32)) -> ConvNetSpec:
+    """VGG-alike 6 conv + 1 FC CIFAR-10 model from §VII-A."""
+    chans = [(3, 64), (64, 64), (64, 128), (128, 128), (128, 256), (256, 256)]
+    layers = [
+        ConvSpec(cin, cout, kernel=3, pool=2 if i % 2 == 1 else 1)
+        for i, (cin, cout) in enumerate(chans)
+    ]
+    layers.append(ConvSpec(256, 10, kernel=1, act=False))  # 1x1 head == FC after GAP
+    return ConvNetSpec("vgg_tiny", in_hw, 3, tuple(layers), "classify", 10)
+
+
+CONVNETS = {"ultranet": ultranet, "skynet": skynet, "vgg_tiny": vgg_tiny}
+
+
+# ---------------------------------------------------------------------------
+# Parameters and forward pass
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, spec: ConvNetSpec) -> dict:
+    params = {}
+    for i, l in enumerate(spec.layers):
+        key, sub = jax.random.split(key)
+        cin = 1 if l.depthwise else l.cin
+        fan_in = l.kernel * l.kernel * cin
+        w = jax.random.normal(sub, (l.kernel, l.kernel, cin, l.cout)) / jnp.sqrt(fan_in)
+        params[f"layer{i}"] = {
+            "w": w,
+            "scale": jnp.ones((l.cout,)),
+            "bias": jnp.zeros((l.cout,)),
+        }
+    return params
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, spec: ConvSpec) -> jnp.ndarray:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(spec.stride, spec.stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=spec.cin if spec.depthwise else 1,
+    )
+
+
+QuantFn = Callable[[jnp.ndarray, int], jnp.ndarray]
+
+
+def apply(
+    params: dict,
+    spec: ConvNetSpec,
+    x: jnp.ndarray,
+    bits: Sequence[tuple[int, int]] | None = None,
+    *,
+    quant_w: QuantFn = fake_quant_weight,
+    quant_a: QuantFn = fake_quant_act,
+) -> jnp.ndarray:
+    """Forward pass.  ``bits[i] = (w_bits, a_bits)`` per layer; None = fp32.
+
+    ``quant_w``/``quant_a`` are injection points: the NAS super-net passes
+    composite (probability-weighted) quantizers here, so the exact same
+    network definition is shared between search and deployment.
+    """
+    for i, l in enumerate(spec.layers):
+        p = params[f"layer{i}"]
+        w = p["w"]
+        if bits is not None:
+            wb, ab = bits[i]
+            w = quant_w(w, wb)
+            if i > 0:  # first layer input is raw pixels (paper keeps 8b+)
+                x = quant_a(x, ab)
+        x = _conv(x, w, l)
+        x = x * p["scale"] + p["bias"]
+        if l.act:
+            x = jax.nn.relu(x)
+        if l.pool > 1:
+            x = jax.lax.reduce_window(
+                x,
+                -jnp.inf,
+                jax.lax.max,
+                (1, l.pool, l.pool, 1),
+                (1, l.pool, l.pool, 1),
+                "VALID",
+            )
+    if spec.head == "classify":
+        return jnp.mean(x, axis=(1, 2))  # GAP -> logits
+    # detection head: per-cell (obj, cx, cy, w, h); decode soft-argmax box
+    obj = jax.nn.softmax(x[..., 0].reshape(x.shape[0], -1), axis=-1)
+    coords = jax.nn.sigmoid(x[..., 1:5]).reshape(x.shape[0], -1, 4)
+    return jnp.einsum("bg,bgc->bc", obj, coords)  # [B, 4] normalized box
+
+
+def task_loss(pred: jnp.ndarray, labels: jnp.ndarray, head: str) -> jnp.ndarray:
+    if head == "classify":
+        logp = jax.nn.log_softmax(pred)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    return jnp.mean(jnp.square(pred - labels))  # box regression
+
+
+def iou(pred_box: jnp.ndarray, true_box: jnp.ndarray) -> jnp.ndarray:
+    """Mean IOU of (cx, cy, w, h) normalized boxes (DAC-SDC metric)."""
+
+    def corners(b):
+        cx, cy, w, h = b[..., 0], b[..., 1], b[..., 2], b[..., 3]
+        return cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2
+
+    ax0, ay0, ax1, ay1 = corners(pred_box)
+    bx0, by0, bx1, by1 = corners(true_box)
+    iw = jnp.maximum(0.0, jnp.minimum(ax1, bx1) - jnp.maximum(ax0, bx0))
+    ih = jnp.maximum(0.0, jnp.minimum(ay1, by1) - jnp.maximum(ay0, by0))
+    inter = iw * ih
+    union = (ax1 - ax0) * (ay1 - ay0) + (bx1 - bx0) * (by1 - by0) - inter
+    return jnp.mean(inter / jnp.maximum(union, 1e-9))
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

@@ -1,0 +1,194 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan formulation.
+
+Train path: the sequence is split into chunks of ``chunk`` tokens; the
+intra-chunk term is the quadratic masked product of the duality paper,
+the inter-chunk term is a (cheap) ``lax.scan`` over chunk states
+[B, H, P, N].  Decode path: O(1) recurrent state update per token.
+
+The block layout follows mamba2: in_proj -> (z | xBC | dt), causal
+depthwise conv1d(4) on xBC, SSD core, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import NO_QUANT, QuantConfig, dense, dense_init, rmsnorm, rmsnorm_init
+from repro.parallel.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_state: int  # N
+    head_dim: int = 64  # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba_init(key, s: MambaSpec) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d_in = s.d_inner
+    conv_dim = d_in + 2 * s.d_state
+    return {
+        "ln": rmsnorm_init(s.d_model),
+        # input projection split into TP-shardable (z, xBC) and the tiny,
+        # replicated dt head (n_heads rarely divides the TP degree)
+        "in_z": dense_init(k1, s.d_model, d_in),
+        "in_xbc": dense_init(k4, s.d_model, conv_dim),
+        "in_dt": dense_init(k5, s.d_model, s.n_heads),
+        "conv_w": jax.random.normal(k2, (s.conv_width, conv_dim)) * 0.2,
+        "conv_b": jnp.zeros((conv_dim,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, s.n_heads)),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((s.n_heads,)),
+        "d_skip": jnp.ones((s.n_heads,)),
+        "out_norm": rmsnorm_init(d_in),
+        "out_proj": dense_init(k3, d_in, s.d_model),
+    }
+
+
+def _project_in(params: dict, s: MambaSpec, h: jax.Array, quant: QuantConfig):
+    z = dense(params["in_z"], h, name="ssm_in", quant=quant)
+    xbc = dense(params["in_xbc"], h, name="ssm_in", quant=quant)
+    dt = dense(params["in_dt"], h, name="ssm_dt", quant=quant)
+    n = s.d_state
+    x = xbc[..., : s.d_inner]
+    b = xbc[..., s.d_inner : s.d_inner + n]
+    c = xbc[..., s.d_inner + n :]
+    return z, x, b, c, dt
+
+
+def _conv1d_causal(w: jax.Array, bias: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence: x [B, S, C], w [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp,
+        w[:, None, :].astype(x.dtype),  # [K, 1, C] HIO
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + bias.astype(x.dtype)
+
+
+def mamba_train(params: dict, s: MambaSpec, x: jax.Array, *, quant: QuantConfig = NO_QUANT) -> jax.Array:
+    """x: [B, S, d_model] -> [B, S, d_model] (residual included)."""
+    B, S, _ = x.shape
+    H, P, N, Q = s.n_heads, s.head_dim, s.d_state, min(s.chunk, S)
+    assert S % Q == 0, "sequence must divide the SSD chunk size"
+    h = rmsnorm(params["ln"], x)
+    z, xs, b, c, dt = _project_in(params, s, h, quant)
+    xbc = jnp.concatenate([xs, b, c], axis=-1)
+    xbc = jax.nn.silu(_conv1d_causal(params["conv_w"], params["conv_b"], xbc))
+    xs = xbc[..., : s.d_inner].reshape(B, S, H, P)
+    b = xbc[..., s.d_inner : s.d_inner + N]
+    c = xbc[..., s.d_inner + N :]
+    dt = jax.nn.softplus(dt + params["dt_bias"])  # [B, S, H]
+    a = -jnp.exp(params["a_log"])  # [H], negative
+    log_a = (dt * a).astype(jnp.float32)  # [B, S, H] (<= 0)
+
+    nc = S // Q
+    xs_c = xs.reshape(B, nc, Q, H, P)
+    b_c = b.reshape(B, nc, Q, N)
+    c_c = c.reshape(B, nc, Q, N)
+    dt_c = dt.reshape(B, nc, Q, H)
+    la_c = log_a.reshape(B, nc, Q, H)
+    cum = jnp.cumsum(la_c, axis=2)  # [B, nc, Q, H] inclusive
+
+    # intra-chunk (quadratic, masked): y[i] += sum_{j<=i} (C_i.B_j) e^{cum_i-cum_j} dt_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Qi,Qj,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # clamp BEFORE exp: upper-triangle seg is positive and overflows fp32,
+    # and where(mask, exp(inf), 0) still poisons the backward with 0*inf
+    decay = jnp.exp(jnp.where(mask, seg, 0.0)) * mask
+    cb = jnp.einsum("bnis,bnjs->bnij", c_c, b_c)  # [B,nc,Qi,Qj]
+    scores = cb[:, :, :, :, None] * decay * dt_c[:, :, None, :, :]
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores.astype(x.dtype), xs_c)
+
+    # chunk states: S_n = e^{cum_Q} S_{n-1} + sum_j e^{cum_Q - cum_j} dt_j B_j (x) x_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    contrib = jnp.einsum(
+        "bnqh,bnqs,bnqhp->bnhsp",
+        (tail * dt_c).astype(jnp.float32),
+        b_c.astype(jnp.float32),
+        xs_c.astype(jnp.float32),
+    )  # [B,nc,H,N,P]
+    gamma = jnp.exp(cum[:, :, -1, :])  # [B,nc,H] total chunk decay
+
+    def scan_body(state, inp):
+        g, ctr = inp  # [B,H], [B,H,N,P]
+        new = state * g[:, :, None, None] + ctr
+        return new, state  # emit the *previous* state for inter-chunk term
+
+    init = jnp.zeros((B, H, N, P), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        scan_body,
+        init,
+        (jnp.moveaxis(gamma, 1, 0), jnp.moveaxis(contrib, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B,nc,H,N,P]
+
+    # inter-chunk: y[i] += e^{cum_i} C_i . S_prev
+    y_inter = jnp.einsum(
+        "bnqh,bnqs,bnhsp->bnqhp",
+        jnp.exp(cum),
+        c_c.astype(jnp.float32),
+        prev_states,
+    ).astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params["d_skip"].astype(x.dtype)[None, None, :, None] * xs.reshape(B, S, H, P)
+    y = y.reshape(B, S, s.d_inner) * jax.nn.silu(z)
+    y = rmsnorm(params["out_norm"], y)
+    out = dense(params["out_proj"], y, name="ssm_out", quant=quant)
+    return x + shard(out, "batch", None, None)
+
+
+def mamba_decode(
+    params: dict,
+    s: MambaSpec,
+    x: jax.Array,  # [B, 1, d_model]
+    ssm_state: jax.Array,  # [B, H, N, P] float32
+    conv_state: jax.Array,  # [B, conv_width-1, conv_dim]
+    *,
+    quant: QuantConfig = NO_QUANT,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token recurrent step; returns (out, ssm_state, conv_state)."""
+    B = x.shape[0]
+    H, P, N = s.n_heads, s.head_dim, s.d_state
+    h = rmsnorm(params["ln"], x)
+    z, xs, b, c, dt = _project_in(params, s, h, quant)
+    xbc = jnp.concatenate([xs, b, c], axis=-1)  # [B, 1, conv_dim]
+    window = jnp.concatenate([conv_state, xbc], axis=1)  # [B, K, conv_dim]
+    conv_out = jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(x.dtype)) + params[
+        "conv_b"
+    ].astype(x.dtype)
+    xbc = jax.nn.silu(conv_out)[:, None, :]
+    new_conv_state = window[:, 1:, :]
+    xs = xbc[..., : s.d_inner].reshape(B, H, P)
+    b = xbc[..., s.d_inner : s.d_inner + N].reshape(B, N)
+    c = xbc[..., s.d_inner + N :].reshape(B, N)
+    dt = jax.nn.softplus(dt + params["dt_bias"]).reshape(B, H)
+    a = -jnp.exp(params["a_log"])
+    g = jnp.exp((dt * a).astype(jnp.float32))  # [B, H]
+    contrib = jnp.einsum("bh,bs,bhp->bhsp", dt.astype(jnp.float32), b.astype(jnp.float32), xs.astype(jnp.float32))
+    new_state = ssm_state * g[:, :, None, None] + contrib
+    y = jnp.einsum("bs,bhsp->bhp", c.astype(jnp.float32), new_state).astype(x.dtype)
+    y = y + params["d_skip"].astype(x.dtype)[None, :, None] * xs
+    y = y.reshape(B, 1, s.d_inner) * jax.nn.silu(z)
+    y = rmsnorm(params["out_norm"], y)
+    out = dense(params["out_proj"], y, name="ssm_out", quant=quant)
+    return x + out, new_state, new_conv_state

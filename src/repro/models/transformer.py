@@ -1,0 +1,560 @@
+"""Unified LM-family model: dense / MoE / SSM / hybrid / enc-dec backbones.
+
+One config + one forward covers the ten assigned architectures:
+
+  * dense GQA transformers (yi, llama3.2, nemotron, qwen2-vl backbone)
+  * sliding-window patterns (gemma3: 5 local : 1 global)
+  * MoE FFNs (llama4-scout 16e top-1, qwen3-moe 128e top-8) with expert
+    parallelism via shard_map all_to_all
+  * Mamba2/SSD stacks (mamba2-130m) and hybrid stacks with a shared
+    attention block every k SSM layers (zamba2)
+  * encoder-decoder with cross attention (whisper backbone; modality
+    frontend stubbed as precomputed frame embeddings)
+
+Layers are stacked on a leading axis and scanned (jax.lax.scan) so HLO
+size and compile time stay O(1) in depth; jax.checkpoint on the scanned
+body implements activation rematerialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as X
+from repro.parallel.sharding import current_rules, shard
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 => d_model // n_heads
+    mlp_kind: str = "swiglu"
+    rope_theta: float = 10_000.0
+    use_mrope: bool = False
+    # layer pattern: "attn" | "ssm"; window[i] > 0 => sliding-window attention
+    family: str = "attn"  # attn | ssm | hybrid | encdec
+    window_pattern: tuple[int, ...] = (0,)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    hybrid_attn_every: int = 6
+    # enc-dec
+    enc_layers: int = 0
+    # execution
+    q_chunk: int = 1024
+    remat: bool = True
+    # two-level remat: outer scan over groups of this many layers keeps only
+    # group-boundary activations live (memory ~ L/remat_block checkpoints);
+    # 0/1 disables.  Only used when it divides n_layers.
+    remat_block: int = 1
+    # ZeRO-3 regather: re-gather each layer's fsdp-sharded weights inside
+    # the layer scan (bounds gathered-weight HBM to one layer at a time)
+    zero3_regather: bool = False
+    dtype: Any = jnp.bfloat16
+    quant: L.QuantConfig = L.NO_QUANT
+    # sharding choice for decode KV cache: "kv_heads" or "seq_mp"
+    cache_shard: str = "kv_heads"
+    # decode KV cache storage: "bf16" | "int8" (per-token scales)
+    kv_dtype: str = "bf16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def attn_spec(self) -> L.AttnSpec:
+        return L.AttnSpec(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            kv_heads=self.kv_heads,
+            head_dim=self.hd,
+            rope_theta=self.rope_theta,
+            use_mrope=self.use_mrope,
+            q_chunk=self.q_chunk,
+        )
+
+    def mlp_spec(self) -> L.MLPSpec:
+        return L.MLPSpec(d_model=self.d_model, d_ff=self.d_ff, kind=self.mlp_kind)
+
+    def moe_spec(self) -> X.MoESpec:
+        return X.MoESpec(
+            d_model=self.d_model,
+            d_ff=self.expert_d_ff,
+            n_experts=self.n_experts,
+            top_k=self.top_k,
+            capacity_factor=self.capacity_factor,
+            kind=self.mlp_kind,
+        )
+
+    def ssm_spec(self) -> M.MambaSpec:
+        return M.MambaSpec(
+            d_model=self.d_model,
+            d_state=self.ssm_state,
+            head_dim=self.ssm_head_dim,
+            chunk=self.ssm_chunk,
+        )
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def windows(self) -> jnp.ndarray:
+        pat = self.window_pattern
+        reps = -(-self.n_layers // len(pat))
+        return jnp.asarray((pat * reps)[: self.n_layers], jnp.int32)
+
+    def param_count(self) -> int:
+        """Approximate parameter count (reported in EXPERIMENTS)."""
+        d, hd = self.d_model, self.hd
+        per = 0
+        if self.family in ("attn", "encdec"):
+            attn = d * hd * (self.n_heads + 2 * self.kv_heads) + self.n_heads * hd * d
+            ffn = (
+                self.n_experts * 3 * d * self.expert_d_ff
+                if self.is_moe
+                else (3 if self.mlp_kind == "swiglu" else 2) * d * self.d_ff
+            )
+            per = attn + ffn
+            total = self.n_layers * per
+            if self.family == "encdec":
+                total += self.enc_layers * per + self.n_layers * (attn)  # cross attn
+        elif self.family == "ssm":
+            spec = self.ssm_spec()
+            per = d * (2 * spec.d_inner + 2 * spec.d_state + spec.n_heads) + spec.d_inner * d
+            total = self.n_layers * per
+        else:  # hybrid
+            spec = self.ssm_spec()
+            per = d * (2 * spec.d_inner + 2 * spec.d_state + spec.n_heads) + spec.d_inner * d
+            attn = d * hd * (self.n_heads + 2 * self.kv_heads) + self.n_heads * hd * d
+            ffn = 3 * d * self.d_ff
+            total = self.n_layers * per + attn + ffn  # one shared block
+        return total + self.vocab * d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_emb, k_layers, k_extra, k_enc = jax.random.split(key, 4)
+    params: dict = {
+        "embed": jax.random.normal(k_emb, (cfg.vocab, cfg.d_model)) * 0.01,
+        "final_ln": L.rmsnorm_init(cfg.d_model),
+    }
+    aspec, mspec = cfg.attn_spec(), cfg.mlp_spec()
+
+    if cfg.family in ("attn", "encdec"):
+
+        def one(k):
+            ka, km = jax.random.split(k)
+            block = {"attn": L.attn_init(ka, aspec)}
+            if cfg.is_moe:
+                block["moe"] = X.moe_init(km, cfg.moe_spec())
+            else:
+                block["mlp"] = L.mlp_init(km, mspec)
+            return block
+
+        params["layers"] = _stack_init(k_layers, cfg.n_layers, one)
+        if cfg.family == "encdec":
+
+            def enc_one(k):
+                ka, km = jax.random.split(k)
+                return {"attn": L.attn_init(ka, aspec), "mlp": L.mlp_init(km, mspec)}
+
+            def xattn_one(k):
+                return {"xattn": L.attn_init(k, aspec)}
+
+            params["enc_layers"] = _stack_init(k_enc, cfg.enc_layers, enc_one)
+            params["xattn_layers"] = _stack_init(k_extra, cfg.n_layers, xattn_one)
+    elif cfg.family == "ssm":
+        params["layers"] = _stack_init(k_layers, cfg.n_layers, lambda k: M.mamba_init(k, cfg.ssm_spec()))
+    elif cfg.family == "hybrid":
+        params["layers"] = _stack_init(k_layers, cfg.n_layers, lambda k: M.mamba_init(k, cfg.ssm_spec()))
+        ka, km = jax.random.split(k_extra)
+        params["shared_attn"] = {"attn": L.attn_init(ka, aspec), "mlp": L.mlp_init(km, mspec)}
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MoE under shard_map (expert parallelism) or direct (tests)
+# ---------------------------------------------------------------------------
+
+
+def _moe_block(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    rules = current_rules()
+    spec = cfg.moe_spec()
+    if rules is None or rules.mesh is None:
+        return X.moe_apply(params, spec, x, axis_name=None, quant=cfg.quant)
+    mesh = rules.mesh
+    batch_ax, model_ax = rules.batch, rules.experts
+    model_size = mesh.shape[model_ax] if isinstance(model_ax, str) else 1
+    seq_shardable = x.shape[1] % max(1, model_size) == 0
+
+    p_specs = {
+        "router": P(),
+        "ln": P(),
+        **{
+            k: P(model_ax, None, None)
+            for k in ("w_up", "w_down", *(["w_gate"] if "w_gate" in params else []))
+        },
+    }
+
+    if seq_shardable:
+        # train/prefill: tokens shard over the model axis; all_to_all EP
+        def body(p, xs):
+            b, s_loc, d = xs.shape
+            out = X._local_moe(
+                p, spec, xs.reshape(b * s_loc, d), axis_name=model_ax, quant=cfg.quant
+            )
+            return xs + out.reshape(b, s_loc, d)
+
+        x_spec = P(batch_ax, model_ax, None)
+    else:
+        # decode: tokens replicated over the model axis; psum-combined EP
+        def body(p, xs):
+            b, s_loc, d = xs.shape
+            out = X._local_moe_expert_sharded(
+                p, spec, xs.reshape(b * s_loc, d), axis_name=model_ax
+            )
+            return xs + out.reshape(b, s_loc, d)
+
+        x_spec = P(batch_ax, None, None)
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(p_specs, x_spec), out_specs=x_spec, check_vma=False
+    )(params, x)
+
+
+# ---------------------------------------------------------------------------
+# train forward (next-token loss)
+# ---------------------------------------------------------------------------
+
+
+def _maybe_ckpt(f, cfg):
+    return jax.checkpoint(f) if cfg.remat else f
+
+
+def _attn_mlp_block(p, cfg: ModelConfig, x, positions, window):
+    if cfg.zero3_regather:
+        from repro.parallel.sharding import current_rules, regather_layer_params
+
+        p = regather_layer_params(p, current_rules())
+    x = L.attention_train(
+        p["attn"], cfg.attn_spec(), x, positions, window=window, quant=cfg.quant
+    )
+    if cfg.is_moe:
+        x = _moe_block(p["moe"], cfg, x)
+    else:
+        x = L.mlp(p["mlp"], cfg.mlp_spec(), x, quant=cfg.quant)
+    return x
+
+
+def _scan_stack(body, cfg: ModelConfig, x, xs):
+    """Scan over stacked layers; two-level (grouped) when remat_block set.
+
+    The grouped form checkpoints only group boundaries: backward memory is
+    O(L / remat_block) saved activations + O(remat_block) transient.
+    """
+    rb = cfg.remat_block
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if cfg.remat and rb > 1 and n % rb == 0:
+        grouped = jax.tree.map(lambda a: a.reshape((n // rb, rb) + a.shape[1:]), xs)
+
+        def group_body(carry, group_xs):
+            out, _ = jax.lax.scan(body, carry, group_xs)
+            return out, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(group_body), x, grouped)
+        return x
+    x, _ = jax.lax.scan(_maybe_ckpt(body, cfg), x, xs)
+    return x
+
+
+def _run_attn_stack(params_stack, cfg: ModelConfig, x, positions, windows):
+    def body(carry, xs):
+        p, win = xs
+        return _attn_mlp_block(p, cfg, carry, positions, win), None
+
+    return _scan_stack(body, cfg, x, (params_stack, windows))
+
+
+def _run_ssm_stack(params_stack, cfg: ModelConfig, x):
+    def body(carry, p):
+        if cfg.zero3_regather:
+            from repro.parallel.sharding import current_rules, regather_layer_params
+
+            p = regather_layer_params(p, current_rules())
+        return M.mamba_train(p, cfg.ssm_spec(), carry, quant=cfg.quant), None
+
+    return _scan_stack(body, cfg, x, params_stack)
+
+
+def _hybrid_segments(cfg: ModelConfig) -> list[int]:
+    """Segment sizes between shared-attention applications (zamba2)."""
+    k, n = cfg.hybrid_attn_every, cfg.n_layers
+    segs = [k] * (n // k)
+    if n % k:
+        segs.append(n % k)
+    return segs
+
+
+def forward_train(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    """batch: tokens [B,S] int32, labels [B,S] int32 (+positions for mrope,
+    +enc_embeds for encdec).  Returns mean next-token cross-entropy."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = shard(x, "batch", None, None)
+    if cfg.use_mrope:
+        positions = batch["positions"]  # [B, S, 3]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family == "attn":
+        x = _run_attn_stack(params["layers"], cfg, x, positions, cfg.windows())
+    elif cfg.family == "ssm":
+        x = _run_ssm_stack(params["layers"], cfg, x)
+    elif cfg.family == "hybrid":
+        idx = 0
+        for seg in _hybrid_segments(cfg):
+            sub = jax.tree.map(lambda a: a[idx : idx + seg], params["layers"])
+            x = _run_ssm_stack(sub, cfg, x)
+            idx += seg
+            x = _attn_mlp_block(params["shared_attn"], cfg, x, positions, 0)
+    elif cfg.family == "encdec":
+        enc = batch["enc_embeds"].astype(cfg.dtype)  # [B, Se, d] stub frontend
+        Se = enc.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+        def enc_body(carry, p):
+            h = L.attention_train(p["attn"], cfg.attn_spec(), carry, enc_pos, window=-1)
+            return L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant), None
+        enc, _ = jax.lax.scan(_maybe_ckpt(enc_body, cfg), enc, params["enc_layers"])
+        aspec = cfg.attn_spec()
+        G, hd = cfg.kv_heads, cfg.hd
+
+        def dec_body(carry, xs):
+            p, px = xs
+            h = L.attention_train(p["attn"], aspec, carry, positions, window=0, quant=cfg.quant)
+            ek = L.dense(px["xattn"]["wk"], enc, name="xattn_k", quant=cfg.quant).reshape(B, Se, G, hd)
+            ev = L.dense(px["xattn"]["wv"], enc, name="xattn_v", quant=cfg.quant).reshape(B, Se, G, hd)
+            h = L.cross_attention(px["xattn"], aspec, h, (ek, ev), quant=cfg.quant)
+            return L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant), None
+
+        x, _ = jax.lax.scan(
+            _maybe_ckpt(dec_body, cfg), x, (params["layers"], params["xattn_layers"])
+        )
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.rmsnorm(params["final_ln"], x)
+    return ce_loss_chunked(x, params["embed"], batch["labels"])
+
+
+def ce_loss_chunked(x: jax.Array, embed: jax.Array, labels: jax.Array, chunk: int = 512) -> jax.Array:
+    """Tied-head cross-entropy, chunked over sequence to bound the [*,V]
+    logit buffer (vocab can be 256k)."""
+    B, S, d = x.shape
+    V = embed.shape[0]
+    n = max(1, S // min(chunk, S))
+    cs = S // n
+    emb_t = embed.astype(x.dtype)
+
+    def body(acc, i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * cs, cs, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+        logits = (xs @ emb_t.T).astype(jnp.float32)  # [B, cs, V]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# decode forward (one new token against a KV / SSM cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, dtype=jnp.bfloat16, enc_len: int | None = None
+) -> dict:
+    """Allocate the serve-time cache pytree (KV or SSM state)."""
+    if cfg.family in ("attn", "encdec"):
+        # flat KV layout [L, B, T, G*hd]: the fused dim is divisible by the
+        # TP degree even when kv_heads alone is not
+        shape = (cfg.n_layers, batch, max_len, cfg.kv_heads * cfg.hd)
+        if cfg.kv_dtype == "int8" and cfg.family == "attn":
+            cache = {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros((cfg.n_layers, batch, max_len, 1), jnp.float32),
+                "v_scale": jnp.zeros((cfg.n_layers, batch, max_len, 1), jnp.float32),
+            }
+            return cache
+        cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if cfg.family == "encdec":
+            se = enc_len or max(1, max_len // 2)
+            cache["enc_k"] = jnp.zeros((cfg.n_layers, batch, se, cfg.kv_heads * cfg.hd), dtype)
+            cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+        return cache
+    sspec = cfg.ssm_spec()
+    ssm = {
+        "ssm": jnp.zeros((cfg.n_layers, batch, sspec.n_heads, sspec.d_state, sspec.head_dim), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, sspec.conv_width - 1, sspec.d_inner + 2 * sspec.d_state), dtype),
+    }
+    if cfg.family == "hybrid":
+        ssm["k"] = jnp.zeros((1, batch, max_len, cfg.kv_heads * cfg.hd), dtype)
+        ssm["v"] = jnp.zeros_like(ssm["k"])
+    return ssm
+
+
+def forward_decode(
+    params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array, pos: jax.Array
+) -> tuple[jax.Array, dict]:
+    """One decode step: tokens [B, 1] -> logits [B, V], updated cache."""
+    B = tokens.shape[0]
+    x = params["embed"].astype(cfg.dtype)[tokens]  # [B, 1, d]
+    x = shard(x, "batch", None, None)
+    aspec = cfg.attn_spec()
+    windows = cfg.windows()
+
+    if cfg.family in ("attn", "encdec"):
+        kv_int8 = cfg.kv_dtype == "int8" and cfg.family == "attn"
+
+        def body(carry, xs):
+            if kv_int8:
+                p, ck, cv, cks, cvs, win = xs
+                h, nk, nv, nks, nvs = L.attention_decode(
+                    p["attn"], aspec, carry, ck, cv, pos,
+                    window=win, cache_shard=cfg.cache_shard, quant=cfg.quant,
+                    cache_k_scale=cks, cache_v_scale=cvs,
+                )
+                if cfg.is_moe:
+                    h = _moe_block(p["moe"], cfg, h)
+                else:
+                    h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
+                return h, (nk, nv, nks, nvs)
+            p, ck, cv, win, *rest = xs
+            h, nk, nv = L.attention_decode(
+                p["attn"], aspec, carry, ck, cv, pos,
+                window=win, cache_shard=cfg.cache_shard, quant=cfg.quant,
+            )
+            if cfg.family == "encdec":
+                px, ek, ev = rest
+                se = ek.shape[1]
+                ekv = (
+                    ek.reshape(ek.shape[0], se, cfg.kv_heads, cfg.hd),
+                    ev.reshape(ev.shape[0], se, cfg.kv_heads, cfg.hd),
+                )
+                h = L.cross_attention(px["xattn"], aspec, h, ekv, quant=cfg.quant)
+            if cfg.is_moe:
+                h = _moe_block(p["moe"], cfg, h)
+            else:
+                h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
+            return h, (nk, nv)
+
+        if kv_int8:
+            xs = (params["layers"], cache["k"], cache["v"],
+                  cache["k_scale"], cache["v_scale"], windows)
+            x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
+            new_cache = dict(cache, k=nk, v=nv, k_scale=nks, v_scale=nvs)
+        else:
+            xs = [params["layers"], cache["k"], cache["v"], windows]
+            if cfg.family == "encdec":
+                xs += [params["xattn_layers"], cache["enc_k"], cache["enc_v"]]
+            x, (nk, nv) = jax.lax.scan(body, x, tuple(xs))
+            new_cache = dict(cache, k=nk, v=nv)
+    elif cfg.family == "ssm":
+
+        def body(carry, xs):
+            p, st, cv = xs
+            h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, cv, quant=cfg.quant)
+            return h, (ns, nc)
+
+        x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]))
+        new_cache = dict(cache, ssm=ns, conv=nc)
+    else:  # hybrid
+        new_ssm, new_conv = [], []
+        idx = 0
+        ck, cv = cache["k"][0], cache["v"][0]
+        for seg in _hybrid_segments(cfg):
+            sub = jax.tree.map(lambda a: a[idx : idx + seg], params["layers"])
+
+            def body(carry, xs):
+                p, st, c2 = xs
+                h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, c2, quant=cfg.quant)
+                return h, (ns, nc)
+
+            x, (ns, nc) = jax.lax.scan(
+                body, x, (sub, cache["ssm"][idx : idx + seg], cache["conv"][idx : idx + seg])
+            )
+            new_ssm.append(ns)
+            new_conv.append(nc)
+            idx += seg
+            x, ck, cv = L.attention_decode(
+                params["shared_attn"]["attn"], aspec, x, ck, cv, pos,
+                cache_shard=cfg.cache_shard, quant=cfg.quant,
+            )
+            x = L.mlp(params["shared_attn"]["mlp"], cfg.mlp_spec(), x, quant=cfg.quant)
+        new_cache = dict(
+            cache,
+            ssm=jnp.concatenate(new_ssm, 0),
+            conv=jnp.concatenate(new_conv, 0),
+            k=ck[None],
+            v=cv[None],
+        )
+
+    x = L.rmsnorm(params["final_ln"], x)
+    logits = (x[:, 0, :] @ params["embed"].astype(cfg.dtype).T).astype(jnp.float32)
+    return logits, new_cache
+
+
+def encode_for_decode(params: dict, cfg: ModelConfig, enc_embeds: jax.Array) -> dict:
+    """Run the encoder and produce per-layer cross-attention K/V (whisper
+    serve path): returns {'enc_k': [L,B,Se,G,hd], 'enc_v': ...}."""
+    assert cfg.family == "encdec"
+    B, Se, _ = enc_embeds.shape
+    enc = enc_embeds.astype(cfg.dtype)
+    enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None], (B, Se))
+
+    def enc_body(carry, p):
+        h = L.attention_train(p["attn"], cfg.attn_spec(), carry, enc_pos, window=-1)
+        return L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant), None
+
+    enc, _ = jax.lax.scan(enc_body, enc, params["enc_layers"])
+    G, hd = cfg.kv_heads, cfg.hd
+
+    def kv_body(_, px):
+        ek = L.dense(px["xattn"]["wk"], enc).reshape(B, Se, G * hd)
+        ev = L.dense(px["xattn"]["wv"], enc).reshape(B, Se, G * hd)
+        return None, (ek, ev)
+
+    _, (eks, evs) = jax.lax.scan(kv_body, None, params["xattn_layers"])
+    return {"enc_k": eks, "enc_v": evs}

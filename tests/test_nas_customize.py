@@ -1,0 +1,167 @@
+"""NAS (§V) and accelerator-customization (§VI) behaviour tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.customize import (
+    BayesianRidge,
+    allocate,
+    sample_space,
+    stage_resources,
+    train_predictors,
+)
+from repro.core.nas import (
+    SearchSpace,
+    complexity_loss,
+    init_alphas,
+    op_dsp,
+    search,
+    select_bits,
+    supernet_apply,
+    t_mul_tables,
+    op_muls,
+)
+from repro.core.packing import build_lut, DSP48E2
+from repro.core.quant import fake_quant_act, fake_quant_weight
+from repro.models import convnets
+
+
+@pytest.fixture(scope="module")
+def luts():
+    return {k: build_lut(DSP48E2, kernel_len=k, seq_len=32) for k in (1, 3)}
+
+
+# ---------------------------------------------------------------------------
+# quantizers
+# ---------------------------------------------------------------------------
+
+
+def test_fake_quant_weight_levels():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    for bits in (2, 4, 8):
+        q = fake_quant_weight(w, bits)
+        assert q.min() >= -1.0 and q.max() <= 1.0
+        assert len(np.unique(np.asarray(q))) <= 2**bits
+
+
+def test_fake_quant_act_levels_and_ste():
+    x = jnp.linspace(-0.5, 1.5, 101)
+    q = fake_quant_act(x, 3)
+    assert q.min() >= 0.0 and q.max() <= 1.0
+    assert len(np.unique(np.asarray(q))) <= 8
+    # STE: gradient flows through as identity (within the clip range)
+    g = jax.grad(lambda v: jnp.sum(fake_quant_act(v, 3)))(jnp.full((4,), 0.5))
+    assert np.allclose(g, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# super-net
+# ---------------------------------------------------------------------------
+
+
+def test_supernet_forward_and_grads(luts):
+    spec = convnets.vgg_tiny()
+    space = SearchSpace(bit_choices=(2, 4, 8))
+    params = convnets.init_params(jax.random.PRNGKey(0), spec)
+    alphas = init_alphas(spec, space)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32, 3))
+    out = supernet_apply(params, alphas, spec, x, space)
+    assert out.shape == (2, 10)
+    assert not np.any(np.isnan(out))
+    tables = t_mul_tables(spec, luts, space)
+    ops = op_muls(spec)
+    g = jax.grad(
+        lambda a: complexity_loss(a, tables, ops, bit_choices=space.bit_choices)
+    )(alphas)
+    norms = [float(jnp.abs(v).sum()) for lay in g.values() for v in lay.values()]
+    assert any(n > 0 for n in norms), "complexity loss must be differentiable in alphas"
+
+
+def test_complexity_loss_prefers_low_bits(luts):
+    """Pushing probability mass to low bit-widths must reduce Eq. 8."""
+    spec = convnets.vgg_tiny()
+    space = SearchSpace(bit_choices=(2, 4, 8))
+    tables = t_mul_tables(spec, luts, space)
+    ops = op_muls(spec)
+    low = {f"layer{i}": {"w": jnp.array([8.0, 0, 0]), "a": jnp.array([8.0, 0, 0])} for i in range(len(spec.layers))}
+    high = {f"layer{i}": {"w": jnp.array([0, 0, 8.0]), "a": jnp.array([0, 0, 8.0])} for i in range(len(spec.layers))}
+    assert complexity_loss(low, tables, ops) < complexity_loss(high, tables, ops)
+
+
+def test_eta_sweep_moves_op_dsp(luts):
+    """Fig. 5 behaviour: higher eta => fewer expected DSP ops at selection."""
+    spec = convnets.vgg_tiny(in_hw=(16, 16))
+    r_lo = search(spec, luts, eta=0.0, steps=30, batch=16, n_data=128, seed=0)
+    r_hi = search(spec, luts, eta=3.0, steps=30, batch=16, n_data=128, seed=0)
+    assert r_hi.op_dsp <= r_lo.op_dsp
+
+
+def test_op_dsp_matches_manual(luts):
+    spec = convnets.vgg_tiny()
+    bits = [(4, 4)] * len(spec.layers)
+    expect = sum(
+        spec.op_mul(i) / luts[l.kernel if l.kernel in luts else 3].t_mul(4, 4)
+        for i, l in enumerate(spec.layers)
+    )
+    assert np.isclose(op_dsp(spec, bits, luts), expect)
+
+
+# ---------------------------------------------------------------------------
+# Bayesian ridge + DP allocation
+# ---------------------------------------------------------------------------
+
+
+def test_bayesian_ridge_recovers_linear():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(200, 4))
+    w = np.array([3.0, -2.0, 0.5, 0.0])
+    y = X @ w + 1.5 + rng.normal(0, 0.01, 200)
+    m = BayesianRidge().fit(X, y)
+    assert m.r2(X, y) > 0.999
+    mean, std = m.predict(X[:5], return_std=True)
+    assert std.shape == (5,) and np.all(std > 0)
+
+
+def test_allocation_respects_budgets(luts):
+    spec = convnets.vgg_tiny()
+    bits = [(4, 4)] * len(spec.layers)
+    space = sample_space(spec, bits, luts)
+    preds = train_predictors([c for st in space for c in st][::5])
+    alloc = allocate(space, preds, max_dsp=360, max_lut=70_560)
+    assert alloc is not None
+    assert alloc.dsp_used <= 360 * 1.1  # predictor tolerance
+    assert alloc.min_wns > 0
+    # halving the DSP budget cannot improve the II
+    alloc_half = allocate(space, preds, max_dsp=180, max_lut=70_560)
+    assert alloc_half.latency_cycles >= alloc.latency_cycles - 1e-6
+
+
+def test_lut_replacement_helps(luts):
+    """Table I: enabling LUT arithmetic must not reduce throughput."""
+    spec = convnets.ultranet(in_hw=(160, 320))
+    bits = [(4, 4)] * len(spec.layers)
+    space = sample_space(spec, bits, luts)
+    preds = train_predictors([c for st in space for c in st][::5])
+    base = allocate(space, preds, allow_lut_arith=False)
+    plus = allocate(space, preds, allow_lut_arith=True)
+    assert plus.fps >= base.fps
+
+
+def test_mixed_precision_reduces_op_dsp_and_improves_fps(luts):
+    """The paper's core claim, end to end on UltraNet:
+
+    NAS-style low-bit middle layers -> fewer DSP ops -> higher FPS at the
+    same resource budget."""
+    spec = convnets.ultranet()
+    L = len(spec.layers)
+    mc = [(8, 8)] + [(4, 4)] * (L - 2) + [(8, 8)]
+    mix = [(4, 6), (2, 3), (2, 2), (3, 3), (4, 4), (4, 4), (5, 4), (5, 5), (6, 6)]
+    assert op_dsp(spec, mix, luts) < op_dsp(spec, mc, luts)
+    space_mc, space_mix = sample_space(spec, mc, luts), sample_space(spec, mix, luts)
+    preds = train_predictors(
+        ([c for st in space_mc for c in st] + [c for st in space_mix for c in st])[::7]
+    )
+    a_mc = allocate(space_mc, preds)
+    a_mix = allocate(space_mix, preds)
+    assert a_mix.fps > a_mc.fps

@@ -1,0 +1,160 @@
+"""Exactness + optimality properties of the DSP Packing Optimizer (§IV)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (
+    DSP48E2,
+    TPU_VPU15,
+    best_packing,
+    bitpack as bp,
+    build_lut,
+    compare_luts,
+)
+
+
+def _kernel_cfg_to_bitpack(cfg):
+    return bp.KernelPacked(
+        d_bits=(cfg.a_bits if cfg.w_port_big else cfg.w_bits),
+        e_bits=(cfg.w_bits if cfg.w_port_big else cfg.a_bits),
+        n_d=(cfg.n_a if cfg.w_port_big else cfg.n_w),
+        n_e=(cfg.n_w if cfg.w_port_big else cfg.n_a),
+        stride=cfg.stride,
+        overlap=cfg.overlap,
+    )
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    w=st.integers(2, 8),
+    a=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+    profile=st.sampled_from([DSP48E2, TPU_VPU15]),
+)
+def test_kernel_packing_bit_exact(w, a, seed, profile):
+    """Every winning kernel-packing placement decodes to the exact outer
+    product of its operands, including 1-bit overpacked placements."""
+    cfg = best_packing(profile, w, a, kernel_len=1)
+    if cfg.separated:
+        return
+    kp = _kernel_cfg_to_bitpack(cfg)
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, 2**kp.d_bits, kp.n_d)
+    e = rng.integers(0, 2**kp.e_bits, kp.n_e)
+    prod = bp.kernel_pack_multiply(kp, d.tolist(), e.tolist())
+    got = bp.kernel_pack_decode(kp, prod, d.tolist(), e.tolist())
+    assert np.array_equal(got, np.outer(d, e))
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    w=st.integers(2, 8),
+    a=st.integers(2, 8),
+    K=st.sampled_from([1, 3, 5, 7]),
+    N=st.integers(3, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_filter_packing_conv_exact(w, a, K, N, seed):
+    """Filter Packing with sub-task division reproduces np.convolve exactly."""
+    cfg = best_packing(DSP48E2, w, a, kernel_len=K, seq_len=32)
+    if cfg.separated or cfg.strategy != "filter":
+        return
+    fp = bp.FilterPacked(w, a, cfg.n_w, cfg.n_a, cfg.stride, cfg.overlap)
+    rng = np.random.default_rng(seed)
+    f = rng.integers(0, 2**w, K)
+    s = rng.integers(0, 2**a, N)
+    got = bp.conv1d_via_filter_packing(fp, f.tolist(), s.tolist())
+    assert np.array_equal(got, np.convolve(f, s))
+
+
+@settings(max_examples=60, deadline=None)
+@given(w=st.integers(2, 6), a=st.integers(2, 6), seed=st.integers(0, 2**31 - 1))
+def test_predecode_channel_accumulation(w, a, seed):
+    """E_g guard headroom supports exact pre-decode accumulation (Eq. 4)."""
+    cfg = best_packing(DSP48E2, w, a, kernel_len=3, seq_len=32, method="no_enhance")
+    if cfg.strategy != "filter":
+        return
+    fp = bp.FilterPacked(w, a, cfg.n_w, cfg.n_a, cfg.stride, cfg.overlap)
+    C = min(fp.accum_headroom, 8)
+    if C < 2:
+        return
+    rng = np.random.default_rng(seed)
+    f = rng.integers(0, 2**w, (C, 3))
+    s = rng.integers(0, 2**a, (C, 12))
+    got = bp.conv1d_via_filter_packing(
+        fp,
+        f[0].tolist(),
+        s[0].tolist(),
+        accumulate_channels=[(f[c].tolist(), s[c].tolist()) for c in range(1, C)],
+    )
+    want = sum(np.convolve(f[c], s[c]) for c in range(C))
+    assert np.array_equal(got, want)
+
+
+def test_operand_separation_exact():
+    """Eq. 5: hi/lo split recombines to the exact full-width product."""
+    rng = np.random.default_rng(3)
+    for bits in (5, 6, 7, 8):
+        v = int(rng.integers(0, 2**bits))
+        hi, lo, lo_bits = bp.separate_operand(v, bits)
+        assert v == (hi << lo_bits) + lo
+        assert hi < 2 ** (bits - lo_bits) and lo < 2**lo_bits
+
+
+# ---------------------------------------------------------------------------
+# Known anchor points from the paper / vendor white papers
+# ---------------------------------------------------------------------------
+
+
+def test_anchor_xilinx_int8():
+    assert best_packing(DSP48E2, 8, 8, kernel_len=1, method="xilinx").t_mul >= 2
+
+
+def test_anchor_xilinx_int4():
+    assert best_packing(DSP48E2, 4, 4, kernel_len=1, method="xilinx").t_mul >= 4
+
+
+def test_anchor_ismart_w4a4_6x():
+    """iSmart (DAC-SDC'21 2nd) packs 6 muls/DSP at w4a4 on 3x3 convs."""
+    assert best_packing(DSP48E2, 4, 4, kernel_len=3).t_mul >= 6
+
+
+def test_anchor_ultra_low_12x():
+    """The paper packs 12 muls/DSP at ultra-low width (§VII-C)."""
+    assert best_packing(DSP48E2, 2, 2, kernel_len=3).t_mul >= 12
+
+
+def test_mixq_dominates_baselines():
+    """Fig. 4: the optimizer never loses a cell to HiKonv or vendor packing."""
+    for k in (1, 3, 5):
+        ours = build_lut(DSP48E2, kernel_len=k, seq_len=32, method="mixq")
+        for baseline_method in ("hikonv", "xilinx"):
+            base = build_lut(DSP48E2, kernel_len=k, seq_len=32, method=baseline_method)
+            cmp = compare_luts(ours, base)
+            assert cmp["worse"] == 0, (k, baseline_method, cmp)
+            assert cmp["better"] > 0, (k, baseline_method)
+
+
+def test_enhancements_strictly_help_somewhere():
+    """Overpacking + separation improve at least one cell vs plain mixed."""
+    ours = build_lut(DSP48E2, kernel_len=3, seq_len=32, method="mixq")
+    plain = build_lut(DSP48E2, kernel_len=3, seq_len=32, method="no_enhance")
+    cmp = compare_luts(ours, plain)
+    assert cmp["worse"] == 0
+    assert cmp["better"] > 0
+
+
+def test_lut_roundtrip(tmp_path):
+    lut = build_lut(DSP48E2, kernel_len=3, seq_len=32)
+    path = tmp_path / "lut.json"
+    lut.save(path)
+    loaded = type(lut).load(path)
+    assert loaded.table == lut.table
+
+
+def test_tpu_profile_feasible_everywhere():
+    """TPU-native lane profiles must yield a config for every (w, a)."""
+    for prof in (TPU_VPU15,):
+        lut = build_lut(prof, kernel_len=3, seq_len=32)
+        for (w, a), cfg in lut.table.items():
+            assert cfg.t_mul >= 1.0
