@@ -1,5 +1,16 @@
-"""Pallas kernel micro-bench: call time (interpret mode on CPU) + packing
-throughput factor vs the unpacked integer path."""
+"""Pallas kernel micro-bench.
+
+Two layers of measurement:
+
+  * ``run()`` — the legacy one-row-per-kernel CSV sweep (call time in the
+    backend-detected execution mode + packing density factors).
+  * ``run_prepack()`` / ``run_blocking()`` — the perf-trajectory benches
+    added with the K-blocked pipeline: prepacked vs repack-per-call
+    ``packed_dense`` and blocked vs unblocked K reduction, at multiple
+    (M, K, N) shapes.  ``collect()`` bundles everything into the
+    ``BENCH_kernels.json`` payload that ``benchmarks/run.py`` writes, so
+    kernel perf is recorded PR over PR.
+"""
 from __future__ import annotations
 
 import time
@@ -7,17 +18,135 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.packed_matmul.ops import choose_config, packed_dense, packed_dense_reference
+from repro.kernels.common import default_interpret
 from repro.kernels.filter_conv.ops import choose_filter_config, packed_conv1d
+from repro.kernels.packed_matmul.ops import (
+    choose_config,
+    packed_dense,
+    packed_dense_reference,
+    prepack_dense,
+)
 from repro.kernels.quant_matmul.ops import quant_dense
 
+# (M, K, N) sweep; the first entry is the acceptance-gate shape
+PREPACK_SHAPES = [(64, 256, 128), (128, 512, 256), (8, 1024, 512)]
+# mixed-precision pairs for the prepack gate: w4a4 (densest placement,
+# acc_chunk=9 -> peel-bound), w3a4 (acc_chunk=39) and w2a4 (acc_chunk=182
+# -> dot-bound, the paper's ultra-low-weight-width serving regime)
+PREPACK_BITS = [(4, 4), (3, 4), (2, 4)]
+BLOCK_K_SWEEP = (64, 128, 256, 1 << 30)  # 1<<30 => single K step (unblocked)
 
-def _time(fn, *args, reps=3) -> float:
-    fn(*args)  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+
+def _time(fn, *args, reps: int = 5) -> float:
+    jax.block_until_ready(fn(*args))  # compile
+    best = float("inf")
+    for _ in range(3):  # best-of-3 beats one noisy mean on shared CI
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(*args))
+        best = min(best, (time.perf_counter() - t0) / reps)
+    return best * 1e6
+
+
+def _time_pair(fns: dict, reps: int = 12, rounds: int = 10) -> dict:
+    """Interleaved best-of-rounds timing for A/B comparisons.
+
+    Sequential best-of-N is not trustworthy on shared 2-core CI boxes —
+    CPU frequency drifts over a process's lifetime, so whichever variant
+    runs second eats the throttle.  Alternating rounds expose both
+    variants to the same drift; min-over-rounds removes it.
+    """
+    for fn in fns.values():
+        jax.block_until_ready(fn())  # compile everything first
+    best = {name: float("inf") for name in fns}
+    for _ in range(rounds):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn())
+            best[name] = min(best[name], (time.perf_counter() - t0) / reps)
+    return {name: v * 1e6 for name, v in best.items()}
+
+
+def _case(m, k, n, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.uniform(kx, (m, k)), jax.random.normal(kw, (k, n))
+
+
+def run_prepack(shapes=None) -> list[dict]:
+    """Prepacked vs repack-per-call packed_dense across (M, K, N) shapes."""
+    out = []
+    from benchmarks.seed_baseline import seed_packed_dense
+
+    for m, k, n in shapes or PREPACK_SHAPES:
+        for wb, ab in PREPACK_BITS:
+            x, w = _case(m, k, n)
+            pre = prepack_dense(w, w_bits=wb, a_bits=ab)
+            timed = _time_pair(
+                {
+                    # "before": the seed's repack-every-call path
+                    "seed": lambda: seed_packed_dense(x, w, w_bits=wb, a_bits=ab),
+                    # new kernel, but still repacking per call
+                    "repack": lambda: packed_dense(x, w, w_bits=wb, a_bits=ab),
+                    # "after": prepack once, kernel-only per call
+                    "pre": lambda: packed_dense(x, pre),
+                }
+            )
+            out.append(
+                {
+                    "m": m, "k": k, "n": n, "w_bits": wb, "a_bits": ab,
+                    "us_seed_baseline": round(timed["seed"], 1),
+                    "us_repack_per_call": round(timed["repack"], 1),
+                    "us_prepacked": round(timed["pre"], 1),
+                    "speedup_vs_seed": round(timed["seed"] / timed["pre"], 2),
+                    "speedup_vs_repack": round(timed["repack"] / timed["pre"], 2),
+                }
+            )
+    return out
+
+
+def run_blocking(wb: int = 4, ab: int = 4, shapes=None) -> list[dict]:
+    """K-blocked vs unblocked reduction, packed and int8 kernels.
+
+    The packed rows time ``packed_matmul_raw`` on pre-quantized levels so
+    only the K-blocking varies (``packed_dense``'s prepacked path would
+    switch to the fused quantize+matmul kernel at ``block_k >= K`` and
+    confound the comparison).
+    """
+    import functools
+
+    from repro.core.quant import act_to_int_levels
+    from repro.kernels.packed_matmul.kernel import packed_matmul_raw
+
+    out = []
+    for m, k, n in shapes or PREPACK_SHAPES:
+        x, w = _case(m, k, n)
+        cfg = choose_config(wb, ab)
+        pre = prepack_dense(w, w_bits=wb, a_bits=ab)
+        a_lvl = act_to_int_levels(x, ab)[0].astype(jnp.int32)
+        for bk in BLOCK_K_SWEEP:
+            label = "unblocked" if bk >= k else f"block_k={bk}"
+            raw = jax.jit(
+                functools.partial(
+                    packed_matmul_raw, n_seg=cfg.n_seg, stride=cfg.stride,
+                    acc_chunk=cfg.acc_chunk, block_k=bk,
+                )
+            )
+            out.append(
+                {
+                    "kernel": "packed_matmul", "m": m, "k": k, "n": n,
+                    "block_k": min(bk, k), "variant": label,
+                    "us": round(_time(lambda: raw(a_lvl, pre.w_packed)), 1),
+                }
+            )
+            out.append(
+                {
+                    "kernel": "quant_matmul", "m": m, "k": k, "n": n,
+                    "block_k": min(bk, k), "variant": label,
+                    "us": round(_time(lambda: quant_dense(x, w, block_k=bk)), 1),
+                }
+            )
+    return out
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -30,7 +159,13 @@ def run() -> list[tuple[str, float, str]]:
         cfg = choose_config(wb, ab)
         rows.append(
             (f"kernel_packed_matmul_w{wb}a{ab}", us,
-             f"n_seg={cfg['n_seg']};acc_chunk={cfg['acc_chunk']};muls_per_int_mul={cfg['n_seg']}")
+             f"n_seg={cfg.n_seg};acc_chunk={cfg.acc_chunk};muls_per_int_mul={cfg.n_seg}")
+        )
+        pre = prepack_dense(w, w_bits=wb, a_bits=ab)
+        us_pre = _time(lambda: packed_dense(x, pre))
+        rows.append(
+            (f"kernel_packed_matmul_w{wb}a{ab}_prepacked", us_pre,
+             f"speedup_vs_repack={us / us_pre:.2f}x")
         )
     s = jnp.asarray(jax.random.randint(key, (8, 16, 64), 0, 4), jnp.int32)
     f = jnp.asarray(jax.random.randint(key, (16, 3), 0, 4), jnp.int32)
@@ -38,13 +173,44 @@ def run() -> list[tuple[str, float, str]]:
     fc = choose_filter_config(2, 2, 3)
     rows.append(
         ("kernel_filter_conv_w2a2", us,
-         f"k_p={fc['k_p']};n_p={fc['n_p']};coeffs_per_mul={fc['k_p']+fc['n_p']-1}")
+         f"k_p={fc.k_p};n_p={fc.n_p};coeffs_per_mul={fc.k_p + fc.n_p - 1}")
     )
     us = _time(lambda: quant_dense(x, w))
     rows.append(("kernel_quant_matmul_w8a8", us, "int8_mxu_path"))
     return rows
 
 
+def collect(smoke: bool = False) -> dict:
+    """Full payload for BENCH_kernels.json."""
+    shapes = PREPACK_SHAPES[:1] if smoke else PREPACK_SHAPES
+    return {
+        "schema": "kernel_bench.v2",
+        "smoke": smoke,  # reduced sweep: do not commit over a full run
+        "backend": jax.default_backend(),
+        "interpret": default_interpret(),
+        "notes": (
+            "interpret-mode (CPU emulation) timings; on shared 2-core CI "
+            "boxes absolute us drift +/-30% between processes even with "
+            "interleaved best-of-rounds timing — compare ratios, and "
+            "expect the prepack win to grow on real TPU where the packed "
+            "dot is hardware-fast and per-call weight requantization is "
+            "relatively costlier"
+        ),
+        "prepack": run_prepack(shapes=shapes),
+        "k_blocking": run_blocking(shapes=shapes),
+        "kernels": [
+            {"name": name, "us_per_call": round(us, 1), "derived": derived}
+            for name, us, derived in run()
+        ],
+    }
+
+
 if __name__ == "__main__":
     for name, us, derived in run():
         print(f"{name},{us:.1f},{derived}")
+    for row in run_prepack():
+        print(
+            f"prepack_w{row['w_bits']}a{row['a_bits']}"
+            f"_m{row['m']}k{row['k']}n{row['n']},{row['us_prepacked']},"
+            f"speedup_vs_seed={row['speedup_vs_seed']}x"
+        )

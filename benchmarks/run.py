@@ -1,53 +1,101 @@
 """Benchmark driver: one entry per paper table/figure + kernels + roofline.
 
-Prints ``name,us_per_call,derived`` CSV rows (one per artifact) and
-caches heavyweight results under artifacts/.
+Prints ``name,us_per_call,derived`` CSV rows (one per artifact), caches
+heavyweight results under artifacts/, and always writes the kernel perf
+trajectory to ``BENCH_kernels.json`` at the repo root (committed PR over
+PR so regressions are visible in review).
+
+  python benchmarks/run.py            # full sweep
+  python benchmarks/run.py --smoke    # kernels only, one shape (CI)
 """
 from __future__ import annotations
 
+import argparse
+import json
+import pathlib
 import sys
 import traceback
 
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(_ROOT) not in sys.path:  # support `python benchmarks/run.py`
+    sys.path.insert(0, str(_ROOT))
 
-def main() -> None:
-    from benchmarks import comparison, deployment, kernel_bench, nas_pareto, packing_efficiency
+BENCH_JSON = _ROOT / "BENCH_kernels.json"
+BENCH_JSON_SMOKE = _ROOT / "BENCH_kernels_smoke.json"  # never the committed file
 
-    suites = [
-        ("fig4", packing_efficiency.run),
-        ("fig5+6", nas_pareto.run),
-        ("table1", deployment.run),
-        ("table2", comparison.run),
-        ("kernels", kernel_bench.run),
-    ]
-    print("name,us_per_call,derived")
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="kernel benches only, first shape only (fast CI artifact)",
+    )
+    args = ap.parse_args(argv)
+
+    from benchmarks import kernel_bench
+
     failures = 0
-    for label, fn in suites:
-        try:
-            for name, us, derived in fn():
-                print(f"{name},{us:.1f},{derived}")
-        except Exception as e:  # noqa: BLE001
-            failures += 1
-            print(f"{label},-1,FAILED:{type(e).__name__}:{e}")
-            traceback.print_exc(limit=3, file=sys.stderr)
+    print("name,us_per_call,derived")
 
-    # roofline summary (requires dry-run artifacts)
+    if not args.smoke:
+        from benchmarks import comparison, deployment, nas_pareto, packing_efficiency
+
+        suites = [
+            ("fig4", packing_efficiency.run),
+            ("fig5+6", nas_pareto.run),
+            ("table1", deployment.run),
+            ("table2", comparison.run),
+        ]
+        for label, fn in suites:
+            try:
+                for name, us, derived in fn():
+                    print(f"{name},{us:.1f},{derived}")
+            except Exception as e:  # noqa: BLE001
+                failures += 1
+                print(f"{label},-1,FAILED:{type(e).__name__}:{e}")
+                traceback.print_exc(limit=3, file=sys.stderr)
+
+    # kernel suite + BENCH_kernels.json (smoke and full both record it)
     try:
-        from benchmarks import roofline
-
-        rows = roofline.load_all("single")
-        if rows:
-            worst = min(rows, key=lambda r: r["roofline_fraction"])
-            best = max(rows, key=lambda r: r["roofline_fraction"])
+        payload = kernel_bench.collect(smoke=args.smoke)
+        for row in payload["kernels"]:
+            print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+        for row in payload["prepack"]:
             print(
-                f"roofline_summary,0.0,cells={len(rows)};"
-                f"best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f};"
-                f"worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
+                f"prepack_w{row['w_bits']}a{row['a_bits']}"
+                f"_m{row['m']}k{row['k']}n{row['n']},{row['us_prepacked']},"
+                f"seed={row['us_seed_baseline']};repack={row['us_repack_per_call']};"
+                f"speedup_vs_seed={row['speedup_vs_seed']}x"
             )
-        else:
-            print("roofline_summary,0.0,no_dryrun_artifacts_yet")
+        # smoke runs land in a sibling file so the committed full-sweep
+        # trajectory can't be clobbered by the CI command run locally
+        target = BENCH_JSON_SMOKE if args.smoke else BENCH_JSON
+        target.write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"bench_json,0.0,written={target.name}")
     except Exception as e:  # noqa: BLE001
         failures += 1
-        print(f"roofline,-1,FAILED:{type(e).__name__}:{e}")
+        print(f"kernels,-1,FAILED:{type(e).__name__}:{e}")
+        traceback.print_exc(limit=3, file=sys.stderr)
+
+    if not args.smoke:
+        # roofline summary (requires dry-run artifacts)
+        try:
+            from benchmarks import roofline
+
+            rows = roofline.load_all("single")
+            if rows:
+                worst = min(rows, key=lambda r: r["roofline_fraction"])
+                best = max(rows, key=lambda r: r["roofline_fraction"])
+                print(
+                    f"roofline_summary,0.0,cells={len(rows)};"
+                    f"best={best['arch']}/{best['shape']}={best['roofline_fraction']:.3f};"
+                    f"worst={worst['arch']}/{worst['shape']}={worst['roofline_fraction']:.3f}"
+                )
+            else:
+                print("roofline_summary,0.0,no_dryrun_artifacts_yet")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"roofline,-1,FAILED:{type(e).__name__}:{e}")
 
     if failures:
         raise SystemExit(1)

@@ -1,0 +1,105 @@
+"""Frozen "before" reference for the packed-matmul perf trajectory.
+
+This is a faithful copy of the seed revision's ``packed_dense`` hot path
+(PR 0), kept ONLY as the baseline that ``kernel_bench``/BENCH_kernels.json
+measure against, so before/after numbers stay comparable as the real
+kernels evolve:
+
+  * trace-time-unrolled K loop over full-K VMEM blocks (2-D grid),
+  * per-segment ``acc.at[d].add`` peel with shift+mask,
+  * power-of-two accumulation cadence ``acc_chunk = 2**e_g``,
+  * weight levels re-derived and re-packed on every call,
+  * hardwired ``interpret=True``.
+
+Do not "fix" or optimize this module; it is the yardstick.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packing import TPU_VPU15, kernel_placements
+from repro.core.quant import act_to_int_levels, weight_to_int_levels
+from repro.kernels.packed_matmul import ref
+
+
+@functools.lru_cache(maxsize=None)
+def seed_choose_config(w_bits: int, a_bits: int, min_chunk: int = 4):
+    best = None
+    for cfg in kernel_placements(TPU_VPU15, w_bits, a_bits, allow_overpack=False):
+        if cfg.n_a != 1:
+            continue
+        headroom = 1 << max(0, cfg.stride - (w_bits + a_bits))
+        if headroom < min_chunk and cfg.n_w > 1:
+            continue
+        score = (cfg.n_w, headroom)
+        if best is None or score > best[0]:
+            best = (score, cfg, headroom)
+    if best is None or best[1].n_w == 1:
+        return None
+    _, cfg, headroom = best
+    return {"n_seg": cfg.n_w, "stride": cfg.stride, "acc_chunk": int(headroom)}
+
+
+def _seed_kernel(a_ref, wp_ref, o_ref, *, n_seg, stride, acc_chunk, k_total):
+    bm = a_ref.shape[0]
+    bnp = wp_ref.shape[1]
+    mask = (1 << stride) - 1
+    acc = jnp.zeros((n_seg, bm, bnp), jnp.int32)
+    n_chunks = -(-k_total // acc_chunk)
+    for c in range(n_chunks):
+        k0 = c * acc_chunk
+        k1 = min(k0 + acc_chunk, k_total)
+        part = jax.lax.dot_general(
+            a_ref[:, k0:k1], wp_ref[k0:k1, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        for d in range(n_seg):
+            seg = jax.lax.shift_right_logical(part, d * stride) & mask
+            acc = acc.at[d].add(seg)
+    out = jnp.stack([acc[d] for d in range(n_seg)], axis=-1).reshape(bm, bnp * n_seg)
+    o_ref[...] = out
+
+
+def seed_packed_matmul_raw(a_lvl, w_packed, *, n_seg, stride, acc_chunk,
+                           block_m=128, block_n=128, interpret=True):
+    m, k = a_lvl.shape
+    _, np_ = w_packed.shape
+    bm = min(block_m, m)
+    bnp = min(block_n // n_seg if block_n >= n_seg else 1, np_)
+    grid = (-(-m // bm), -(-np_ // bnp))
+    kernel = functools.partial(
+        _seed_kernel, n_seg=n_seg, stride=stride, acc_chunk=acc_chunk, k_total=k
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bnp), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bnp * n_seg), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0] * bm, grid[1] * bnp * n_seg), jnp.int32),
+        interpret=interpret,
+    )(a_lvl, w_packed)[:m, : np_ * n_seg]
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "a_bits"))
+def seed_packed_dense(x, w, *, w_bits, a_bits):
+    """The seed's repack-every-call quantized dense layer (the 'before')."""
+    cfg = seed_choose_config(w_bits, a_bits)
+    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
+    a_lvl, a_scale = act_to_int_levels(x, a_bits)
+    n = w.shape[1]
+    if cfg is None or n % cfg["n_seg"] != 0:
+        acc = ref.matmul_levels(a_lvl, w_lvl)
+    else:
+        wp = ref.pack_weights(w_lvl, cfg["n_seg"], cfg["stride"])
+        acc = seed_packed_matmul_raw(
+            a_lvl.astype(jnp.int32), wp,
+            n_seg=cfg["n_seg"], stride=cfg["stride"], acc_chunk=cfg["acc_chunk"],
+        )
+    return ref.dequantize(acc, jnp.sum(a_lvl, axis=1), w_scale, w_zero, a_scale)

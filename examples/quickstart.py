@@ -54,4 +54,10 @@ w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
 got = packed_dense(x, w, w_bits=2, a_bits=2)
 want = packed_dense_reference(x, w, w_bits=2, a_bits=2)
 print(f"  w2a2 packed matmul exact vs oracle: {np.array_equal(np.asarray(got), np.asarray(want))}")
+# serving fast path: pack the weights once, then call with the packed params
+from repro.kernels.packed_matmul.ops import prepack_dense
+
+pre = prepack_dense(w, w_bits=2, a_bits=2)
+got_pre = packed_dense(x, pre)
+print(f"  prepacked fast path exact: {np.array_equal(np.asarray(got_pre), np.asarray(want))}")
 print("quickstart complete.")

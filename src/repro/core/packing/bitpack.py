@@ -82,10 +82,10 @@ def decode_segments(
     out = []
     p = packed
     for k in range(num_segments):
-        if overlap == 0 or k == num_segments - 1:
-            val = p & mask if k < num_segments - 1 else p
-            if k == num_segments - 1:
-                val = p  # last segment keeps all remaining bits
+        if k == num_segments - 1:
+            val = p  # last segment keeps all remaining bits
+        elif overlap == 0:
+            val = p & mask
         else:
             if true_lsbs is None:
                 raise ValueError("overpacked decode requires true_lsbs")

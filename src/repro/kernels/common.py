@@ -1,0 +1,37 @@
+"""Shared plumbing for the Pallas kernel wrappers.
+
+``interpret`` is backend-detected by default: compiled Mosaic on TPU,
+interpreter mode everywhere else (CPU unit tests, CI).  Callers can
+still force either mode explicitly — the wrappers treat ``None`` as
+"ask the backend".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True when Pallas must run in interpreter mode (no TPU backend)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Map the wrappers' ``interpret=None`` default to the backend choice."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def pad_to(x: jax.Array, *target: int) -> jax.Array:
+    """Zero-pad a 2-D array up to ``target`` shape (no-op when aligned).
+
+    The K-blocked kernels require fully in-bounds blocks; zero padding is
+    semantics-preserving for every kernel here because a zero level
+    contributes nothing to any accumulator segment.
+    """
+    pads = [(0, t - s) for s, t in zip(x.shape, target)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)

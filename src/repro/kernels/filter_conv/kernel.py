@@ -84,9 +84,12 @@ def filter_conv_raw(
     k_len: int,
     n_len: int,
     block_b: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Full convolution summed over channels: [B, n_len + k_len - 1] int32."""
+    from repro.kernels.common import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     b, c, n_pad = s_lvl.shape
     bb = min(block_b, b)
     grid = (-(-b // bb),)

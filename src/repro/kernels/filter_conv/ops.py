@@ -5,18 +5,29 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.packing import TPU_VPU15, filter_placements
+from repro.kernels.common import resolve_interpret
 
 from . import ref
 from .kernel import filter_conv_raw
 
 
+class FilterConfig(NamedTuple):
+    """Frozen filter-placement choice (immutable: safe to cache/share)."""
+
+    k_p: int
+    n_p: int
+    stride: int
+    acc_chunk: int
+
+
 @functools.lru_cache(maxsize=None)
-def choose_filter_config(w_bits: int, a_bits: int, k_len: int):
+def choose_filter_config(w_bits: int, a_bits: int, k_len: int) -> FilterConfig | None:
     """Best no-overpack filter placement whose packed accumulator fits int32.
 
     Maximizes t_mul * min(channel-chunk, 4) so a little pre-decode
@@ -38,12 +49,9 @@ def choose_filter_config(w_bits: int, a_bits: int, k_len: int):
     if best is None:
         return None
     _, cfg, acc = best
-    return {
-        "k_p": cfg.n_w,
-        "n_p": cfg.n_a,
-        "stride": cfg.stride,
-        "acc_chunk": int(max(1, acc)),
-    }
+    return FilterConfig(
+        k_p=cfg.n_w, n_p=cfg.n_a, stride=cfg.stride, acc_chunk=int(max(1, acc))
+    )
 
 
 def _ceil_log2(x: int) -> int:
@@ -51,36 +59,49 @@ def _ceil_log2(x: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret"))
+def _packed_conv1d(
+    s_lvl: jax.Array,
+    f_lvl: jax.Array,
+    *,
+    w_bits: int,
+    a_bits: int,
+    interpret: bool,
+) -> jax.Array:
+    b, c, n = s_lvl.shape
+    k = f_lvl.shape[1]
+    cfg = choose_filter_config(w_bits, a_bits, k)
+    if cfg is None or cfg.k_p * cfg.n_p <= 1:
+        return ref.conv_full_levels(f_lvl, s_lvl)
+    n_p = cfg.n_p
+    n_pad = -(-n // n_p) * n_p
+    s = jnp.pad(s_lvl, ((0, 0), (0, 0), (0, n_pad - n))).astype(jnp.int32)
+    fp = ref.pack_filter(f_lvl.astype(jnp.int32), cfg.k_p, cfg.stride)
+    return filter_conv_raw(
+        s,
+        fp,
+        k_p=cfg.k_p,
+        n_p=n_p,
+        stride=cfg.stride,
+        acc_chunk=cfg.acc_chunk,
+        k_len=k,
+        n_len=n,
+        interpret=interpret,
+    )
+
+
 def packed_conv1d(
     s_lvl: jax.Array,  # [B, C, N] int32 unsigned levels (< 2**a_bits)
     f_lvl: jax.Array,  # [C, K]    int32 unsigned levels (< 2**w_bits)
     *,
     w_bits: int,
     a_bits: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Full convolution summed over channels: [B, N+K-1] int32.
 
     Bit-exact vs :func:`ref.conv_full_levels`; falls back to the jnp path
     when no int32-safe placement exists for (w_bits, a_bits).
     """
-    b, c, n = s_lvl.shape
-    k = f_lvl.shape[1]
-    cfg = choose_filter_config(w_bits, a_bits, k)
-    if cfg is None or cfg["k_p"] * cfg["n_p"] <= 1:
-        return ref.conv_full_levels(f_lvl, s_lvl)
-    n_p = cfg["n_p"]
-    n_pad = -(-n // n_p) * n_p
-    s = jnp.pad(s_lvl, ((0, 0), (0, 0), (0, n_pad - n))).astype(jnp.int32)
-    fp = ref.pack_filter(f_lvl.astype(jnp.int32), cfg["k_p"], cfg["stride"])
-    return filter_conv_raw(
-        s,
-        fp,
-        k_p=cfg["k_p"],
-        n_p=n_p,
-        stride=cfg["stride"],
-        acc_chunk=cfg["acc_chunk"],
-        k_len=k,
-        n_len=n,
-        interpret=interpret,
+    return _packed_conv1d(
+        s_lvl, f_lvl, w_bits=w_bits, a_bits=a_bits, interpret=resolve_interpret(interpret)
     )

@@ -10,11 +10,41 @@ segment sum stays decodable for ``acc_chunk = 2**e_g`` accumulations
 (the guard-bit headroom of Eq. 4), after which segments are peeled into
 int32 accumulators.
 
-Blocking: [bm, K] x [K, bn_packed] tiles in VMEM; the M/N grid is
-hardware-aligned (bn_packed * n_seg is a multiple of the 128-lane VPU
-width whenever the caller's N is).  The K loop lives inside the kernel
-so the packed->decoded accumulation cadence (every ``acc_chunk`` steps)
-never leaves VMEM.
+## Performance
+
+The reduction runs on a 3-D ``(m, n, k)`` grid with the K axis
+innermost, so one ``[bm, bk] x [bk, bnp]`` tile pair is resident in VMEM
+per step instead of the whole K dimension, and the grid-level pipeline
+overlaps the next tile's DMA with the current tile's compute.  A VMEM
+scratch accumulator of shape ``[n_seg, bm, bnp]`` carries the peeled
+per-segment sums across K steps: it is zeroed when ``k == 0`` (the
+first visit to an output tile — output revisiting is only legal because
+the K grid axis is sequential) and interleaved back to channel order
+into the output tile on the last K step.  When the whole K reduction
+fits one step (``grid_k == 1``, the common serve case) a scratch-free
+kernel body writes the output tile directly.
+
+Within a K step the packed->peel cadence is preserved: the tile is
+reduced in ``acc_chunk``-column sub-chunks (the Eq. 4 guard-bit bound on
+pre-decode accumulation).  The peel has two formulations, chosen
+statically per backend:
+
+  * compiled TPU (``interpret=False``): one broadcasted
+    ``shift_right_logical`` of the chunk product against a
+    ``[n_seg, 1, 1]`` shift vector — a single VPU op peels every
+    segment, instead of ``n_seg`` serial scatter-adds;
+  * interpret mode (CPU emulation): an unrolled per-segment
+    shift+mask+add — measured ~1.8x faster there, because XLA CPU fuses
+    the short unrolled chain better than the materialized
+    ``[n_seg, bm, bnp]`` broadcast.
+
+Both are bit-identical; the property tests cover every placement.
+``block_k=None`` is backend-adaptive: 256 when compiling for TPU (the
+VMEM-residency bound the blocking exists for), whole-K in interpret
+mode, where "VMEM" is host memory and extra grid steps are pure
+overhead (~1.6x at M=8, K=1024 shapes).  The wrapper zero-pads all
+three dimensions up to block multiples, which is exact because zero
+levels contribute nothing to any segment.
 """
 from __future__ import annotations
 
@@ -23,32 +53,139 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(a_ref, wp_ref, o_ref, *, n_seg: int, stride: int, acc_chunk: int, k_total: int):
-    bm = a_ref.shape[0]
+def _peel_chunks(a, wp_ref, *, n_seg: int, stride: int, acc_chunk: int,
+                 broadcast_peel: bool):
+    """Chunked packed dot + segment peel -> [n_seg, bm, bnp] accumulator.
+
+    ``a`` is the loaded [bm, bk] int32 activation tile; ``wp_ref`` the
+    packed-weight block ref (sliced per chunk).
+    """
+    bm, bk = a.shape
     bnp = wp_ref.shape[1]
     mask = (1 << stride) - 1
     acc = jnp.zeros((n_seg, bm, bnp), jnp.int32)
-    n_chunks = -(-k_total // acc_chunk)
-    for c in range(n_chunks):
-        k0 = c * acc_chunk
-        k1 = min(k0 + acc_chunk, k_total)
+    if broadcast_peel:
+        shifts = jnp.broadcast_to(
+            jax.lax.broadcasted_iota(jnp.int32, (n_seg, 1, 1), 0) * stride,
+            (n_seg, bm, bnp),
+        )
+    for c0 in range(0, bk, acc_chunk):
+        c1 = min(c0 + acc_chunk, bk)
         # packed partial dot: every element-wise product carries n_seg
         # low-bit products in disjoint bit segments; the dot's additions
         # stay segment-aligned thanks to the guard-bit headroom.
         part = jax.lax.dot_general(
-            a_ref[:, k0:k1],
-            wp_ref[k0:k1, :],
+            a[:, c0:c1],
+            wp_ref[c0:c1, :],
             (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32,
         )
-        for d in range(n_seg):
-            seg = jax.lax.shift_right_logical(part, d * stride) & mask
-            acc = acc.at[d].add(seg)
-    # interleave segments back into channel order: out[:, j*n_seg + d]
-    out = jnp.stack([acc[d] for d in range(n_seg)], axis=-1).reshape(bm, bnp * n_seg)
-    o_ref[...] = out
+        if broadcast_peel:
+            wide = jnp.broadcast_to(part[None, :, :], (n_seg, bm, bnp))
+            acc = acc + (jax.lax.shift_right_logical(wide, shifts) & mask)
+        else:
+            for d in range(n_seg):
+                seg = jax.lax.shift_right_logical(part, d * stride) & mask
+                acc = acc.at[d].add(seg)
+    return acc
+
+
+def _interleave(acc):
+    """Restore channel order: out[:, j*n_seg + d] = acc[d, :, j]."""
+    n_seg, bm, bnp = acc.shape
+    return jnp.moveaxis(acc, 0, -1).reshape(bm, bnp * n_seg)
+
+
+def _kernel_single_k(a_ref, wp_ref, o_ref, *, n_seg, stride, acc_chunk, broadcast_peel):
+    o_ref[...] = _interleave(
+        _peel_chunks(a_ref[...], wp_ref, n_seg=n_seg, stride=stride,
+                     acc_chunk=acc_chunk, broadcast_peel=broadcast_peel)
+    )
+
+
+def _kernel_blocked(a_ref, wp_ref, o_ref, acc_ref, *, n_seg, stride, acc_chunk,
+                    broadcast_peel):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _peel_chunks(a_ref[...], wp_ref, n_seg=n_seg, stride=stride,
+                                 acc_chunk=acc_chunk, broadcast_peel=broadcast_peel)
+
+    @pl.when(k_idx == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = _interleave(acc_ref[...])
+
+
+def _kernel_fused(x_ref, wp_ref, o_ref, asum_ref, *, a_bits, n_seg, stride,
+                  acc_chunk, broadcast_peel):
+    n_lvl = (1 << a_bits) - 1
+    a = jnp.round(jnp.clip(x_ref[...], 0.0, 1.0) * n_lvl).astype(jnp.int32)
+    acc = _peel_chunks(a, wp_ref, n_seg=n_seg, stride=stride,
+                       acc_chunk=acc_chunk, broadcast_peel=broadcast_peel)
+    o_ref[...] = _interleave(acc)
+    asum_ref[...] = jnp.sum(a, axis=1, keepdims=True)
+
+
+def packed_dense_fused_raw(
+    x: jax.Array,  # [M, K] float activations in [0, 1]
+    w_packed: jax.Array,  # [K, N // n_seg] int32 packed weight levels
+    *,
+    a_bits: int,
+    n_seg: int,
+    stride: int,
+    acc_chunk: int,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Single fused kernel for the prepacked serve path: quantizes the
+    activation tile in-kernel (clip -> round -> levels), runs the packed
+    reduction over the whole K (no K grid — the serving fast path keeps
+    the K tile resident), and also emits the per-row level sums needed by
+    the zero-point fold.  Returns ``(acc [M, N] int32, a_sum [M] int32)``.
+
+    One kernel launch replaces quantize + a_sum + matmul; the activation
+    quantization recomputes per N block, which is free at serve shapes
+    (grid_n == 1 for d_model <= block_n * n_seg).
+    """
+    from repro.kernels.common import pad_to, resolve_interpret
+
+    interpret = resolve_interpret(interpret)
+    m, k = x.shape
+    _, np_ = w_packed.shape
+    bm = min(block_m, m)
+    bnp = min(block_n // n_seg if block_n >= n_seg else 1, np_)
+    grid = (-(-m // bm), -(-np_ // bnp))
+    x = pad_to(x, grid[0] * bm, k)
+    w_packed = pad_to(w_packed, k, grid[1] * bnp)
+    kernel = functools.partial(
+        _kernel_fused, a_bits=a_bits, n_seg=n_seg, stride=stride,
+        acc_chunk=acc_chunk, broadcast_peel=not interpret,
+    )
+    acc, a_sum = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bnp), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bnp * n_seg), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid[0] * bm, grid[1] * bnp * n_seg), jnp.int32),
+            jax.ShapeDtypeStruct((grid[0] * bm, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, w_packed)
+    return acc[:m, : np_ * n_seg], a_sum[:m, 0]
 
 
 def packed_matmul_raw(
@@ -60,25 +197,42 @@ def packed_matmul_raw(
     acc_chunk: int,
     block_m: int = 128,
     block_n: int = 128,
-    interpret: bool = True,
+    block_k: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Integer matmul of levels; returns [M, N] int32 accumulator."""
+    from repro.kernels.common import pad_to, resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     m, k = a_lvl.shape
     _, np_ = w_packed.shape
+    if block_k is None:
+        block_k = k if interpret else 256  # see Performance note
     bm = min(block_m, m)
     bnp = min(block_n // n_seg if block_n >= n_seg else 1, np_)
-    grid = (-(-m // bm), -(-np_ // bnp))
-    kernel = functools.partial(
-        _kernel, n_seg=n_seg, stride=stride, acc_chunk=acc_chunk, k_total=k
+    bk = min(block_k, k)
+    grid = (-(-m // bm), -(-np_ // bnp), -(-k // bk))
+    a_lvl = pad_to(a_lvl, grid[0] * bm, grid[2] * bk)
+    w_packed = pad_to(w_packed, grid[2] * bk, grid[1] * bnp)
+    opts = dict(
+        n_seg=n_seg, stride=stride, acc_chunk=acc_chunk,
+        broadcast_peel=not interpret,
     )
+    if grid[2] == 1:
+        kernel = functools.partial(_kernel_single_k, **opts)
+        scratch = []
+    else:
+        kernel = functools.partial(_kernel_blocked, **opts)
+        scratch = [pltpu.VMEM((n_seg, bm, bnp), jnp.int32)]
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((k, bnp), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bnp), lambda i, j, kk: (kk, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bnp * n_seg), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bm, bnp * n_seg), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((grid[0] * bm, grid[1] * bnp * n_seg), jnp.int32),
+        scratch_shapes=scratch,
         interpret=interpret,
     )(a_lvl, w_packed)[:m, : np_ * n_seg]

@@ -2,33 +2,65 @@
 
 Chooses the packing configuration from the TPU VPU profile LUT (no
 overpacking inside the hardware path — the guard-bit headroom is spent
-on in-segment accumulation instead, ``acc_chunk = 2**e_g``), packs the
-weight levels once, and runs the Pallas kernel.  Falls back to n_seg=1
-when the bit-width combination has no multi-segment placement.
+on in-segment accumulation instead, Eq. 4's exact bound), packs the
+weight levels, and runs the Pallas kernel.  Falls back to n_seg=1 when
+the bit-width combination has no multi-segment placement.
+
+## Performance
+
+Weight packing is a pure function of the trained weights, yet the
+original path re-derived levels and re-packed on **every** forward call.
+:func:`prepack_dense` hoists that work to quantization/load time: it
+returns a :class:`PackedDenseParams` pytree (packed int32 weights +
+scale/zero metadata + the chosen :class:`PackConfig`), and
+:func:`packed_dense` accepts it in place of the float weight matrix,
+entering the kernel directly — per call only the activations are
+quantized.  The serving layers (``repro.models.layers.dense`` and
+``repro.launch.serve``) prepack once at load so the decode loop never
+touches the float weights again.  ``benchmarks/kernel_bench.py``
+records the prepacked vs repack-per-call gap.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.packing import TPU_VPU15, kernel_placements
 from repro.core.quant import act_to_int_levels, weight_to_int_levels
+from repro.kernels.common import resolve_interpret
 
 from . import ref
-from .kernel import packed_matmul_raw
+from .kernel import packed_dense_fused_raw, packed_matmul_raw
+
+
+class PackConfig(NamedTuple):
+    """Frozen kernel-placement choice (immutable: safe to cache/share)."""
+
+    n_seg: int
+    stride: int
+    acc_chunk: int
 
 
 @functools.lru_cache(maxsize=None)
-def choose_config(w_bits: int, a_bits: int, min_chunk: int = 4):
+def choose_config(w_bits: int, a_bits: int, min_chunk: int = 4) -> PackConfig | None:
     """Best no-overpack kernel placement with weights on the packed port
-    and >= min_chunk accumulation headroom."""
+    and >= min_chunk accumulation headroom.
+
+    ``acc_chunk`` uses Eq. 4's exact decodability bound — the largest A
+    with ``A * (2**w - 1) * (2**a - 1) <= 2**stride - 1`` — rather than
+    the power-of-two convenience ``2**e_g`` (e.g. 9 instead of 8 at
+    w4a4/stride 11), which shaves one peel round in eight off the kernel.
+    """
+    max_prod = ((1 << w_bits) - 1) * ((1 << a_bits) - 1)
     best = None
     for cfg in kernel_placements(TPU_VPU15, w_bits, a_bits, allow_overpack=False):
         if cfg.n_a != 1:
             continue  # activations stay scalar per lane; weights pack
-        headroom = 1 << max(0, cfg.stride - (w_bits + a_bits))
+        headroom = max(1, ((1 << cfg.stride) - 1) // max_prod)
         if headroom < min_chunk and cfg.n_w > 1:
             continue
         score = (cfg.n_w, headroom)
@@ -37,37 +69,172 @@ def choose_config(w_bits: int, a_bits: int, min_chunk: int = 4):
     if best is None or best[1].n_w == 1:
         return None  # no profitable packing; caller uses plain int path
     _, cfg, headroom = best
-    return {"n_seg": cfg.n_w, "stride": cfg.stride, "acc_chunk": int(headroom)}
+    return PackConfig(n_seg=cfg.n_w, stride=cfg.stride, acc_chunk=int(headroom))
 
 
-@functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret"))
-def packed_dense(
-    x: jax.Array,  # [M, Kdim] float activations (clipped to [0,1] upstream)
-    w: jax.Array,  # [Kdim, N] float weights
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["w_packed", "w_lvl"],
+    meta_fields=["w_bits", "a_bits", "w_scale", "w_zero", "cfg", "n_out"],
+)
+@dataclasses.dataclass(frozen=True)
+class PackedDenseParams:
+    """One-time-packed serving weights for :func:`packed_dense`.
+
+    Exactly one of ``w_packed`` (multi-segment placement exists and N is
+    divisible by ``cfg.n_seg``) / ``w_lvl`` (plain integer fallback) is
+    set.  Scales and the placement are static metadata so the params can
+    flow through jit/scan without retracing on values.
+    """
+
+    w_packed: jax.Array | None  # [K, N // n_seg] int32 packed levels
+    w_lvl: jax.Array | None  # [K, N] int32 levels (fallback path)
+    w_bits: int
+    a_bits: int
+    w_scale: float
+    w_zero: float
+    cfg: PackConfig | None
+    n_out: int
+
+
+def prepack_dense(w: jax.Array, *, w_bits: int, a_bits: int) -> PackedDenseParams:
+    """Quantize + pack a float weight matrix once, at load time.
+
+    ``w`` may be [K, N] or stacked [L, K, N] (the decode scan's layer
+    axis); stacking maps over layers so level normalization stays
+    per-layer, matching the QAT fake-quant forward.
+    """
+    if w.ndim == 3:
+        return jax.vmap(lambda wl: prepack_dense(wl, w_bits=w_bits, a_bits=a_bits))(w)
+    cfg = choose_config(w_bits, a_bits)
+    n = w.shape[1]
+    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
+    if cfg is None or n % cfg.n_seg != 0:
+        return PackedDenseParams(
+            None, w_lvl.astype(jnp.int32), w_bits, a_bits, w_scale, w_zero, None, n
+        )
+    wp = ref.pack_weights(w_lvl.astype(jnp.int32), cfg.n_seg, cfg.stride)
+    return PackedDenseParams(wp, None, w_bits, a_bits, w_scale, w_zero, cfg, n)
+
+
+@functools.lru_cache(maxsize=None)
+def _prepacked_fn(
+    a_bits: int,
+    w_scale: float,
+    w_zero: float,
+    cfg: PackConfig | None,
+    interpret: bool,
+    block_k: int | None,
+):
+    """Jitted fast path, one closure per static config.
+
+    Takes plain arrays (not the params dataclass) and folds every scalar
+    into the closure: the decode loop hits this dispatch every token, and
+    both flattening a custom pytree node and re-hashing six static
+    kwargs per call cost more than the activation quantization.
+    """
+
+    a_scale = 1.0 / ((1 << a_bits) - 1)
+
+    @jax.jit
+    def run(x: jax.Array, w_data: jax.Array) -> jax.Array:
+        resolved_bk = block_k
+        if resolved_bk is None:
+            resolved_bk = x.shape[1] if interpret else 256
+        if cfg is not None and resolved_bk >= x.shape[1]:
+            # whole-K tile resident: one fused kernel does quantize +
+            # packed reduction + row sums
+            acc, a_sum = packed_dense_fused_raw(
+                x.astype(jnp.float32),
+                w_data,
+                a_bits=a_bits,
+                n_seg=cfg.n_seg,
+                stride=cfg.stride,
+                acc_chunk=cfg.acc_chunk,
+                interpret=interpret,
+            )
+            return ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
+        a_lvl, a_scale_ = act_to_int_levels(x, a_bits)
+        if cfg is None:
+            acc = ref.matmul_levels(a_lvl, w_data)
+        else:
+            acc = packed_matmul_raw(
+                a_lvl.astype(jnp.int32),
+                w_data,
+                n_seg=cfg.n_seg,
+                stride=cfg.stride,
+                acc_chunk=cfg.acc_chunk,
+                block_k=block_k,
+                interpret=interpret,
+            )
+        a_sum = jnp.sum(a_lvl, axis=1)
+        return ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale_)
+
+    return run
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret", "block_k"))
+def _packed_dense_repack(
+    x: jax.Array,
+    w: jax.Array,
     *,
     w_bits: int,
     a_bits: int,
-    interpret: bool = True,
+    interpret: bool,
+    block_k: int | None = None,
 ) -> jax.Array:
-    """Quantized dense layer, bit-exact vs the fake-quant reference."""
+    """Baseline path: quantizes + packs the weights on every call."""
     cfg = choose_config(w_bits, a_bits)
     w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
     a_lvl, a_scale = act_to_int_levels(x, a_bits)
     n = w.shape[1]
-    if cfg is None or n % cfg["n_seg"] != 0:
+    if cfg is None or n % cfg.n_seg != 0:
         acc = ref.matmul_levels(a_lvl, w_lvl)
     else:
-        wp = ref.pack_weights(w_lvl, cfg["n_seg"], cfg["stride"])
+        wp = ref.pack_weights(w_lvl, cfg.n_seg, cfg.stride)
         acc = packed_matmul_raw(
             a_lvl.astype(jnp.int32),
             wp,
-            n_seg=cfg["n_seg"],
-            stride=cfg["stride"],
-            acc_chunk=cfg["acc_chunk"],
+            n_seg=cfg.n_seg,
+            stride=cfg.stride,
+            acc_chunk=cfg.acc_chunk,
+            block_k=block_k,
             interpret=interpret,
         )
     a_sum = jnp.sum(a_lvl, axis=1)
     return ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
+
+
+def packed_dense(
+    x: jax.Array,  # [M, Kdim] float activations (clipped to [0,1] upstream)
+    w: jax.Array | PackedDenseParams,  # [Kdim, N] float weights, or prepacked
+    *,
+    w_bits: int | None = None,
+    a_bits: int | None = None,
+    interpret: bool | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Quantized dense layer, bit-exact vs the fake-quant reference.
+
+    Pass the float weight matrix plus (w_bits, a_bits) for the
+    repack-per-call baseline, or a :class:`PackedDenseParams` from
+    :func:`prepack_dense` for the serving fast path.
+    """
+    if isinstance(w, PackedDenseParams):
+        fn = _prepacked_fn(
+            w.a_bits, w.w_scale, w.w_zero, w.cfg, resolve_interpret(interpret), block_k
+        )
+        return fn(x, w.w_packed if w.cfg is not None else w.w_lvl)
+    if w_bits is None or a_bits is None:
+        raise TypeError("packed_dense with float weights requires w_bits and a_bits")
+    return _packed_dense_repack(
+        x,
+        w,
+        w_bits=w_bits,
+        a_bits=a_bits,
+        interpret=resolve_interpret(interpret),
+        block_k=block_k,
+    )
 
 
 def packed_dense_reference(x, w, *, w_bits, a_bits):

@@ -3,37 +3,57 @@
 This is the production inference kernel for NAS-selected layers once
 their bit-widths are rounded up to the MXU's native int8 lane: weights
 are stored as int8 levels with per-output-channel scales, activations as
-int8 with one scale.  The MXU consumes int8 x int8 -> int32 directly;
-blocks are 128-aligned to the MXU systolic dimensions, the K reduction
-runs inside the kernel over VMEM-resident [bm, K] x [K, bn] tiles in
-block_k steps, and the float rescale happens once per output tile.
+int8 with one scale.  The MXU consumes int8 x int8 -> int32 directly,
+and the float rescale happens once per output tile.
 
 (The sub-4-bit segment-packing path lives in kernels/packed_matmul;
 this kernel is the >=4-bit fast path the customization stage assigns to
 MXU 'DSP-equivalents'.)
+
+## Performance
+
+The reduction runs on a 3-D ``(m, n, k)`` grid with K innermost: each
+step holds one ``[bm, bk] x [bk, bn]`` tile pair in VMEM (not the full
+K dimension), letting the grid pipeline stream K tiles while the MXU
+consumes the previous pair.  An int32 VMEM scratch tile carries the
+partial accumulator across K steps — zeroed on the first visit to an
+output tile (``k == 0``), rescaled to float and written out on the last
+(output revisiting relies on the K axis being sequential).  When the
+whole reduction fits one K step (``grid_k == 1``) a scratch-free body
+writes the rescaled tile directly.  The ops wrapper zero-pads every
+dimension to block multiples (exact: zero levels contribute nothing to
+the dot).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(a_ref, w_ref, ws_ref, o_ref, *, block_k: int, k_total: int):
-    bm = a_ref.shape[0]
-    bn = w_ref.shape[1]
-    acc = jnp.zeros((bm, bn), jnp.int32)
-    for k0 in range(0, k_total, block_k):
-        k1 = min(k0 + block_k, k_total)
-        acc += jax.lax.dot_general(
-            a_ref[:, k0:k1],
-            w_ref[k0:k1, :],
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-    o_ref[...] = acc.astype(jnp.float32) * ws_ref[...]
+def _dot_i32(a, w):
+    return jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _kernel_single_k(a_ref, w_ref, ws_ref, o_ref):
+    o_ref[...] = _dot_i32(a_ref[...], w_ref[...]).astype(jnp.float32) * ws_ref[...]
+
+
+def _kernel_blocked(a_ref, w_ref, ws_ref, o_ref, acc_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _dot_i32(a_ref[...], w_ref[...])
+
+    @pl.when(k_idx == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * ws_ref[...]
 
 
 def quant_matmul_raw(
@@ -43,23 +63,35 @@ def quant_matmul_raw(
     *,
     block_m: int = 128,
     block_n: int = 128,
-    block_k: int = 512,
-    interpret: bool = True,
+    block_k: int | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    from repro.kernels.common import pad_to, resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     m, k = a_i8.shape
     _, n = w_i8.shape
+    if block_k is None:
+        # backend-adaptive: K-blocking bounds VMEM residency on TPU; in
+        # interpret mode extra grid steps are pure overhead
+        block_k = k if interpret else 512
     bm, bn = min(block_m, m), min(block_n, n)
-    grid = (-(-m // bm), -(-n // bn))
-    kernel = functools.partial(_kernel, block_k=min(block_k, k), k_total=k)
+    bk = min(block_k, k)
+    grid = (-(-m // bm), -(-n // bn), -(-k // bk))
+    a_i8 = pad_to(a_i8, grid[0] * bm, grid[2] * bk)
+    w_i8 = pad_to(w_i8, grid[2] * bk, grid[1] * bn)
+    w_scale = pad_to(w_scale, 1, grid[1] * bn)
+    single_k = grid[2] == 1
     return pl.pallas_call(
-        kernel,
+        _kernel_single_k if single_k else _kernel_blocked,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((grid[0] * bm, grid[1] * bn), jnp.float32),
+        scratch_shapes=[] if single_k else [pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a_i8, w_i8, w_scale)[:m, :n]

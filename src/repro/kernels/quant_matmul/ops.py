@@ -4,18 +4,27 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
+
+from repro.kernels.common import resolve_interpret
 
 from . import ref
 from .kernel import quant_matmul_raw
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def quant_dense(x: jax.Array, w: jax.Array, *, interpret: bool = True) -> jax.Array:
-    """W8A8 symmetric quantized dense layer via the Pallas MXU kernel."""
+@functools.partial(jax.jit, static_argnames=("interpret", "block_k"))
+def _quant_dense(x: jax.Array, w: jax.Array, *, interpret: bool, block_k: int | None) -> jax.Array:
     w_i8, w_scale = ref.quantize_symmetric(w)
     a_i8, a_scale = ref.quantize_act_symmetric(x)
-    return quant_matmul_raw(a_i8, w_i8, w_scale * a_scale, interpret=interpret)
+    return quant_matmul_raw(
+        a_i8, w_i8, w_scale * a_scale, block_k=block_k, interpret=interpret
+    )
+
+
+def quant_dense(
+    x: jax.Array, w: jax.Array, *, interpret: bool | None = None, block_k: int | None = None
+) -> jax.Array:
+    """W8A8 symmetric quantized dense layer via the Pallas MXU kernel."""
+    return _quant_dense(x, w, interpret=resolve_interpret(interpret), block_k=block_k)
 
 
 def quant_dense_reference(x: jax.Array, w: jax.Array) -> jax.Array:

@@ -2,9 +2,14 @@
 
 Serves any registry architecture (smoke-reduced by default), optionally
 with int8 mixed-precision weights — the paper's technique on the LM
-serve path.  Reports tokens/s for the batched decode loop.
+serve path — or with sub-8-bit bit-packed weights (``--packed``): every
+projection weight is quantized AND segment-packed exactly once at load
+(:func:`repro.kernels.packed_matmul.ops.prepack_dense`), so each decode
+step calls straight into the Pallas Kernel-Packing matmul with zero
+per-call weight work.  Reports tokens/s for the batched decode loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 64
+  PYTHONPATH=src python -m repro.launch.serve --packed --wbits 4 --abits 4
 """
 from __future__ import annotations
 
@@ -22,6 +27,9 @@ from repro.models.layers import quantize_dense_for_serving
 from repro.parallel.sharding import ShardingRules
 
 
+_PROJ_WEIGHT_RE = r"(wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$"
+
+
 def quantize_params_int8(params):
     """Convert every matmul weight to int8 levels + scales (in place-ish)."""
     import re
@@ -29,7 +37,7 @@ def quantize_params_int8(params):
     def one(path, leaf):
         pstr = "/".join(str(getattr(k, "key", k)) for k in path)
         matched = (
-            re.search(r"(wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$", pstr)
+            re.search(_PROJ_WEIGHT_RE, pstr)
             or re.search(r"(w_up|w_gate|w_down)$", pstr)
         )
         if matched and leaf.ndim >= 2:
@@ -44,6 +52,28 @@ def quantize_params_int8(params):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+def quantize_params_packed(params, *, w_bits: int, a_bits: int):
+    """One-time quantize + bit-pack of every projection weight at load.
+
+    Attention/MLP projection matrices ([K, N] or scan-stacked [L, K, N])
+    become :class:`PackedDenseParams` leaves; ``models.layers.dense``
+    detects them and dispatches each decode-step matmul straight into the
+    Pallas Kernel-Packing kernel.  Higher-rank (MoE) weights are left in
+    float — their packed path is future work.
+    """
+    import re
+
+    from repro.kernels.packed_matmul.ops import prepack_dense
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if re.search(_PROJ_WEIGHT_RE, pstr) and leaf.ndim in (2, 3):
+            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="llama3.2-3b")
@@ -51,13 +81,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--int8", action="store_true", help="mixed-precision int8 weights")
+    ap.add_argument(
+        "--packed", action="store_true",
+        help="sub-8-bit weights, bit-packed once at load (Kernel-Packing serve path)",
+    )
+    ap.add_argument("--wbits", type=int, default=4, help="--packed weight bits")
+    ap.add_argument("--abits", type=int, default=4, help="--packed activation bits")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=not args.full)
     rules = ShardingRules(enabled=False)
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    if args.int8:
+    if args.packed:
+        params = quantize_params_packed(params, w_bits=args.wbits, a_bits=args.abits)
+    elif args.int8:
         params = quantize_params_int8(params)
     serve_step = jax.jit(S.make_serve_step(cfg, rules), donate_argnums=(1,))
 
@@ -79,8 +117,9 @@ def main(argv=None) -> dict:
     jax.block_until_ready(logits)
     dt = time.time() - t0
     tps = (args.tokens - 1) * B / dt
+    mode = "packed" if args.packed else ("int8" if args.int8 else "fp")
     print(
-        f"arch={cfg.name} int8={args.int8} batch={B} tokens={args.tokens} "
+        f"arch={cfg.name} weights={mode} batch={B} tokens={args.tokens} "
         f"throughput={tps:.1f} tok/s latency={dt/(args.tokens-1)*1e3:.1f} ms/step"
     )
     return {"tokens_per_s": tps}

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import fake_quant_act, fake_quant_weight
+from repro.kernels.packed_matmul.ops import PackedDenseParams, packed_dense, prepack_dense
 from repro.parallel.sharding import shard
 
 
@@ -50,8 +51,16 @@ def dense_init(key, d_in: int, d_out: int) -> dict:
 
 
 def dense(params: dict, x: jax.Array, *, name: str = "", quant: QuantConfig = NO_QUANT) -> jax.Array:
-    """x @ W with optional fake-quant QAT or int8 serving weights."""
+    """x @ W with optional fake-quant QAT, int8, or packed serving weights."""
     w = params["w"]
+    if isinstance(w, PackedDenseParams):
+        # pre-packed sub-8-bit serving: the decode loop calls straight into
+        # the Pallas Kernel-Packing matmul — no per-call weight work.  The
+        # sigmoid proxy bounds activations to [0, 1] exactly as the QAT path.
+        lead = x.shape[:-1]
+        xq = jax.nn.sigmoid(x).astype(jnp.float32).reshape(-1, x.shape[-1])
+        y = packed_dense(xq, w)
+        return y.reshape(*lead, w.n_out).astype(x.dtype)
     if isinstance(w, dict):  # int8 serving layout {"levels", "scale"}
         w = w["levels"].astype(x.dtype) * w["scale"].astype(x.dtype)
     else:
@@ -70,6 +79,17 @@ def quantize_dense_for_serving(params: dict, bits: int = 8) -> dict:
     scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / n + 1e-12
     levels = jnp.clip(jnp.round(w / scale), -n, n).astype(jnp.int8)
     return {"w": {"levels": levels, "scale": scale.astype(jnp.float32)}}
+
+
+def quantize_dense_for_packed_serving(params: dict, *, w_bits: int, a_bits: int) -> dict:
+    """Quantize + bit-pack a dense kernel once for the packed serve path.
+
+    The result slots back into the params tree; :func:`dense` detects the
+    :class:`~repro.kernels.packed_matmul.ops.PackedDenseParams` leaf and
+    dispatches to the Pallas kernel with zero per-call weight work.
+    Accepts [K, N] or stacked [L, K, N] weights (decode-scan layout).
+    """
+    return {"w": prepack_dense(params["w"], w_bits=w_bits, a_bits=a_bits)}
 
 
 def rmsnorm_init(d: int) -> dict:

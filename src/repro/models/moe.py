@@ -28,6 +28,14 @@ from repro.models.layers import NO_QUANT, QuantConfig, dense, rmsnorm, rmsnorm_i
 from repro.parallel.sharding import shard
 
 
+def _axis_size(axis_name) -> int:
+    # jax.lax.axis_size is post-0.4.x; psum(1, axis) is the classic spelling
+    # (constant-folds to the static mesh axis size)
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
 @dataclasses.dataclass(frozen=True)
 class MoESpec:
     d_model: int
@@ -101,7 +109,7 @@ def _local_moe(params: dict, s: MoESpec, x: jax.Array, *, axis_name: str | None,
     tokens are exchanged with all_to_all.
     """
     t_loc, d = x.shape
-    M = jax.lax.axis_size(axis_name) if axis_name else 1
+    M = _axis_size(axis_name) if axis_name else 1
     wu = params["w_up"]
     e_loc = (wu["levels"] if isinstance(wu, dict) else wu).shape[0]
     E = e_loc * M  # global expert count
@@ -198,7 +206,7 @@ def _local_moe_expert_sharded(params: dict, s: MoESpec, x: jax.Array, *,
     the wire cost is one psum of [t_loc, d] — cheap at decode sizes.
     """
     t_loc, d = x.shape
-    M = jax.lax.axis_size(axis_name) if axis_name else 1
+    M = _axis_size(axis_name) if axis_name else 1
     wu = params["w_up"]
     e_loc = (wu["levels"] if isinstance(wu, dict) else wu).shape[0]
     E = e_loc * M

@@ -1,0 +1,86 @@
+"""Deterministic stand-in for the subset of `hypothesis` these tests use.
+
+The container image does not ship `hypothesis` (and the repo policy is to
+stub missing dependencies rather than install them).  ``conftest.py``
+installs this module under the name ``hypothesis`` only when the real
+package is absent, so environments that do have hypothesis keep its full
+shrinking/fuzzing behavior.
+
+Supported API (the only parts the test suite touches):
+
+  * ``strategies.integers(min_value, max_value)``
+  * ``strategies.sampled_from(elements)``
+  * ``@given(**kwargs)`` — draws ``max_examples`` deterministic samples
+    per test (seeded from the test's qualified name, so runs are
+    reproducible and failures can be replayed).
+  * ``@settings(max_examples=..., deadline=...)`` — only ``max_examples``
+    is honored; the cap can be lowered globally with the
+    ``FALLBACK_MAX_EXAMPLES`` environment variable for smoke CI runs.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements) -> _Strategy:
+    pool = list(elements)
+    return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+
+
+def given(**strats):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            limit = getattr(wrapper, "_fallback_max_examples", DEFAULT_MAX_EXAMPLES)
+            env_cap = os.environ.get("FALLBACK_MAX_EXAMPLES")
+            if env_cap:
+                limit = min(limit, int(env_cap))
+            # stable per-test seed: reproducible across processes/runs
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(limit):
+                drawn = {name: s.sample(rng) for name, s in strats.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:  # noqa: BLE001 — re-raise with the draw
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example {i}: {drawn!r}"
+                    ) from e
+
+        # pytest must not see the drawn-parameter names as fixtures:
+        # drop the __wrapped__ link so inspect.signature reports (*args, **kw)
+        del wrapper.__wrapped__
+        wrapper._fallback_max_examples = DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return decorate

@@ -1,0 +1,20 @@
+"""Test bootstrap: provide a `hypothesis` fallback when it isn't installed.
+
+The seed image lacks `hypothesis`; rather than skip the property tests we
+register tests/_hypothesis_fallback.py as the `hypothesis` module (a
+deterministic, seeded sampler covering the small API surface the suite
+uses).  When the real package is available it wins.
+"""
+from __future__ import annotations
+
+import importlib.util
+import pathlib
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    _path = pathlib.Path(__file__).with_name("_hypothesis_fallback.py")
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis.strategies"] = _mod.strategies

@@ -39,7 +39,15 @@ def test_packed_dense_packs_multiple_segments():
     """The low-bit path must actually pack >1 product per int32 lane."""
     for wb, ab in [(2, 2), (4, 4), (2, 8), (3, 5)]:
         cfg = choose_config(wb, ab)
-        assert cfg is not None and cfg["n_seg"] >= 2, (wb, ab, cfg)
+        assert cfg is not None and cfg.n_seg >= 2, (wb, ab, cfg)
+
+
+def test_choose_config_returns_immutable():
+    """The cached config must not be a mutable object callers could alias."""
+    cfg = choose_config(4, 4)
+    with pytest.raises((AttributeError, TypeError)):
+        cfg.n_seg = 99
+    assert choose_config(4, 4) == cfg
 
 
 def test_pack_weights_layout():
@@ -47,6 +55,125 @@ def test_pack_weights_layout():
     packed = pm_ref.pack_weights(w, n_seg=2, stride=8)
     assert packed.shape == (2, 3)
     assert int(packed[0, 0]) == int(w[0, 0]) + (int(w[0, 1]) << 8)
+
+
+# ---------------------------------------------------------------------------
+# K-blocked kernels: raw grids vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def _check_packed_raw(wb, ab, m, k, n_groups, block_k, seed, block_m=16, block_n=32):
+    from repro.kernels.packed_matmul.kernel import packed_matmul_raw
+
+    cfg = choose_config(wb, ab)
+    if cfg is None:
+        return
+    n = n_groups * cfg.n_seg
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, 1 << ab, (m, k)), jnp.int32)
+    wl = jnp.asarray(rng.integers(0, 1 << wb, (k, n)), jnp.int32)
+    wp = pm_ref.pack_weights(wl, cfg.n_seg, cfg.stride)
+    got = packed_matmul_raw(
+        a, wp, n_seg=cfg.n_seg, stride=cfg.stride, acc_chunk=cfg.acc_chunk,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    )
+    want = pm_ref.matmul_levels(a, wl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    wb=st.sampled_from([2, 3, 4]),
+    ab=st.sampled_from([2, 4, 5]),
+    m=st.sampled_from([1, 7, 33]),
+    k=st.sampled_from([5, 63, 130]),
+    n_groups=st.sampled_from([1, 3, 9]),
+    block_k=st.sampled_from([16, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_packed_matmul_raw_k_blocked(wb, ab, m, k, n_groups, block_k, seed):
+    """Odd (M, K, N) with block_k below / at / above K stay bit-exact."""
+    _check_packed_raw(wb, ab, m, k, n_groups, block_k, seed)
+
+
+def test_packed_matmul_raw_all_placements():
+    """Every distinct placement the chooser can emit is bit-exact under
+    K-blocking (block_k < K) on a non-divisible shape."""
+    tested = set()
+    for wb in range(2, 9):
+        for ab in range(2, 9):
+            cfg = choose_config(wb, ab)
+            if cfg is None or cfg in tested:
+                continue
+            tested.add(cfg)
+            _check_packed_raw(wb, ab, m=9, k=77, n_groups=5, block_k=32, seed=wb * 100 + ab)
+    assert tested, "no multi-segment placements found"
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([1, 9, 130]),
+    k=st.sampled_from([7, 100, 600]),
+    n=st.sampled_from([3, 65]),
+    block_k=st.sampled_from([32, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_matmul_raw_k_blocked(m, k, n, block_k, seed):
+    """Odd shapes x block_k below / at / above K stay bit-exact."""
+    from repro.kernels.quant_matmul import ref as qm_ref
+    from repro.kernels.quant_matmul.kernel import quant_matmul_raw
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    w_i8, w_scale = qm_ref.quantize_symmetric(w)
+    a_i8, a_scale = qm_ref.quantize_act_symmetric(x)
+    got = quant_matmul_raw(a_i8, w_i8, w_scale * a_scale, block_m=64, block_n=32, block_k=block_k)
+    want = qm_ref.quant_matmul(a_i8, w_i8, w_scale, a_scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# prepacked serving params
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    wb=st.integers(2, 6),
+    ab=st.integers(2, 6),
+    m=st.sampled_from([1, 17]),
+    k=st.sampled_from([24, 96]),
+    n=st.sampled_from([12, 60]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prepacked_dense_matches_reference(wb, ab, m, k, n, seed):
+    """prepack-once + fast path == repack-per-call == jnp oracle, bit-exact."""
+    from repro.kernels.packed_matmul.ops import prepack_dense
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    pre = prepack_dense(w, w_bits=wb, a_bits=ab)
+    got = packed_dense(x, pre)
+    want = packed_dense_reference(x, w, w_bits=wb, a_bits=ab)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prepack_dense_stacked_layers():
+    """A stacked [L, K, N] weight prepacks per-layer (scan-sliceable)."""
+    from repro.kernels.packed_matmul.ops import prepack_dense
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    w = jax.random.normal(kw, (3, 32, 16))
+    pre = prepack_dense(w, w_bits=4, a_bits=4)
+    assert pre.w_packed is not None and pre.w_packed.shape[0] == 3
+    x = jax.random.uniform(kx, (5, 32))
+    for layer in range(3):
+        sliced = jax.tree_util.tree_map(lambda a: a[layer], pre)
+        got = packed_dense(x, sliced)
+        want = packed_dense_reference(x, w[layer], w_bits=4, a_bits=4)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 # ---------------------------------------------------------------------------
@@ -80,8 +207,8 @@ def test_filter_config_container_safe():
             cfg = choose_filter_config(wb, ab, 3)
             if cfg is None:
                 continue
-            nseg = cfg["k_p"] + cfg["n_p"] - 1
-            bits = wb + ab + (nseg - 1) * cfg["stride"] + int(np.log2(cfg["acc_chunk"]))
+            nseg = cfg.k_p + cfg.n_p - 1
+            bits = wb + ab + (nseg - 1) * cfg.stride + int(np.log2(cfg.acc_chunk))
             assert bits <= 31, (wb, ab, cfg)
 
 

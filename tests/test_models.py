@@ -133,6 +133,33 @@ def test_quantized_dense_matches_fake_quant():
     assert bool(jnp.all(jnp.isfinite(got)))
 
 
+def test_serve_packed_params_exact_vs_kernel_oracle():
+    """dense() with prepacked weights == the packed_dense oracle on the
+    sigmoid-bounded activations (same quant semantics as the QAT path)."""
+    from repro.kernels.packed_matmul.ops import PackedDenseParams, packed_dense_reference
+
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 24))
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 48))
+    pp = L.quantize_dense_for_packed_serving({"w": w}, w_bits=4, a_bits=4)
+    assert isinstance(pp["w"], PackedDenseParams)
+    got = L.dense(pp, x)
+    want = packed_dense_reference(jax.nn.sigmoid(x), w, w_bits=4, a_bits=4)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_serve_packed_params_close_to_fp():
+    """Packed w4a4 serving stays a usable approximation of the fp layer
+    (bounded-activation regime, matching the QAT forward semantics)."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
+    pp = L.quantize_dense_for_packed_serving({"w": w}, w_bits=6, a_bits=8)
+    qc = L.QuantConfig(bits={"proj": (6, 8)})
+    want = L.dense({"w": w}, x, name="proj", quant=qc)  # QAT fake-quant path
+    got = L.dense(pp, x)
+    rel = float(jnp.linalg.norm(got - want) / (jnp.linalg.norm(want) + 1e-9))
+    assert rel < 0.05, rel
+
+
 def test_serve_int8_params_close_to_fp():
     w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 64))
