@@ -1,0 +1,159 @@
+"""Serving benchmark: continuous batching vs the static fixed-batch loop.
+
+Synthetic Poisson-arrival workload (exponential inter-arrival gaps,
+mixed prompt/generation lengths) driven through the SAME jitted paged
+decode step under two admission policies:
+
+  * ``continuous`` — slots refill the moment a sequence finishes;
+  * ``static`` — gang admission: the whole batch must drain before any
+    waiting request starts (the classic fixed-batch serving loop).
+
+Every (rate x policy) cell reports generated tokens/s, p50/p99
+end-to-end request latency, TTFT, and mean slot occupancy.  Results land
+in ``BENCH_serving.json`` at the repo root (committed PR over PR);
+``--smoke`` runs one small rate and writes ``BENCH_serving_smoke.json``
+instead so CI can never clobber the committed trajectory file.
+
+  python benchmarks/serving_bench.py           # full sweep (3 rates)
+  python benchmarks/serving_bench.py --smoke   # CI artifact
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import numpy as np
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+for _p in (str(_ROOT), str(_ROOT / "src")):  # support `python benchmarks/serving_bench.py`
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+BENCH_JSON = _ROOT / "BENCH_serving.json"
+BENCH_JSON_SMOKE = _ROOT / "BENCH_serving_smoke.json"  # never the committed file
+
+
+def make_workload(
+    n_requests: int,
+    rate: float,
+    *,
+    seed: int,
+    vocab: int,
+    prompt_range: tuple[int, int] = (4, 24),
+    gen_range: tuple[int, int] = (4, 64),
+) -> list[dict]:
+    """Poisson arrivals with mixed lengths (where slots free early)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    out = []
+    for i in range(n_requests):
+        p_len = int(rng.integers(*prompt_range))
+        out.append(
+            {
+                "prompt": rng.integers(1, vocab, size=p_len).tolist(),
+                "max_new_tokens": int(rng.integers(*gen_range)),
+                "arrival": float(arrivals[i]),
+            }
+        )
+    return out
+
+
+def run_policy(arch: str, policy: str, workload: list[dict], *, n_slots: int,
+               page_size: int, max_len: int, packed_head: bool) -> dict:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving import Engine, EngineConfig
+
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(
+        cfg,
+        params,
+        EngineConfig(
+            n_slots=n_slots, page_size=page_size, max_len=max_len,
+            policy=policy, packed_head=packed_head,
+        ),
+    )
+    for w in workload:
+        eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
+    eng.warmup()  # compile outside the timed run; both policies start hot
+    return eng.run(realtime=True)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="one small rate (CI artifact)")
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--requests", type=int, default=0, help="0 = per-mode default")
+    ap.add_argument("--packed-head", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    # low rate = arrival-bound (throughput parity, latency still wins);
+    # high rate = backlogged, where slot recycling shows up in tokens/s
+    rates = [4.0] if args.smoke else [8.0, 32.0, 128.0]
+    n_requests = args.requests or (10 if args.smoke else 48)
+
+    results = []
+    print("name,tokens_per_s,derived")
+    for rate in rates:
+        for policy in ("static", "continuous"):
+            # identical workload per policy: same seed => same arrivals/lengths
+            from repro.configs import get_config
+
+            vocab = get_config(args.arch, smoke=True).vocab
+            wl = make_workload(n_requests, rate, seed=args.seed, vocab=vocab)
+            m = run_policy(
+                args.arch, policy, wl, n_slots=args.slots,
+                page_size=args.page_size, max_len=args.max_len,
+                packed_head=args.packed_head,
+            )
+            row = {
+                "rate_rps": rate,
+                "n_requests": n_requests,
+                **{k: m[k] for k in (
+                    "engine", "tokens_per_s", "latency_p50", "latency_p99",
+                    "ttft_p50", "steps", "slot_occupancy", "generated_tokens",
+                    "wall",
+                )},
+            }
+            results.append(row)
+            print(
+                f"serve_{policy}_rate{rate:g},{m['tokens_per_s']:.1f},"
+                f"p50={m['latency_p50']:.2f}s;p99={m['latency_p99']:.2f}s;"
+                f"occupancy={m['slot_occupancy']:.2f};steps={m['steps']}"
+            )
+
+    # headline: continuous vs static speedup per rate
+    speedups = {}
+    for rate in rates:
+        by = {r["engine"]: r for r in results if r["rate_rps"] == rate}
+        speedups[str(rate)] = round(
+            by["continuous"]["tokens_per_s"] / by["static"]["tokens_per_s"], 3
+        )
+        print(f"speedup_rate{rate:g},0.0,continuous/static={speedups[str(rate)]}x")
+
+    payload = {
+        "arch": args.arch,
+        "slots": args.slots,
+        "page_size": args.page_size,
+        "max_len": args.max_len,
+        "smoke": args.smoke,
+        "results": results,
+        "continuous_over_static_tokens_per_s": speedups,
+    }
+    target = BENCH_JSON_SMOKE if args.smoke else BENCH_JSON
+    target.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"bench_json,0.0,written={target.name}")
+
+
+if __name__ == "__main__":
+    main()

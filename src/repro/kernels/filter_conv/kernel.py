@@ -13,9 +13,26 @@ Container-safety: the config chooser (ops.choose_filter_config) enforces
   w + a + (k_p + n_p - 2) * stride + log2(acc_chunk) <= 31
 so the packed accumulator never overflows an int32 lane.
 
-Blocking: one batch tile per grid step; the whole (C, N) slice of that
-tile sits in VMEM (sequence tiles of LM workloads are padded to lane
-multiples by the wrapper).
+## Blocking
+
+The reduction runs on a 3-D ``(batch, n, c)`` grid — the same treatment
+``packed_matmul`` got in PR 1 — so one ``[bb, bc, bn]`` sequence tile
+and one ``[bc, n_fc]`` packed-filter tile are resident in VMEM per step
+instead of the whole (C, N) slice, and the grid-level pipeline overlaps
+the next tile's DMA with the current tile's compute.  A VMEM scratch
+accumulator holds the full (small) output row ``[bb, n_out]`` across
+revisits: contributions of a (n-block, c-block) step land at static
+offsets inside a local window, which is added into the scratch at the
+block's traced base offset — one dynamic slice per grid step.  The
+scratch is zeroed on the first (n, c) visit of each batch tile and
+flushed to the output tile on the last (output revisiting is legal
+because the n and c grid axes are sequential).
+
+``block_c``/``block_n`` default to backend-adaptive: whole-axis in
+interpret mode (where "VMEM" is host memory and extra grid steps are
+pure overhead) and bounded tiles when compiling for TPU.  The wrapper
+zero-pads channels and sequence up to block multiples, which is exact
+because zero levels contribute nothing to any segment.
 """
 from __future__ import annotations
 
@@ -24,38 +41,49 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(
-    s_ref,  # [bb, C, Npad] int32 sequence levels
-    fp_ref,  # [C, n_fc] int32 packed filter chunks
-    o_ref,  # [bb, Nout] int32 full convolution, summed over C
+    s_ref,  # [bb, bc, bn] int32 sequence-level tile (bn = bn_sc * n_p)
+    fp_ref,  # [bc, n_fc] int32 packed filter chunks (channel tile)
+    o_ref,  # [bb, n_out] int32 full convolution, summed over C
+    acc_ref,  # VMEM scratch [bb, pad_out] int32
     *,
     k_p: int,
     n_p: int,
     stride: int,
     acc_chunk: int,
-    k_len: int,
-    n_len: int,
+    n_out: int,
 ):
-    bb, C, n_pad = s_ref.shape
+    j = pl.program_id(1)  # sequence-block index
+    k_idx = pl.program_id(2)  # channel-block index
+    bb, bc, bn = s_ref.shape
     n_fc = fp_ref.shape[1]
-    n_sc = n_pad // n_p
+    bn_sc = bn // n_p
     nseg = k_p + n_p - 1
     mask = (1 << stride) - 1
-    out = jnp.zeros(o_ref.shape, jnp.int32)
+    # contributions of this (n, c) tile span offsets
+    # [j*bn, j*bn + bn + (n_fc-1)*k_p + nseg) — static width, traced base
+    local_w = bn + (n_fc - 1) * k_p + nseg
+
+    @pl.when((j == 0) & (k_idx == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
     # pack sequence chunks: s_pack[b, c, v] = sum_j s[b, c, v*n_p + j] << j*stride
     s = s_ref[...]
-    s_chunks = s.reshape(bb, C, n_sc, n_p)
+    s_chunks = s.reshape(bb, bc, bn_sc, n_p)
     shifts = (jnp.arange(n_p, dtype=jnp.int32) * stride)[None, None, None, :]
-    s_pack = jnp.sum(s_chunks << shifts, axis=-1)  # [bb, C, n_sc]
+    s_pack = jnp.sum(s_chunks << shifts, axis=-1)  # [bb, bc, bn_sc]
     fp = fp_ref[...]
+    local = jnp.zeros((bb, local_w), jnp.int32)
     for u in range(n_fc):
-        for v in range(n_sc):
-            off = u * k_p + v * n_p
+        for v in range(bn_sc):
+            off = u * k_p + v * n_p  # static offset inside the local window
             dec = jnp.zeros((bb, nseg), jnp.int32)
-            for c0 in range(0, C, acc_chunk):
-                c1 = min(c0 + acc_chunk, C)
+            for c0 in range(0, bc, acc_chunk):
+                c1 = min(c0 + acc_chunk, bc)
                 # pre-decode accumulation over the channel chunk (E_g headroom)
                 packed = jnp.sum(
                     s_pack[:, c0:c1, v] * fp[None, c0:c1, u], axis=1
@@ -63,14 +91,19 @@ def _kernel(
                 for m in range(nseg):
                     seg = jax.lax.shift_right_logical(packed, m * stride) & mask
                     dec = dec.at[:, m].add(seg)
-            width = min(nseg, o_ref.shape[1] - off)
-            if width > 0:
-                out = jax.lax.dynamic_update_slice(
-                    out,
-                    jax.lax.dynamic_slice(out, (0, off), (bb, width)) + dec[:, :width],
-                    (0, off),
-                )
-    o_ref[...] = out
+            local = jax.lax.dynamic_update_slice(
+                local,
+                jax.lax.dynamic_slice(local, (0, off), (bb, nseg)) + dec,
+                (0, off),
+            )
+    base = j * bn  # traced base: one dynamic slice+add per grid step
+    acc = acc_ref[...]
+    cur = jax.lax.dynamic_slice(acc, (0, base), (bb, local_w))
+    acc_ref[...] = jax.lax.dynamic_update_slice(acc, cur + local, (0, base))
+
+    @pl.when((j == pl.num_programs(1) - 1) & (k_idx == pl.num_programs(2) - 1))
+    def _flush():
+        o_ref[...] = acc_ref[:, :n_out]
 
 
 def filter_conv_raw(
@@ -84,6 +117,8 @@ def filter_conv_raw(
     k_len: int,
     n_len: int,
     block_b: int = 8,
+    block_c: int | None = None,
+    block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Full convolution summed over channels: [B, n_len + k_len - 1] int32."""
@@ -92,19 +127,38 @@ def filter_conv_raw(
     interpret = resolve_interpret(interpret)
     b, c, n_pad = s_lvl.shape
     bb = min(block_b, b)
-    grid = (-(-b // bb),)
+    if block_c is None:
+        block_c = c if interpret else 32  # see Blocking note
+    if block_n is None:
+        block_n = n_pad if interpret else 512
+    bc = min(block_c, c)
+    # sequence blocks must hold whole n_p chunks
+    bn = max(n_p, block_n // n_p * n_p)
+    bn = min(bn, n_pad)
+    grid = (-(-b // bb), -(-n_pad // bn), -(-c // bc))
     n_out = n_len + k_len - 1
+    n_fc = f_packed.shape[1]
+    nseg = k_p + n_p - 1
+    # scratch sized so the last n-block's local window stays in bounds
+    pad_out = (grid[1] - 1) * bn + bn + (n_fc - 1) * k_p + nseg
+    # zero-pad up to block multiples (exact: zero levels contribute nothing)
+    if grid[2] * bc > c or grid[1] * bn > n_pad:
+        s_lvl = jnp.pad(
+            s_lvl, ((0, 0), (0, grid[2] * bc - c), (0, grid[1] * bn - n_pad))
+        )
+        f_packed = jnp.pad(f_packed, ((0, grid[2] * bc - c), (0, 0)))
     kernel = functools.partial(
-        _kernel, k_p=k_p, n_p=n_p, stride=stride, acc_chunk=acc_chunk, k_len=k_len, n_len=n_len
+        _kernel, k_p=k_p, n_p=n_p, stride=stride, acc_chunk=acc_chunk, n_out=n_out
     )
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bb, c, n_pad), lambda i: (i, 0, 0)),
-            pl.BlockSpec((c, f_packed.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((bb, bc, bn), lambda i, j, kk: (i, kk, j)),
+            pl.BlockSpec((bc, f_packed.shape[1]), lambda i, j, kk: (kk, 0)),
         ],
-        out_specs=pl.BlockSpec((bb, n_out), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((bb, n_out), lambda i, j, kk: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((grid[0] * bb, n_out), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bb, pad_out), jnp.int32)],
         interpret=interpret,
     )(s_lvl, f_packed)[:b]

@@ -100,11 +100,12 @@ class PackedDenseParams:
 def prepack_dense(w: jax.Array, *, w_bits: int, a_bits: int) -> PackedDenseParams:
     """Quantize + pack a float weight matrix once, at load time.
 
-    ``w`` may be [K, N] or stacked [L, K, N] (the decode scan's layer
-    axis); stacking maps over layers so level normalization stays
-    per-layer, matching the QAT fake-quant forward.
+    ``w`` may be [K, N], stacked [L, K, N] (the decode scan's layer
+    axis), per-expert [E, K, N] (MoE), or stacked-expert [L, E, K, N];
+    leading axes map so level normalization stays per-matrix, matching
+    the QAT fake-quant forward.
     """
-    if w.ndim == 3:
+    if w.ndim in (3, 4):
         return jax.vmap(lambda wl: prepack_dense(wl, w_bits=w_bits, a_bits=a_bits))(w)
     cfg = choose_config(w_bits, a_bits)
     n = w.shape[1]

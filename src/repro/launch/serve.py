@@ -1,15 +1,24 @@
-"""Serving driver: batched autoregressive decode with a KV/SSM cache.
+"""Serving CLI: continuous-batching engine (default) or the legacy
+fixed-batch decode loop (``--engine static``).
 
-Serves any registry architecture (smoke-reduced by default), optionally
-with int8 mixed-precision weights — the paper's technique on the LM
-serve path — or with sub-8-bit bit-packed weights (``--packed``): every
-projection weight is quantized AND segment-packed exactly once at load
-(:func:`repro.kernels.packed_matmul.ops.prepack_dense`), so each decode
-step calls straight into the Pallas Kernel-Packing matmul with zero
-per-call weight work.  Reports tokens/s for the batched decode loop.
+``--engine continuous`` drives :class:`repro.serving.Engine`: requests
+(synthesized here from ``--batch``/``--prompt-len``/``--tokens``) flow
+through an admission scheduler into a paged KV/SSM cache, and one jitted
+step advances every active slot per iteration, refilling slots as
+sequences finish.  ``--engine static`` keeps the original monolithic
+``[L, B, T, ...]``-cache loop as the A/B baseline.
+
+Weight options apply to both engines: ``--int8`` stores projection
+weights as int8 levels+scales; ``--packed`` quantizes AND segment-packs
+every projection — including rank-4 ``[L, E, d, f]`` MoE expert tensors
+— once at load (:func:`repro.kernels.packed_matmul.ops.prepack_dense`),
+so each decode step calls straight into the Pallas Kernel-Packing
+matmul; ``--packed-head`` additionally prepacks the tied LM head so the
+final logits matmul runs sub-8-bit too.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 64
   PYTHONPATH=src python -m repro.launch.serve --packed --wbits 4 --abits 4
+  PYTHONPATH=src python -m repro.launch.serve --engine static --int8
 """
 from __future__ import annotations
 
@@ -23,11 +32,12 @@ from repro.configs import get_config
 from repro.configs.registry import ARCHS
 from repro.launch import steps as S
 from repro.models import transformer as T
-from repro.models.layers import quantize_dense_for_serving
 from repro.parallel.sharding import ShardingRules
 
 
 _PROJ_WEIGHT_RE = r"(wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$"
+# MoE expert tensors live as bare [E, d, f] / [L, E, d, f] arrays (no /w leaf)
+_MOE_WEIGHT_RE = r"(w_up|w_gate|w_down)$"
 
 
 def quantize_params_int8(params):
@@ -36,10 +46,7 @@ def quantize_params_int8(params):
 
     def one(path, leaf):
         pstr = "/".join(str(getattr(k, "key", k)) for k in path)
-        matched = (
-            re.search(_PROJ_WEIGHT_RE, pstr)
-            or re.search(r"(w_up|w_gate|w_down)$", pstr)
-        )
+        matched = re.search(_PROJ_WEIGHT_RE, pstr) or re.search(_MOE_WEIGHT_RE, pstr)
         if matched and leaf.ndim >= 2:
             # per-out-channel symmetric int8 over the contraction dim (-2);
             # keepdims preserves the stacked layer axis for the decode scan
@@ -52,52 +59,49 @@ def quantize_params_int8(params):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
-def quantize_params_packed(params, *, w_bits: int, a_bits: int):
+def quantize_params_packed(params, *, w_bits: int, a_bits: int, verbose: bool = True):
     """One-time quantize + bit-pack of every projection weight at load.
 
     Attention/MLP projection matrices ([K, N] or scan-stacked [L, K, N])
-    become :class:`PackedDenseParams` leaves; ``models.layers.dense``
-    detects them and dispatches each decode-step matmul straight into the
-    Pallas Kernel-Packing kernel.  Higher-rank (MoE) weights are left in
-    float — their packed path is future work.
+    and MoE expert tensors ([E, d, f] or scan-stacked [L, E, d, f])
+    become :class:`PackedDenseParams` leaves; ``models.layers.dense`` and
+    ``models.moe._expert_ffn`` detect them and dispatch each decode-step
+    matmul straight into the Pallas Kernel-Packing kernel.  Any
+    projection-shaped tensor left in float is counted and reported so
+    silent precision gaps are visible.
     """
     import re
 
     from repro.kernels.packed_matmul.ops import prepack_dense
 
+    skipped = []
+
     def one(path, leaf):
         pstr = "/".join(str(getattr(k, "key", k)) for k in path)
         if re.search(_PROJ_WEIGHT_RE, pstr) and leaf.ndim in (2, 3):
             return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits)
+        if re.search(_MOE_WEIGHT_RE, pstr) and leaf.ndim in (3, 4):
+            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits)
+        if (re.search(_PROJ_WEIGHT_RE, pstr) or re.search(_MOE_WEIGHT_RE, pstr)) and leaf.ndim >= 2:
+            skipped.append(pstr)
         return leaf
 
-    return jax.tree_util.tree_map_with_path(one, params)
+    out = jax.tree_util.tree_map_with_path(one, params)
+    if skipped and verbose:
+        print(f"quantize_params_packed: {len(skipped)} projection tensors left in float: "
+              + ", ".join(skipped))
+    return out
 
 
-def main(argv=None) -> dict:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, default="llama3.2-3b")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--int8", action="store_true", help="mixed-precision int8 weights")
-    ap.add_argument(
-        "--packed", action="store_true",
-        help="sub-8-bit weights, bit-packed once at load (Kernel-Packing serve path)",
-    )
-    ap.add_argument("--wbits", type=int, default=4, help="--packed weight bits")
-    ap.add_argument("--abits", type=int, default=4, help="--packed activation bits")
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch, smoke=not args.full)
+def _serve_static(args, cfg, params, head) -> dict:
+    """Legacy fixed-batch decode loop (monolithic [L, B, T, ...] cache)."""
     rules = ShardingRules(enabled=False)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    if args.packed:
-        params = quantize_params_packed(params, w_bits=args.wbits, a_bits=args.abits)
-    elif args.int8:
-        params = quantize_params_int8(params)
-    serve_step = jax.jit(S.make_serve_step(cfg, rules), donate_argnums=(1,))
+    if head is None:
+        step_fn = S.make_serve_step(cfg, rules)
+    else:
+        def step_fn(p, c, t, pos):
+            return T.forward_decode(p, cfg, c, t, pos, head=head)
+    serve_step = jax.jit(step_fn, donate_argnums=(1,))
 
     B = args.batch
     cache = T.init_cache(cfg, B, args.max_len, enc_len=16)
@@ -108,21 +112,102 @@ def main(argv=None) -> dict:
 
     # warmup/compile
     logits, cache = serve_step(params, cache, tokens, jnp.asarray(0, jnp.int32))
-    out_tokens = [tokens]
     t0 = time.time()
     for t in range(1, args.tokens):
         nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         logits, cache = serve_step(params, cache, nxt, jnp.asarray(t, jnp.int32))
-        out_tokens.append(nxt)
     jax.block_until_ready(logits)
     dt = time.time() - t0
     tps = (args.tokens - 1) * B / dt
-    mode = "packed" if args.packed else ("int8" if args.int8 else "fp")
-    print(
-        f"arch={cfg.name} weights={mode} batch={B} tokens={args.tokens} "
-        f"throughput={tps:.1f} tok/s latency={dt/(args.tokens-1)*1e3:.1f} ms/step"
+    return {"tokens_per_s": tps, "latency_ms_per_step": dt / (args.tokens - 1) * 1e3}
+
+
+def _serve_continuous(args, cfg, params) -> dict:
+    """Continuous-batching engine over a synthetic same-arrival workload."""
+    from repro.serving import Engine, EngineConfig
+
+    eng = Engine(
+        cfg,
+        params,
+        EngineConfig(
+            n_slots=args.batch,
+            page_size=args.page_size,
+            max_len=args.max_len,
+            n_pages=args.pages,
+            packed_head=args.packed_head,
+            head_bits=(args.wbits, args.abits) if args.packed else (8, 8),
+        ),
     )
-    return {"tokens_per_s": tps}
+    rng = jax.random.PRNGKey(2)
+    for i in range(args.requests or 2 * args.batch):
+        rng, k = jax.random.split(rng)
+        prompt = jax.random.randint(k, (args.prompt_len,), 0, cfg.vocab).tolist()
+        eng.submit(prompt, args.tokens)
+    eng.warmup()  # compile outside the timed run, like the static loop
+    m = eng.run(realtime=True)
+    m["latency_ms_per_step"] = m["wall"] / max(1, m["steps"]) * 1e3
+    return m
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="llama3.2-3b")
+    ap.add_argument(
+        "--engine", choices=("continuous", "static"), default=None,
+        help="continuous-batching engine (default for attn/ssm archs) or the "
+        "legacy fixed-batch loop (default for encdec/hybrid)",
+    )
+    ap.add_argument("--batch", type=int, default=8, help="decode slots (batch size)")
+    ap.add_argument("--tokens", type=int, default=32, help="generated tokens per request")
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="continuous engine: total requests (default 2x batch)")
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16, help="KV page size (tokens)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="KV page-pool budget (0 = full residency)")
+    ap.add_argument("--int8", action="store_true", help="mixed-precision int8 weights")
+    ap.add_argument(
+        "--packed", action="store_true",
+        help="sub-8-bit weights, bit-packed once at load (Kernel-Packing serve path)",
+    )
+    ap.add_argument("--wbits", type=int, default=4, help="--packed weight bits")
+    ap.add_argument("--abits", type=int, default=4, help="--packed activation bits")
+    ap.add_argument("--packed-head", action="store_true",
+                    help="prepack the LM head too (w8a8 unless --packed sets bits)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=not args.full)
+    engine = args.engine
+    if engine is None:
+        engine = "continuous" if cfg.family in ("attn", "ssm") else "static"
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    if args.packed:
+        params = quantize_params_packed(params, w_bits=args.wbits, a_bits=args.abits)
+    elif args.int8:
+        params = quantize_params_int8(params)
+
+    if engine == "continuous":
+        out = _serve_continuous(args, cfg, params)
+    else:
+        head = None
+        if args.packed_head:
+            from repro.models.layers import prepack_lm_head
+
+            wb, ab = (args.wbits, args.abits) if args.packed else (8, 8)
+            head = prepack_lm_head(params["embed"], w_bits=wb, a_bits=ab)
+        out = _serve_static(args, cfg, params, head)
+
+    mode = "packed" if args.packed else ("int8" if args.int8 else "fp")
+    if args.packed_head:
+        mode += "+packed_head"
+    print(
+        f"arch={cfg.name} engine={engine} weights={mode} batch={args.batch} "
+        f"tokens/s={out['tokens_per_s']:.1f} "
+        f"latency={out['latency_ms_per_step']:.1f} ms/step"
+    )
+    return out
 
 
 if __name__ == "__main__":

@@ -351,6 +351,99 @@ def attention_decode(
     return x + out, cache_k, cache_v
 
 
+def attention_decode_paged(
+    params: dict,
+    s: AttnSpec,
+    x: jax.Array,  # [S, 1, d] one new token per serving slot
+    pool_k: jax.Array,  # [P, page_size, G*hd] physical page pool (this layer)
+    pool_v: jax.Array,
+    block_table: jax.Array,  # [S, n_blocks] int32 physical page ids (0 = null)
+    pos: jax.Array,  # [S] int32 per-slot position of the incoming token
+    *,
+    window: jax.Array | int = 0,
+    quant: QuantConfig = NO_QUANT,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a paged KV pool (continuous batching).
+
+    Each serving slot owns an ordered list of physical pages
+    (``block_table`` row); the new K/V row is scattered into page
+    ``pos // page_size`` at offset ``pos % page_size``, and attention runs
+    over the gathered ``pool[block_table]`` view with the same causal /
+    sliding-window mask as :func:`attention_decode` — bit-exact with the
+    monolithic cache because masked lanes underflow to exactly zero
+    probability either way.  Inactive slots carry an all-null block table,
+    so their (garbage) writes land on reserved page 0 and never touch a
+    live sequence.  Unlike the monolithic path, ``pos`` is a vector: slots
+    admitted at different times decode at different depths in one step.
+    """
+    S, _, d = x.shape
+    H, G, hd = s.n_heads, s.kv_heads, s.head_dim
+    page_size = pool_k.shape[1]
+    n_blocks = block_table.shape[1]
+    T = n_blocks * page_size
+    h = rmsnorm(params["ln"], x)
+    q = _split_heads(dense(params["wq"], h, name="attn_q", quant=quant), H, hd)
+    k = _split_heads(dense(params["wk"], h, name="attn_k", quant=quant), G, hd)
+    v = _split_heads(dense(params["wv"], h, name="attn_v", quant=quant), G, hd)
+    posb = pos[:, None]  # [S, 1]
+    if s.use_mrope:
+        pos3 = jnp.broadcast_to(posb[..., None], (S, 1, 3))
+        q = mrope(q, pos3, theta=s.rope_theta)
+        k = mrope(k, pos3, theta=s.rope_theta)
+    else:
+        q = rope(q, posb, theta=s.rope_theta)
+        k = rope(k, posb, theta=s.rope_theta)
+    k_row = k.reshape(S, G * hd)
+    v_row = v.reshape(S, G * hd)
+    page = jnp.take_along_axis(block_table, posb // page_size, axis=1)[:, 0]
+    off = pos % page_size
+    pool_k = pool_k.at[page, off].set(k_row.astype(pool_k.dtype))
+    pool_v = pool_v.at[page, off].set(v_row.astype(pool_v.dtype))
+    k_view = pool_k[block_table].reshape(S, T, G, hd)
+    v_view = pool_v[block_table].reshape(S, T, G, hd)
+    scale = 1.0 / jnp.sqrt(hd).astype(x.dtype)
+    scores = _gqa_scores(q, k_view.astype(x.dtype), scale=scale)  # [S,G,H/G,1,T]
+    kpos = jnp.arange(T, dtype=jnp.int32)
+    win = jnp.asarray(window, jnp.int32)
+    valid = kpos[None, :] <= posb
+    in_win = jnp.where(win > 0, (posb - kpos[None, :]) < win, True)
+    mask = (valid & in_win)[:, None, None, None, :]
+    scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bghqk,bkgd->bqghd", p, v_view.astype(x.dtype))
+    out = dense(params["wo"], o.reshape(S, 1, H * hd), name="attn_o", quant=quant)
+    return x + out, pool_k, pool_v
+
+
+# ---------------------------------------------------------------------------
+# LM head (tied embeddings) — float or prepacked sub-8-bit
+# ---------------------------------------------------------------------------
+
+
+def prepack_lm_head(embed: jax.Array, *, w_bits: int = 8, a_bits: int = 8) -> PackedDenseParams:
+    """One-time quantize + bit-pack of the tied LM head (``embed.T``).
+
+    The head is the last — and, at 256k vocabs, much the widest — matmul
+    of every decode step; prepacking routes it through the same Pallas
+    Kernel-Packing kernel as the projections instead of leaving it in
+    full precision.
+    """
+    return prepack_dense(jnp.asarray(embed).T, w_bits=w_bits, a_bits=a_bits)
+
+
+def lm_head(x: jax.Array, embed: jax.Array, dtype, packed: PackedDenseParams | None = None) -> jax.Array:
+    """Final-logits matmul: x [B, d] -> [B, V] float32.
+
+    With ``packed`` set, activations go through the same bounded sigmoid
+    proxy as :func:`dense`'s packed path and the matmul runs in the packed
+    integer kernel; otherwise the tied-embedding float matmul.
+    """
+    if packed is not None:
+        xq = jax.nn.sigmoid(x).astype(jnp.float32)
+        return packed_dense(xq, packed).astype(jnp.float32)
+    return (x @ embed.astype(dtype).T).astype(jnp.float32)
+
+
 # ---------------------------------------------------------------------------
 # Cross-attention (whisper decoder) — keys/values precomputed from encoder
 # ---------------------------------------------------------------------------

@@ -62,26 +62,64 @@ def moe_init(key, s: MoESpec) -> dict:
     return p
 
 
-def _weight(p: dict, key: str, dtype) -> jax.Array:
-    """Expert weight fetch; supports int8 serving layout {levels, scale}."""
-    w = p[key]
+def _weight(w, dtype) -> jax.Array:
+    """Dequantize a float / int8-dict expert weight tensor."""
     if isinstance(w, dict):
         return w["levels"].astype(dtype) * w["scale"].astype(dtype)
     return w.astype(dtype)
 
 
+def _n_local_experts(w) -> int:
+    """Leading (expert) dim of a float / int8-dict / packed expert weight."""
+    from repro.kernels.packed_matmul.ops import PackedDenseParams
+
+    if isinstance(w, PackedDenseParams):
+        data = w.w_packed if w.w_packed is not None else w.w_lvl
+        return data.shape[0]
+    if isinstance(w, dict):
+        return w["levels"].shape[0]
+    return w.shape[0]
+
+
+def _expert_matmul(x: jax.Array, w, dtype) -> jax.Array:
+    """Batched per-expert matmul [E, C, K] x [E, K, N] -> [E, C, N].
+
+    Float and int8-dict weights use one einsum; prepacked sub-8-bit
+    weights (:class:`PackedDenseParams` with a leading expert axis) vmap
+    the Pallas Kernel-Packing kernel over experts — the activations take
+    the same bounded sigmoid proxy as ``layers.dense``'s packed path.
+    """
+    import dataclasses as _dc
+
+    from repro.kernels.packed_matmul.ops import PackedDenseParams, packed_dense
+
+    if not isinstance(w, PackedDenseParams):
+        return jnp.einsum("ecd,edf->ecf", x, _weight(w, dtype))
+    xq = jax.nn.sigmoid(x).astype(jnp.float32)
+    packed = w.w_packed is not None
+
+    def one(xe, data):
+        pe = _dc.replace(
+            w, w_packed=data if packed else None, w_lvl=None if packed else data
+        )
+        return packed_dense(xe, pe)
+
+    data = w.w_packed if packed else w.w_lvl
+    return jax.vmap(one)(xq, data).astype(dtype)
+
+
 def _expert_ffn(p: dict, s: MoESpec, x: jax.Array) -> jax.Array:
     """x: [E, C, d] -> [E, C, d] batched over local experts."""
-    up = jnp.einsum("ecd,edf->ecf", x, _weight(p, "w_up", x.dtype))
+    up = _expert_matmul(x, p["w_up"], x.dtype)
     if s.kind in ("swiglu", "geglu"):
-        gate = jnp.einsum("ecd,edf->ecf", x, _weight(p, "w_gate", x.dtype))
+        gate = _expert_matmul(x, p["w_gate"], x.dtype)
         act = (jax.nn.silu(gate) if s.kind == "swiglu" else jax.nn.gelu(gate)) * up
     elif s.kind == "squared_relu":
         r = jax.nn.relu(up)
         act = r * r
     else:
         act = jax.nn.gelu(up)
-    return jnp.einsum("ecf,efd->ecd", act, _weight(p, "w_down", x.dtype))
+    return _expert_matmul(act, p["w_down"], x.dtype)
 
 
 def moe_reference(params: dict, s: MoESpec, x: jax.Array) -> jax.Array:
@@ -110,8 +148,7 @@ def _local_moe(params: dict, s: MoESpec, x: jax.Array, *, axis_name: str | None,
     """
     t_loc, d = x.shape
     M = _axis_size(axis_name) if axis_name else 1
-    wu = params["w_up"]
-    e_loc = (wu["levels"] if isinstance(wu, dict) else wu).shape[0]
+    e_loc = _n_local_experts(params["w_up"])
     E = e_loc * M  # global expert count
     k = s.top_k
 
@@ -207,8 +244,7 @@ def _local_moe_expert_sharded(params: dict, s: MoESpec, x: jax.Array, *,
     """
     t_loc, d = x.shape
     M = _axis_size(axis_name) if axis_name else 1
-    wu = params["w_up"]
-    e_loc = (wu["levels"] if isinstance(wu, dict) else wu).shape[0]
+    e_loc = _n_local_experts(params["w_up"])
     E = e_loc * M
     k = s.top_k
     my_base = (jax.lax.axis_index(axis_name) * e_loc) if axis_name else 0

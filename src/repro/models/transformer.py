@@ -442,9 +442,15 @@ def init_cache(
 
 
 def forward_decode(
-    params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array, pos: jax.Array
+    params: dict, cfg: ModelConfig, cache: dict, tokens: jax.Array, pos: jax.Array,
+    head: Any = None,
 ) -> tuple[jax.Array, dict]:
-    """One decode step: tokens [B, 1] -> logits [B, V], updated cache."""
+    """One decode step: tokens [B, 1] -> logits [B, V], updated cache.
+
+    ``head`` optionally carries prepacked sub-8-bit LM-head weights
+    (:func:`repro.models.layers.prepack_lm_head`); default is the tied
+    full-precision embedding matmul.
+    """
     B = tokens.shape[0]
     x = params["embed"].astype(cfg.dtype)[tokens]  # [B, 1, d]
     x = shard(x, "batch", None, None)
@@ -538,8 +544,120 @@ def forward_decode(
         )
 
     x = L.rmsnorm(params["final_ln"], x)
-    logits = (x[:, 0, :] @ params["embed"].astype(cfg.dtype).T).astype(jnp.float32)
+    logits = L.lm_head(x[:, 0, :], params["embed"], cfg.dtype, packed=head)
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (continuous-batching serving: repro.serving)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_state(
+    cfg: ModelConfig, n_slots: int, n_pages: int, page_size: int, *, dtype=jnp.bfloat16
+) -> dict:
+    """Allocate the paged serving state.
+
+    For attention families the KV cache is a physical page *pool*
+    ``[L, n_pages, page_size, G*hd]`` indexed through per-slot block
+    tables (page 0 is reserved as the null page for inactive slots); the
+    pool is sized by the page budget, not ``n_slots * max_len``.  SSM
+    state is O(1) per sequence, so it stays slot-indexed ("pages" of one
+    sequence each) and is zeroed on slot recycling.
+    """
+    if cfg.family == "attn":
+        shape = (cfg.n_layers, n_pages, page_size, cfg.kv_heads * cfg.hd)
+        if cfg.kv_dtype == "int8":
+            raise NotImplementedError("paged serving of int8 KV pools is not wired yet")
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if cfg.family == "ssm":
+        sspec = cfg.ssm_spec()
+        return {
+            "ssm": jnp.zeros(
+                (cfg.n_layers, n_slots, sspec.n_heads, sspec.d_state, sspec.head_dim),
+                jnp.float32,
+            ),
+            "conv": jnp.zeros(
+                (cfg.n_layers, n_slots, sspec.conv_width - 1, sspec.d_inner + 2 * sspec.d_state),
+                dtype,
+            ),
+        }
+    raise NotImplementedError(
+        f"continuous-batching serving supports attn/ssm families, not {cfg.family!r}"
+    )
+
+
+def reset_paged_slot(cfg: ModelConfig, state: dict, slot: jax.Array) -> dict:
+    """Zero one slot's recurrent state when the scheduler recycles it.
+
+    Attention state needs no reset — a fresh sequence starts at pos 0, so
+    every stale page row is masked until overwritten — but SSM/conv state
+    is additive across steps and must be cleared.
+    """
+    if cfg.family != "ssm":
+        return state
+    return dict(
+        state,
+        ssm=state["ssm"].at[:, slot].set(0.0),
+        conv=state["conv"].at[:, slot].set(0.0),
+    )
+
+
+def forward_decode_paged(
+    params: dict,
+    cfg: ModelConfig,
+    state: dict,
+    block_table: jax.Array,  # [S, n_blocks] int32 (attn families; ignored for ssm)
+    tokens: jax.Array,  # [S, 1] int32, one token per serving slot
+    pos: jax.Array,  # [S] int32 per-slot positions
+    head: Any = None,
+) -> tuple[jax.Array, dict]:
+    """One continuous-batching decode step over the slot set.
+
+    Same math as :func:`forward_decode` (bit-exact for identical
+    sequences), but the KV cache is gathered through per-slot block
+    tables and every slot carries its own position, so sequences admitted
+    at different times coexist in one jitted step.
+    """
+    x = params["embed"].astype(cfg.dtype)[tokens]  # [S, 1, d]
+    x = shard(x, "batch", None, None)
+    if cfg.family == "attn":
+        aspec = cfg.attn_spec()
+        windows = cfg.windows()
+
+        def body(carry, xs):
+            p, pk, pv, win = xs
+            h, npk, npv = L.attention_decode_paged(
+                p["attn"], aspec, carry, pk, pv, block_table, pos,
+                window=win, quant=cfg.quant,
+            )
+            if cfg.is_moe:
+                h = _moe_block(p["moe"], cfg, h)
+            else:
+                h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
+            return h, (npk, npv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], state["k"], state["v"], windows)
+        )
+        new_state = dict(state, k=nk, v=nv)
+    elif cfg.family == "ssm":
+
+        def body(carry, xs):
+            p, st, cv = xs
+            h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, cv, quant=cfg.quant)
+            return h, (ns, nc)
+
+        x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], state["ssm"], state["conv"]))
+        new_state = dict(state, ssm=ns, conv=nc)
+    else:
+        raise NotImplementedError(
+            f"continuous-batching serving supports attn/ssm families, not {cfg.family!r}"
+        )
+
+    x = L.rmsnorm(params["final_ln"], x)
+    logits = L.lm_head(x[:, 0, :], params["embed"], cfg.dtype, packed=head)
+    return logits, new_state
 
 
 def encode_for_decode(params: dict, cfg: ModelConfig, enc_embeds: jax.Array) -> dict:

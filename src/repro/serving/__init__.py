@@ -1,0 +1,21 @@
+"""Continuous-batching serving subsystem.
+
+The packed kernels (PR 1) made each decode matmul fast; this package
+keeps them *fed*: a paged KV/SSM cache (:mod:`repro.serving.paged_kv`),
+an admission/eviction scheduler with a waiting queue and slot recycling
+(:mod:`repro.serving.scheduler`), and the request-level engine that jits
+one fused decode step over the whole slot set
+(:mod:`repro.serving.engine`).
+"""
+from repro.serving.engine import Engine, EngineConfig, Request
+from repro.serving.paged_kv import BlockTable, PageAllocator
+from repro.serving.scheduler import Scheduler
+
+__all__ = [
+    "BlockTable",
+    "Engine",
+    "EngineConfig",
+    "PageAllocator",
+    "Request",
+    "Scheduler",
+]

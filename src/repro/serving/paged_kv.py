@@ -1,0 +1,80 @@
+"""Paged KV cache bookkeeping: physical page allocator + block tables.
+
+The device-side pool (``repro.models.transformer.init_paged_state``) is a
+preallocated tensor of fixed-size pages; everything here is host-side
+accounting deciding *which* pages each sequence owns.  The split mirrors
+vLLM's design: the allocator is a free list over physical page ids, and
+each serving slot's ordered page list is materialized as one row of a
+dense int32 block table that ships to the jitted step every iteration.
+
+Page 0 is reserved as the **null page**: inactive slots keep an all-zero
+block-table row, so the (garbage) K/V rows they write inside the fused
+step land on page 0 and can never corrupt a live sequence.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class PageAllocator:
+    """Free-list allocator over physical page ids ``1 .. n_pages-1``.
+
+    Page 0 is the reserved null page and is never handed out.  ``alloc``
+    is all-or-nothing: a request either gets every page it asked for or
+    ``None`` (so admission can wait without partial reservations leaking).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is the reserved null page)")
+        self.n_pages = n_pages
+        self._free: list[int] = list(range(n_pages - 1, 0, -1))  # pop() -> low ids first
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_usable(self) -> int:
+        """Total allocatable pages (pool size minus the null page)."""
+        return self.n_pages - 1
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"freeing invalid page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)
+
+
+class BlockTable:
+    """Dense [n_slots, n_blocks] int32 map from slot to physical pages.
+
+    Unused entries stay 0 (the null page).  The array is plain numpy; the
+    engine pushes it to the device once per step alongside the token and
+    position vectors.
+    """
+
+    def __init__(self, n_slots: int, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._table = np.zeros((n_slots, n_blocks), np.int32)
+
+    def assign(self, slot: int, pages: list[int]) -> None:
+        if len(pages) > self.n_blocks:
+            raise ValueError(
+                f"{len(pages)} pages exceed the {self.n_blocks}-block slot capacity"
+            )
+        self._table[slot] = 0
+        self._table[slot, : len(pages)] = pages
+
+    def clear(self, slot: int) -> None:
+        self._table[slot] = 0
+
+    def as_array(self) -> np.ndarray:
+        return self._table

@@ -1,0 +1,151 @@
+"""Request admission / eviction under a page-pool budget.
+
+Iteration-level (Orca-style) scheduling: every engine step, each active
+slot advances by exactly one token — prompt tokens while the request is
+in its *prefill* phase, sampled tokens in its *decode* phase — and the
+scheduler tops the batch back up whenever a slot frees.  Admission is
+reservation-based: a request is admitted only when both a slot and its
+**worst-case** page count (prompt + max_new_tokens, rounded up to whole
+pages) are available, so an admitted request can never hit pool
+exhaustion mid-flight; requests that don't fit wait in a FIFO queue.
+
+``policy="static"`` turns the same machinery into the fixed-batch
+baseline: admission happens only when *every* slot is free (gang
+admission), so the batch drains fully before any waiting request starts
+— the A/B for ``benchmarks/serving_bench.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+from repro.serving.paged_kv import BlockTable, PageAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its in-flight serving state."""
+
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    arrival: float = 0.0
+    # runtime state (engine-owned)
+    slot: int = -1
+    pages: list[int] = dataclasses.field(default_factory=list)
+    n_fed: int = 0  # prompt tokens already pushed through the model
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    t_admit: float | None = None
+    t_first_token: float | None = None
+    t_finish: float | None = None
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.n_fed < len(self.prompt)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+    def next_token(self) -> int:
+        """Token to feed this step (prompt during prefill, else sampled)."""
+        if self.in_prefill:
+            return self.prompt[self.n_fed]
+        return self.out_tokens[-1]
+
+    def position(self) -> int:
+        """Position of the token being fed this step."""
+        if self.in_prefill:
+            return self.n_fed
+        return len(self.prompt) + len(self.out_tokens) - 1
+
+
+class Scheduler:
+    """Waiting queue + slot/page accounting around a :class:`PageAllocator`."""
+
+    def __init__(
+        self,
+        n_slots: int,
+        allocator: PageAllocator,
+        block_table: BlockTable,
+        page_size: int,
+        *,
+        policy: str = "continuous",
+    ):
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown scheduling policy {policy!r}")
+        self.n_slots = n_slots
+        self.allocator = allocator
+        self.block_table = block_table
+        self.page_size = page_size
+        self.policy = policy
+        self.waiting: deque[Request] = deque()
+        self.active: dict[int, Request] = {}
+        self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
+
+    # -- queue -------------------------------------------------------------
+
+    def pages_needed(self, req: Request) -> int:
+        total = len(req.prompt) + req.max_new_tokens
+        return -(-total // self.page_size)
+
+    def submit(self, req: Request) -> None:
+        need = self.pages_needed(req)
+        if need > self.block_table.n_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages > per-slot capacity "
+                f"{self.block_table.n_blocks}; raise max_len or shrink the request"
+            )
+        if need > self.allocator.n_usable:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages > pool total "
+                f"{self.allocator.n_usable}; it could never be admitted"
+            )
+        self.waiting.append(req)
+
+    def submit_all(self, reqs: Iterable[Request]) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    # -- admission / eviction ---------------------------------------------
+
+    def admit(self, now: float = 0.0) -> list[Request]:
+        """Move waiting requests into free slots while pages allow.
+
+        FIFO without bypass: when the head request's reservation doesn't
+        fit the free pool, admission stops (smaller requests behind it
+        wait too) — simple and starvation-free.
+        """
+        if self.policy == "static" and self.active:
+            return []
+        admitted: list[Request] = []
+        while self.waiting and self._free_slots:
+            pages = self.allocator.alloc(self.pages_needed(self.waiting[0]))
+            if pages is None:
+                break
+            req = self.waiting.popleft()
+            req.slot = self._free_slots.pop()
+            req.pages = pages
+            req.t_admit = now
+            self.block_table.assign(req.slot, pages)
+            self.active[req.slot] = req
+            admitted.append(req)
+        return admitted
+
+    def finish(self, req: Request, now: float = 0.0) -> None:
+        """Evict a completed request: free its pages and recycle the slot."""
+        req.t_finish = now
+        self.allocator.free(req.pages)
+        req.pages = []
+        self.block_table.clear(req.slot)
+        del self.active[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def all_done(self) -> bool:
+        return not self.waiting and not self.active

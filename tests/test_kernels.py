@@ -200,6 +200,37 @@ def test_packed_conv1d_matches_reference(wb, ab, b, c, n, k, seed):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@settings(max_examples=10, deadline=None)
+@given(
+    wb=st.integers(2, 4),
+    ab=st.integers(2, 4),
+    block_c=st.sampled_from([1, 3, 8, 64]),
+    block_n=st.sampled_from([2, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_filter_conv_raw_cn_blocked(wb, ab, block_c, block_n, seed):
+    """C/N-blocked grid (blocks <, =, > the axes) == unblocked == oracle."""
+    from repro.kernels.filter_conv.kernel import filter_conv_raw
+
+    cfg = choose_filter_config(wb, ab, 3)
+    if cfg is None or cfg.k_p * cfg.n_p <= 1:
+        return
+    rng = np.random.default_rng(seed)
+    b, c, n, k = 3, 6, 19, 3
+    s = jnp.asarray(rng.integers(0, 2**ab, (b, c, n)), jnp.int32)
+    f = jnp.asarray(rng.integers(0, 2**wb, (c, k)), jnp.int32)
+    n_pad = -(-n // cfg.n_p) * cfg.n_p
+    sp = jnp.pad(s, ((0, 0), (0, 0), (0, n_pad - n)))
+    fp = fc_ref.pack_filter(f.astype(jnp.int32), cfg.k_p, cfg.stride)
+    got = filter_conv_raw(
+        sp, fp, k_p=cfg.k_p, n_p=cfg.n_p, stride=cfg.stride,
+        acc_chunk=cfg.acc_chunk, k_len=k, n_len=n,
+        block_b=2, block_c=block_c, block_n=block_n,
+    )
+    want = fc_ref.conv_full_levels(f, s)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_filter_config_container_safe():
     """Every chosen config keeps the packed accumulator inside int32."""
     for wb in range(2, 9):
