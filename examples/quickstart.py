@@ -4,6 +4,8 @@
 2. DSP-aware differentiable NAS on VGG-Tiny (paper §V / Fig. 5-6)
 3. Accelerator customization via Bayesian-ridge + DP (paper §VI / Table I)
 4. Bit-exact packed inference through the Pallas kernel path
+5. Continuous-batching serving (paged KV + packed LM head)
+6. Deployment-plan compiler: search -> autotune -> serve mixed precision
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -83,4 +85,32 @@ print(f"  {m['n_requests']} requests, {m['generated_tokens']} tokens @ "
 # same engine from the shell:
 #   PYTHONPATH=src python -m repro.launch.serve --engine continuous \
 #       --packed --packed-head --wbits 4 --abits 4
+
+# -- 6. deployment plans -----------------------------------------------------
+print("== Compile a deployment plan and serve it (per-layer mixed precision) ==")
+from repro.plan import apply_plan, autotune_plan, search_plan, summarize
+
+# search the per-layer bit space under a footprint budget (the packing
+# LUT + cost model score candidates; artifacts land in artifacts/plans/)
+plan = search_plan(cfg, arch="llama3.2-3b", objective="footprint", budget_frac=0.85)
+# microbenchmark block_k per unique matmul shape on this machine
+plan = autotune_plan(plan, cfg, reps=1)
+plan_path = plan.save(name="quickstart")
+print(f"  {summarize(plan)}")
+print(f"  saved {plan_path}")
+# apply: per-layer quantize + prepack (MoE + LM head included), then the
+# same continuous-batching engine serves genuinely mixed precision
+mp_params, mp_head = apply_plan(params, cfg, plan)
+eng = Engine(cfg, mp_params, EngineConfig(n_slots=2, page_size=4, max_len=32),
+             head=mp_head)
+for _ in range(4):
+    eng.submit(rng.integers(1, cfg.vocab, size=rng.integers(2, 8)).tolist(),
+               max_new_tokens=int(rng.integers(3, 8)))
+eng.warmup()
+m = eng.run(realtime=True)
+print(f"  {m['n_requests']} mixed-precision requests @ {m['tokens_per_s']:.1f} tok/s "
+      f"({plan.n_distinct_bit_pairs} distinct bit pairs)")
+# from the shell:
+#   PYTHONPATH=src python -m repro.plan.compile --arch llama3.2-3b --autotune
+#   PYTHONPATH=src python -m repro.launch.serve --plan artifacts/plans/<stem>.json
 print("quickstart complete.")

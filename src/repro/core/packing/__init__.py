@@ -5,6 +5,7 @@ from .optimizer import (
     PackingLUT,
     best_packing,
     build_lut,
+    cached_luts,
     compare_luts,
     default_lut_cache,
     lut_overhead_estimate,
@@ -25,6 +26,7 @@ __all__ = [
     "PackingLUT",
     "best_packing",
     "build_lut",
+    "cached_luts",
     "compare_luts",
     "default_lut_cache",
     "lut_overhead_estimate",

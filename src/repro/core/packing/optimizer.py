@@ -81,8 +81,8 @@ class PackingLUT:
         return self.table[(w_bits, a_bits)]
 
     # -- serialization ------------------------------------------------------
-    def save(self, path: str | pathlib.Path) -> None:
-        payload = {
+    def to_payload(self) -> dict:
+        return {
             "profile": self.profile,
             "kernel_len": self.kernel_len,
             "seq_len": self.seq_len,
@@ -91,11 +91,9 @@ class PackingLUT:
                 f"{w},{a}": dataclasses.asdict(cfg) for (w, a), cfg in self.table.items()
             },
         }
-        pathlib.Path(path).write_text(json.dumps(payload, indent=1))
 
     @classmethod
-    def load(cls, path: str | pathlib.Path) -> "PackingLUT":
-        payload = json.loads(pathlib.Path(path).read_text())
+    def from_payload(cls, payload: dict) -> "PackingLUT":
         table = {
             tuple(map(int, key.split(","))): PackingConfig(**cfg)
             for key, cfg in payload["table"].items()
@@ -107,6 +105,13 @@ class PackingLUT:
             method=payload["method"],
             table=table,
         )
+
+    def save(self, path: str | pathlib.Path) -> None:
+        pathlib.Path(path).write_text(json.dumps(self.to_payload(), indent=1))
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "PackingLUT":
+        return cls.from_payload(json.loads(pathlib.Path(path).read_text()))
 
 
 def build_lut(
@@ -166,6 +171,60 @@ def lut_overhead_estimate(cfg: PackingConfig) -> float:
     return base * cfg.dsps
 
 
+def _profile_fingerprint(profile: MulProfile) -> dict:
+    """What the LUT result depends on: the multiplier port geometry."""
+    return {"name": profile.name, "port_big": profile.port_big,
+            "port_small": profile.port_small}
+
+
+def cached_luts(
+    path: str | pathlib.Path,
+    *,
+    profile: MulProfile = DSP48E2,
+    kernel_lens: tuple[int, ...] = (1, 3, 5),
+    seq_len: int = 32,
+    bits: tuple[int, ...] = DEFAULT_BITS,
+    method: str = "mixq",
+) -> dict[int, PackingLUT]:
+    """Single-file LUT cache: build once, load on later startups.
+
+    All (profile, method, kernel_len) entries share one JSON file
+    (``artifacts/packing_luts.json`` by convention) so `serve`/plan-compile
+    startup is one read instead of an O(bits^2) placement sweep per LUT.
+    Each entry records the profile's port fingerprint; a changed profile
+    definition invalidates exactly the entries built from it.  Corrupt or
+    unreadable cache files are rebuilt, never trusted.
+    """
+    path = pathlib.Path(path)
+    try:
+        payload = json.loads(path.read_text()) if path.exists() else {}
+        if not isinstance(payload, dict):
+            payload = {}
+    except (OSError, json.JSONDecodeError):
+        payload = {}
+    fp = _profile_fingerprint(profile)
+    out: dict[int, PackingLUT] = {}
+    dirty = False
+    bits_tag = "-".join(str(b) for b in bits)
+    for k in kernel_lens:
+        key = f"{profile.name}|{method}|k{k}|n{seq_len}|b{bits_tag}"
+        entry = payload.get(key)
+        if entry and entry.get("fingerprint") == fp:
+            try:
+                out[k] = PackingLUT.from_payload(entry["lut"])
+                continue
+            except (KeyError, TypeError):
+                pass  # malformed entry: rebuild below
+        lut = build_lut(profile, kernel_len=k, seq_len=seq_len, bits=bits, method=method)
+        payload[key] = {"fingerprint": fp, "lut": lut.to_payload()}
+        out[k] = lut
+        dirty = True
+    if dirty:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps(payload, indent=1))
+    return out
+
+
 def default_lut_cache(
     cache_dir: str | pathlib.Path,
     *,
@@ -174,15 +233,14 @@ def default_lut_cache(
     seq_len: int = 32,
     method: str = "mixq",
 ) -> dict[int, PackingLUT]:
-    """Build (or load) the per-kernel-size LUTs used across the framework."""
+    """Build (or load) the per-kernel-size LUTs used across the framework.
+
+    Thin wrapper over :func:`cached_luts` keeping the historical
+    directory-based signature: everything lands in one
+    ``<cache_dir>/packing_luts.json`` with fingerprint invalidation.
+    """
     cache_dir = pathlib.Path(cache_dir)
-    cache_dir.mkdir(parents=True, exist_ok=True)
-    out = {}
-    for k in kernel_lens:
-        path = cache_dir / f"lut_{profile.name}_{method}_k{k}_n{seq_len}.json"
-        if path.exists():
-            out[k] = PackingLUT.load(path)
-        else:
-            out[k] = build_lut(profile, kernel_len=k, seq_len=seq_len, method=method)
-            out[k].save(path)
-    return out
+    return cached_luts(
+        cache_dir / "packing_luts.json",
+        profile=profile, kernel_lens=kernel_lens, seq_len=seq_len, method=method,
+    )

@@ -4,6 +4,13 @@
 interpreter mode everywhere else (CPU unit tests, CI).  Callers can
 still force either mode explicitly — the wrappers treat ``None`` as
 "ask the backend".
+
+Block-shape defaults live here too (:func:`default_block_k`), as the
+*fallback* tier of a two-tier policy: a deployment plan's autotuner
+(``repro.plan.autotune``) measures the actual winner per matmul shape
+and stores it in the plan artifact / ``PackedDenseParams.block_k``;
+only shapes without an autotuned entry fall back to these static
+per-backend values.
 """
 from __future__ import annotations
 
@@ -22,6 +29,26 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: bool | None) -> bool:
     """Map the wrappers' ``interpret=None`` default to the backend choice."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def default_block_k(k_dim: int, interpret: bool, *, compiled_default: int = 256) -> int:
+    """Static fallback K-tile when no autotuned block size is available.
+
+    Interpreter mode pays per-grid-step Python dispatch, so the whole K
+    extent in one step wins there; compiled Mosaic wants bounded VMEM
+    residency per step (256 for the packed kernel, 512 for int8 quant —
+    the caller passes its own ``compiled_default``).
+    """
+    return k_dim if interpret else compiled_default
+
+
+def resolve_block_k(
+    block_k: int | None, k_dim: int, interpret: bool, *, compiled_default: int = 256
+) -> int:
+    """An explicit/autotuned ``block_k`` wins; ``None`` asks the fallback."""
+    if block_k is not None:
+        return block_k
+    return default_block_k(k_dim, interpret, compiled_default=compiled_default)
 
 
 def pad_to(x: jax.Array, *target: int) -> jax.Array:

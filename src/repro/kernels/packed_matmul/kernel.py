@@ -201,13 +201,12 @@ def packed_matmul_raw(
     interpret: bool | None = None,
 ) -> jax.Array:
     """Integer matmul of levels; returns [M, N] int32 accumulator."""
-    from repro.kernels.common import pad_to, resolve_interpret
+    from repro.kernels.common import pad_to, resolve_block_k, resolve_interpret
 
     interpret = resolve_interpret(interpret)
     m, k = a_lvl.shape
     _, np_ = w_packed.shape
-    if block_k is None:
-        block_k = k if interpret else 256  # see Performance note
+    block_k = resolve_block_k(block_k, k, interpret)  # see Performance note
     bm = min(block_m, m)
     bnp = min(block_n // n_seg if block_n >= n_seg else 1, np_)
     bk = min(block_k, k)

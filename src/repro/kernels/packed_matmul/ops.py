@@ -75,7 +75,7 @@ def choose_config(w_bits: int, a_bits: int, min_chunk: int = 4) -> PackConfig | 
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["w_packed", "w_lvl"],
-    meta_fields=["w_bits", "a_bits", "w_scale", "w_zero", "cfg", "n_out"],
+    meta_fields=["w_bits", "a_bits", "w_scale", "w_zero", "cfg", "n_out", "block_k"],
 )
 @dataclasses.dataclass(frozen=True)
 class PackedDenseParams:
@@ -84,7 +84,9 @@ class PackedDenseParams:
     Exactly one of ``w_packed`` (multi-segment placement exists and N is
     divisible by ``cfg.n_seg``) / ``w_lvl`` (plain integer fallback) is
     set.  Scales and the placement are static metadata so the params can
-    flow through jit/scan without retracing on values.
+    flow through jit/scan without retracing on values.  ``block_k`` is
+    the autotuned K-tile for this weight's matmul shape (None = static
+    backend default; see ``repro.plan.autotune``).
     """
 
     w_packed: jax.Array | None  # [K, N // n_seg] int32 packed levels
@@ -95,27 +97,40 @@ class PackedDenseParams:
     w_zero: float
     cfg: PackConfig | None
     n_out: int
+    block_k: int | None = None
 
 
-def prepack_dense(w: jax.Array, *, w_bits: int, a_bits: int) -> PackedDenseParams:
+def prepack_dense(
+    w: jax.Array, *, w_bits: int, a_bits: int, block_k: int | None = None
+) -> PackedDenseParams:
     """Quantize + pack a float weight matrix once, at load time.
 
     ``w`` may be [K, N], stacked [L, K, N] (the decode scan's layer
     axis), per-expert [E, K, N] (MoE), or stacked-expert [L, E, K, N];
     leading axes map so level normalization stays per-matrix, matching
-    the QAT fake-quant forward.
+    the QAT fake-quant forward.  ``block_k`` pins the kernel's K-tile
+    (deployment-plan autotuning); None keeps the backend default.
     """
     if w.ndim in (3, 4):
-        return jax.vmap(lambda wl: prepack_dense(wl, w_bits=w_bits, a_bits=a_bits))(w)
+        return jax.vmap(
+            lambda wl: prepack_dense(wl, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
+        )(w)
     cfg = choose_config(w_bits, a_bits)
     n = w.shape[1]
     w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
-    if cfg is None or n % cfg.n_seg != 0:
+    if cfg is None:
         return PackedDenseParams(
-            None, w_lvl.astype(jnp.int32), w_bits, a_bits, w_scale, w_zero, None, n
+            None, w_lvl.astype(jnp.int32), w_bits, a_bits, w_scale, w_zero, None, n, block_k
         )
-    wp = ref.pack_weights(w_lvl.astype(jnp.int32), cfg.n_seg, cfg.stride)
-    return PackedDenseParams(wp, None, w_bits, a_bits, w_scale, w_zero, cfg, n)
+    # pad N up to a multiple of n_seg with zero-level columns: they ride the
+    # packed words for free and are sliced off after dequantization, so no
+    # output width forces the unpacked int32 fallback
+    n_pad = -(-n // cfg.n_seg) * cfg.n_seg
+    w_lvl = w_lvl.astype(jnp.int32)
+    if n_pad != n:
+        w_lvl = jnp.pad(w_lvl, ((0, 0), (0, n_pad - n)))
+    wp = ref.pack_weights(w_lvl, cfg.n_seg, cfg.stride)
+    return PackedDenseParams(wp, None, w_bits, a_bits, w_scale, w_zero, cfg, n, block_k)
 
 
 @functools.lru_cache(maxsize=None)
@@ -126,6 +141,7 @@ def _prepacked_fn(
     cfg: PackConfig | None,
     interpret: bool,
     block_k: int | None,
+    n_out: int | None = None,
 ):
     """Jitted fast path, one closure per static config.
 
@@ -139,9 +155,9 @@ def _prepacked_fn(
 
     @jax.jit
     def run(x: jax.Array, w_data: jax.Array) -> jax.Array:
-        resolved_bk = block_k
-        if resolved_bk is None:
-            resolved_bk = x.shape[1] if interpret else 256
+        from repro.kernels.common import resolve_block_k
+
+        resolved_bk = resolve_block_k(block_k, x.shape[1], interpret)
         if cfg is not None and resolved_bk >= x.shape[1]:
             # whole-K tile resident: one fused kernel does quantize +
             # packed reduction + row sums
@@ -154,7 +170,8 @@ def _prepacked_fn(
                 acc_chunk=cfg.acc_chunk,
                 interpret=interpret,
             )
-            return ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
+            out = ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
+            return out if n_out is None else out[:, :n_out]
         a_lvl, a_scale_ = act_to_int_levels(x, a_bits)
         if cfg is None:
             acc = ref.matmul_levels(a_lvl, w_data)
@@ -169,7 +186,8 @@ def _prepacked_fn(
                 interpret=interpret,
             )
         a_sum = jnp.sum(a_lvl, axis=1)
-        return ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale_)
+        out = ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale_)
+        return out if n_out is None else out[:, :n_out]
 
     return run
 
@@ -222,8 +240,11 @@ def packed_dense(
     :func:`prepack_dense` for the serving fast path.
     """
     if isinstance(w, PackedDenseParams):
+        padded = w.cfg is not None and w.w_packed.shape[-1] * w.cfg.n_seg != w.n_out
         fn = _prepacked_fn(
-            w.a_bits, w.w_scale, w.w_zero, w.cfg, resolve_interpret(interpret), block_k
+            w.a_bits, w.w_scale, w.w_zero, w.cfg, resolve_interpret(interpret),
+            block_k if block_k is not None else w.block_k,
+            w.n_out if padded else None,
         )
         return fn(x, w.w_packed if w.cfg is not None else w.w_lvl)
     if w_bits is None or a_bits is None:

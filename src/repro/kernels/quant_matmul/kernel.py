@@ -66,15 +66,14 @@ def quant_matmul_raw(
     block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    from repro.kernels.common import pad_to, resolve_interpret
+    from repro.kernels.common import pad_to, resolve_block_k, resolve_interpret
 
     interpret = resolve_interpret(interpret)
     m, k = a_i8.shape
     _, n = w_i8.shape
-    if block_k is None:
-        # backend-adaptive: K-blocking bounds VMEM residency on TPU; in
-        # interpret mode extra grid steps are pure overhead
-        block_k = k if interpret else 512
+    # backend-adaptive: K-blocking bounds VMEM residency on TPU; in
+    # interpret mode extra grid steps are pure overhead
+    block_k = resolve_block_k(block_k, k, interpret, compiled_default=512)
     bm, bn = min(block_m, m), min(block_n, n)
     bk = min(block_k, k)
     grid = (-(-m // bm), -(-n // bn), -(-k // bk))

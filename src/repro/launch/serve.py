@@ -16,9 +16,16 @@ so each decode step calls straight into the Pallas Kernel-Packing
 matmul; ``--packed-head`` additionally prepacks the tied LM head so the
 final logits matmul runs sub-8-bit too.
 
+``--plan path.json`` loads a deployment-plan artifact
+(``python -m repro.plan.compile``) instead: per-layer mixed-precision
+quantize + prepack (three or more distinct bit pairs in one model),
+autotuned kernel block shapes, and the plan's LM-head entry — the
+engine then serves genuinely mixed precision.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 64
   PYTHONPATH=src python -m repro.launch.serve --packed --wbits 4 --abits 4
   PYTHONPATH=src python -m repro.launch.serve --engine static --int8
+  PYTHONPATH=src python -m repro.launch.serve --plan artifacts/plans/ci-plan.json
 """
 from __future__ import annotations
 
@@ -35,9 +42,9 @@ from repro.models import transformer as T
 from repro.parallel.sharding import ShardingRules
 
 
-_PROJ_WEIGHT_RE = r"(wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$"
-# MoE expert tensors live as bare [E, d, f] / [L, E, d, f] arrays (no /w leaf)
-_MOE_WEIGHT_RE = r"(w_up|w_gate|w_down)$"
+# canonical projection/MoE weight patterns live with the plan compiler
+from repro.plan.apply import MOE_WEIGHT_RE as _MOE_WEIGHT_RE  # noqa: E402
+from repro.plan.apply import PROJ_WEIGHT_RE as _PROJ_WEIGHT_RE  # noqa: E402
 
 
 def quantize_params_int8(params):
@@ -69,24 +76,16 @@ def quantize_params_packed(params, *, w_bits: int, a_bits: int, verbose: bool = 
     matmul straight into the Pallas Kernel-Packing kernel.  Any
     projection-shaped tensor left in float is counted and reported so
     silent precision gaps are visible.
+
+    This is the *global* (one bit pair) special case of
+    ``repro.plan.apply``; per-layer mixed precision comes from
+    ``--plan`` / :func:`repro.plan.apply.apply_plan`, which shares the
+    tree walk below so uniform plans stay bit-identical to this path.
     """
-    import re
+    from repro.plan.apply import prepack_tree
 
-    from repro.kernels.packed_matmul.ops import prepack_dense
-
-    skipped = []
-
-    def one(path, leaf):
-        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
-        if re.search(_PROJ_WEIGHT_RE, pstr) and leaf.ndim in (2, 3):
-            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits)
-        if re.search(_MOE_WEIGHT_RE, pstr) and leaf.ndim in (3, 4):
-            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits)
-        if (re.search(_PROJ_WEIGHT_RE, pstr) or re.search(_MOE_WEIGHT_RE, pstr)) and leaf.ndim >= 2:
-            skipped.append(pstr)
-        return leaf
-
-    out = jax.tree_util.tree_map_with_path(one, params)
+    skipped: list[str] = []
+    out = prepack_tree(params, w_bits=w_bits, a_bits=a_bits, skipped=skipped)
     if skipped and verbose:
         print(f"quantize_params_packed: {len(skipped)} projection tensors left in float: "
               + ", ".join(skipped))
@@ -122,7 +121,7 @@ def _serve_static(args, cfg, params, head) -> dict:
     return {"tokens_per_s": tps, "latency_ms_per_step": dt / (args.tokens - 1) * 1e3}
 
 
-def _serve_continuous(args, cfg, params) -> dict:
+def _serve_continuous(args, cfg, params, head=None) -> dict:
     """Continuous-batching engine over a synthetic same-arrival workload."""
     from repro.serving import Engine, EngineConfig
 
@@ -137,6 +136,7 @@ def _serve_continuous(args, cfg, params) -> dict:
             packed_head=args.packed_head,
             head_bits=(args.wbits, args.abits) if args.packed else (8, 8),
         ),
+        head=head,
     )
     rng = jax.random.PRNGKey(2)
     for i in range(args.requests or 2 * args.batch):
@@ -151,7 +151,10 @@ def _serve_continuous(args, cfg, params) -> dict:
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, default="llama3.2-3b")
+    # default=None so an explicitly-passed arch is distinguishable from the
+    # default when checking it against a --plan artifact's arch
+    ap.add_argument("--arch", choices=ARCHS, default=None,
+                    help="architecture (default llama3.2-3b, or the plan's arch)")
     ap.add_argument(
         "--engine", choices=("continuous", "static"), default=None,
         help="continuous-batching engine (default for attn/ssm archs) or the "
@@ -168,6 +171,11 @@ def main(argv=None) -> dict:
                     help="KV page-pool budget (0 = full residency)")
     ap.add_argument("--int8", action="store_true", help="mixed-precision int8 weights")
     ap.add_argument(
+        "--plan", metavar="JSON",
+        help="deployment plan artifact (repro.plan.compile): per-layer mixed-"
+        "precision quantize + prepack, autotuned block shapes, packed LM head",
+    )
+    ap.add_argument(
         "--packed", action="store_true",
         help="sub-8-bit weights, bit-packed once at load (Kernel-Packing serve path)",
     )
@@ -178,28 +186,61 @@ def main(argv=None) -> dict:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, smoke=not args.full)
+    plan = None
+    smoke = not args.full
+    if args.plan:
+        from repro.plan import DeployPlan, summarize
+
+        if args.packed or args.int8 or args.packed_head:
+            raise SystemExit(
+                "--plan already fixes per-layer quantization and the LM head; "
+                "drop --packed/--int8/--packed-head"
+            )
+        plan = DeployPlan.load(args.plan)
+        if args.arch is not None and args.arch != plan.arch:
+            raise SystemExit(
+                f"--arch {args.arch} conflicts with plan arch {plan.arch}"
+            )
+        args.arch = plan.arch
+        if args.full and plan.smoke:
+            raise SystemExit(
+                "--full conflicts with a smoke-compiled plan; recompile with "
+                "`repro.plan.compile --full`"
+            )
+        smoke = plan.smoke  # the plan's layer shapes fix the config variant
+        print(f"plan: {summarize(plan)}")
+    elif args.arch is None:
+        args.arch = "llama3.2-3b"
+
+    cfg = get_config(args.arch, smoke=smoke)
     engine = args.engine
     if engine is None:
         engine = "continuous" if cfg.family in ("attn", "ssm") else "static"
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    if args.packed:
+    head = None
+    if plan is not None:
+        from repro.plan import apply_plan
+
+        params, head = apply_plan(params, cfg, plan)
+    elif args.packed:
         params = quantize_params_packed(params, w_bits=args.wbits, a_bits=args.abits)
     elif args.int8:
         params = quantize_params_int8(params)
 
     if engine == "continuous":
-        out = _serve_continuous(args, cfg, params)
+        out = _serve_continuous(args, cfg, params, head=head)
     else:
-        head = None
-        if args.packed_head:
+        if head is None and args.packed_head:
             from repro.models.layers import prepack_lm_head
 
             wb, ab = (args.wbits, args.abits) if args.packed else (8, 8)
             head = prepack_lm_head(params["embed"], w_bits=wb, a_bits=ab)
         out = _serve_static(args, cfg, params, head)
 
-    mode = "packed" if args.packed else ("int8" if args.int8 else "fp")
+    if plan is not None:
+        mode = f"plan[{plan.n_distinct_bit_pairs} bit pairs]"
+    else:
+        mode = "packed" if args.packed else ("int8" if args.int8 else "fp")
     if args.packed_head:
         mode += "+packed_head"
     print(

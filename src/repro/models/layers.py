@@ -362,7 +362,9 @@ def attention_decode_paged(
     *,
     window: jax.Array | int = 0,
     quant: QuantConfig = NO_QUANT,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
+    pool_k_scale: jax.Array | None = None,  # [P, page_size, 1] when pool is int8
+    pool_v_scale: jax.Array | None = None,
+):
     """One decode step against a paged KV pool (continuous batching).
 
     Each serving slot owns an ordered list of physical pages
@@ -375,12 +377,19 @@ def attention_decode_paged(
     so their (garbage) writes land on reserved page 0 and never touch a
     live sequence.  Unlike the monolithic path, ``pos`` is a vector: slots
     admitted at different times decode at different depths in one step.
+
+    An int8 pool (``pool_k.dtype == int8``) stores each K/V row as int8
+    levels with one float scale per page row (pages carry a parallel
+    ``[P, page_size, 1]`` scale pool); rows are quantized on scatter and
+    dequantized on gather, halving paged-KV HBM.  Returns two extra pool
+    arrays (the updated scales) in that mode.
     """
     S, _, d = x.shape
     H, G, hd = s.n_heads, s.kv_heads, s.head_dim
     page_size = pool_k.shape[1]
     n_blocks = block_table.shape[1]
     T = n_blocks * page_size
+    kv_int8 = pool_k.dtype == jnp.int8
     h = rmsnorm(params["ln"], x)
     q = _split_heads(dense(params["wq"], h, name="attn_q", quant=quant), H, hd)
     k = _split_heads(dense(params["wk"], h, name="attn_k", quant=quant), G, hd)
@@ -397,10 +406,22 @@ def attention_decode_paged(
     v_row = v.reshape(S, G * hd)
     page = jnp.take_along_axis(block_table, posb // page_size, axis=1)[:, 0]
     off = pos % page_size
-    pool_k = pool_k.at[page, off].set(k_row.astype(pool_k.dtype))
-    pool_v = pool_v.at[page, off].set(v_row.astype(pool_v.dtype))
-    k_view = pool_k[block_table].reshape(S, T, G, hd)
-    v_view = pool_v[block_table].reshape(S, T, G, hd)
+    if kv_int8:
+        k_lvl, k_sc = quantize_kv_row(k_row[:, None, :])
+        v_lvl, v_sc = quantize_kv_row(v_row[:, None, :])
+        pool_k = pool_k.at[page, off].set(k_lvl[:, 0])
+        pool_v = pool_v.at[page, off].set(v_lvl[:, 0])
+        pool_k_scale = pool_k_scale.at[page, off].set(k_sc[:, 0])
+        pool_v_scale = pool_v_scale.at[page, off].set(v_sc[:, 0])
+        k_deq = pool_k[block_table].astype(x.dtype) * pool_k_scale[block_table].astype(x.dtype)
+        v_deq = pool_v[block_table].astype(x.dtype) * pool_v_scale[block_table].astype(x.dtype)
+        k_view = k_deq.reshape(S, T, G, hd)
+        v_view = v_deq.reshape(S, T, G, hd)
+    else:
+        pool_k = pool_k.at[page, off].set(k_row.astype(pool_k.dtype))
+        pool_v = pool_v.at[page, off].set(v_row.astype(pool_v.dtype))
+        k_view = pool_k[block_table].reshape(S, T, G, hd)
+        v_view = pool_v[block_table].reshape(S, T, G, hd)
     scale = 1.0 / jnp.sqrt(hd).astype(x.dtype)
     scores = _gqa_scores(q, k_view.astype(x.dtype), scale=scale)  # [S,G,H/G,1,T]
     kpos = jnp.arange(T, dtype=jnp.int32)
@@ -412,6 +433,8 @@ def attention_decode_paged(
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     o = jnp.einsum("bghqk,bkgd->bqghd", p, v_view.astype(x.dtype))
     out = dense(params["wo"], o.reshape(S, 1, H * hd), name="attn_o", quant=quant)
+    if kv_int8:
+        return x + out, pool_k, pool_v, pool_k_scale, pool_v_scale
     return x + out, pool_k, pool_v
 
 

@@ -450,12 +450,21 @@ def forward_decode(
     ``head`` optionally carries prepacked sub-8-bit LM-head weights
     (:func:`repro.models.layers.prepack_lm_head`); default is the tied
     full-precision embedding matmul.
+
+    ``params["layers"]`` may be a list of per-layer pytrees instead of
+    the stacked scan layout (deployment plans with per-layer bit pairs;
+    attn/ssm families only) — the stack is unrolled with identical math.
     """
     B = tokens.shape[0]
     x = params["embed"].astype(cfg.dtype)[tokens]  # [B, 1, d]
     x = shard(x, "batch", None, None)
     aspec = cfg.attn_spec()
     windows = cfg.windows()
+    per_layer = isinstance(params["layers"], (list, tuple))
+    if per_layer and cfg.family not in ("attn", "ssm"):
+        raise NotImplementedError(
+            f"per-layer (list) params support attn/ssm families, not {cfg.family!r}"
+        )
 
     if cfg.family in ("attn", "encdec"):
         kv_int8 = cfg.kv_dtype == "int8" and cfg.family == "attn"
@@ -492,7 +501,25 @@ def forward_decode(
                 h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
             return h, (nk, nv)
 
-        if kv_int8:
+        if per_layer:
+            # heterogeneous (deployment-plan) layers: iterate the same body
+            # the scan uses, feeding each layer's cache slice by hand
+            outs = []
+            for i, p in enumerate(params["layers"]):
+                if kv_int8:
+                    xs_i = (p, cache["k"][i], cache["v"][i],
+                            cache["k_scale"][i], cache["v_scale"][i], windows[i])
+                else:
+                    xs_i = (p, cache["k"][i], cache["v"][i], windows[i])
+                x, out = body(x, xs_i)
+                outs.append(out)
+            stacked = [jnp.stack(parts) for parts in zip(*outs)]
+            if kv_int8:
+                new_cache = dict(cache, k=stacked[0], v=stacked[1],
+                                 k_scale=stacked[2], v_scale=stacked[3])
+            else:
+                new_cache = dict(cache, k=stacked[0], v=stacked[1])
+        elif kv_int8:
             xs = (params["layers"], cache["k"], cache["v"],
                   cache["k_scale"], cache["v_scale"], windows)
             x, (nk, nv, nks, nvs) = jax.lax.scan(body, x, xs)
@@ -510,8 +537,18 @@ def forward_decode(
             h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, cv, quant=cfg.quant)
             return h, (ns, nc)
 
-        x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]))
-        new_cache = dict(cache, ssm=ns, conv=nc)
+        if per_layer:
+            outs = []
+            for i, p in enumerate(params["layers"]):
+                x, out = body(x, (p, cache["ssm"][i], cache["conv"][i]))
+                outs.append(out)
+            ns, nc = (jnp.stack(parts) for parts in zip(*outs))
+            new_cache = dict(cache, ssm=ns, conv=nc)
+        else:
+            x, (ns, nc) = jax.lax.scan(
+                body, x, (params["layers"], cache["ssm"], cache["conv"])
+            )
+            new_cache = dict(cache, ssm=ns, conv=nc)
     else:  # hybrid
         new_ssm, new_conv = [], []
         idx = 0
@@ -554,7 +591,8 @@ def forward_decode(
 
 
 def init_paged_state(
-    cfg: ModelConfig, n_slots: int, n_pages: int, page_size: int, *, dtype=jnp.bfloat16
+    cfg: ModelConfig, n_slots: int, n_pages: int, page_size: int, *, dtype=jnp.bfloat16,
+    kv_dtype=None,
 ) -> dict:
     """Allocate the paged serving state.
 
@@ -564,11 +602,26 @@ def init_paged_state(
     pool is sized by the page budget, not ``n_slots * max_len``.  SSM
     state is O(1) per sequence, so it stays slot-indexed ("pages" of one
     sequence each) and is zeroed on slot recycling.
+
+    ``kv_dtype`` overrides ``cfg.kv_dtype`` ("int8", ``jnp.int8``, or a
+    float dtype).  An int8 pool stores K/V rows as int8 levels plus one
+    float32 scale per page row (``k_scale``/``v_scale`` pools), halving
+    paged-KV memory; rows are dequantized on gather inside
+    :func:`repro.models.layers.attention_decode_paged`.
     """
+    kv = cfg.kv_dtype if kv_dtype is None else kv_dtype
+    kv_int8 = kv == "int8" or kv == jnp.int8
+    if not kv_int8 and kv_dtype is not None and not isinstance(kv, str):
+        dtype = kv  # explicit float override (e.g. jnp.float32 pools)
     if cfg.family == "attn":
         shape = (cfg.n_layers, n_pages, page_size, cfg.kv_heads * cfg.hd)
-        if cfg.kv_dtype == "int8":
-            raise NotImplementedError("paged serving of int8 KV pools is not wired yet")
+        if kv_int8:
+            return {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            }
         return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
     if cfg.family == "ssm":
         sspec = cfg.ssm_spec()
@@ -618,38 +671,100 @@ def forward_decode_paged(
     sequences), but the KV cache is gathered through per-slot block
     tables and every slot carries its own position, so sequences admitted
     at different times coexist in one jitted step.
+
+    ``params["layers"]`` is either the stacked pytree (homogeneous
+    layers, scanned — the fast path) or a *list* of per-layer pytrees.
+    The list form exists for deployment plans (``repro.plan``) where
+    layers carry different ``(w_bits, a_bits)`` packed weights: their
+    static metadata differs per layer, so they cannot ride one scan and
+    are unrolled instead — same math, layer by layer.
     """
     x = params["embed"].astype(cfg.dtype)[tokens]  # [S, 1, d]
     x = shard(x, "batch", None, None)
+    per_layer = isinstance(params["layers"], (list, tuple))
     if cfg.family == "attn":
         aspec = cfg.attn_spec()
         windows = cfg.windows()
+        kv_int8 = state["k"].dtype == jnp.int8
 
-        def body(carry, xs):
-            p, pk, pv, win = xs
-            h, npk, npv = L.attention_decode_paged(
-                p["attn"], aspec, carry, pk, pv, block_table, pos,
-                window=win, quant=cfg.quant,
-            )
+        def one_layer(h, p, pk, pv, pks, pvs, win):
+            if kv_int8:
+                h, npk, npv, npks, npvs = L.attention_decode_paged(
+                    p["attn"], aspec, h, pk, pv, block_table, pos,
+                    window=win, quant=cfg.quant,
+                    pool_k_scale=pks, pool_v_scale=pvs,
+                )
+            else:
+                h, npk, npv = L.attention_decode_paged(
+                    p["attn"], aspec, h, pk, pv, block_table, pos,
+                    window=win, quant=cfg.quant,
+                )
+                npks = npvs = None
             if cfg.is_moe:
                 h = _moe_block(p["moe"], cfg, h)
             else:
                 h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
-            return h, (npk, npv)
+            return h, npk, npv, npks, npvs
 
-        x, (nk, nv) = jax.lax.scan(
-            body, x, (params["layers"], state["k"], state["v"], windows)
-        )
-        new_state = dict(state, k=nk, v=nv)
+        if per_layer:
+            nk, nv, nks, nvs = [], [], [], []
+            for i, p in enumerate(params["layers"]):
+                x, k_i, v_i, ks_i, vs_i = one_layer(
+                    x, p, state["k"][i], state["v"][i],
+                    state["k_scale"][i] if kv_int8 else None,
+                    state["v_scale"][i] if kv_int8 else None,
+                    windows[i],
+                )
+                nk.append(k_i)
+                nv.append(v_i)
+                nks.append(ks_i)
+                nvs.append(vs_i)
+            new_state = dict(state, k=jnp.stack(nk), v=jnp.stack(nv))
+            if kv_int8:
+                new_state.update(k_scale=jnp.stack(nks), v_scale=jnp.stack(nvs))
+        elif kv_int8:
+
+            def body(carry, xs):
+                p, pk, pv, pks, pvs, win = xs
+                h, npk, npv, npks, npvs = one_layer(carry, p, pk, pv, pks, pvs, win)
+                return h, (npk, npv, npks, npvs)
+
+            x, (nk, nv, nks, nvs) = jax.lax.scan(
+                body, x,
+                (params["layers"], state["k"], state["v"],
+                 state["k_scale"], state["v_scale"], windows),
+            )
+            new_state = dict(state, k=nk, v=nv, k_scale=nks, v_scale=nvs)
+        else:
+
+            def body(carry, xs):
+                p, pk, pv, win = xs
+                h, npk, npv, _, _ = one_layer(carry, p, pk, pv, None, None, win)
+                return h, (npk, npv)
+
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], state["k"], state["v"], windows)
+            )
+            new_state = dict(state, k=nk, v=nv)
     elif cfg.family == "ssm":
+        if per_layer:
+            ns_l, nc_l = [], []
+            for i, p in enumerate(params["layers"]):
+                x, ns_i, nc_i = M.mamba_decode(
+                    p, cfg.ssm_spec(), x, state["ssm"][i], state["conv"][i], quant=cfg.quant
+                )
+                ns_l.append(ns_i)
+                nc_l.append(nc_i)
+            new_state = dict(state, ssm=jnp.stack(ns_l), conv=jnp.stack(nc_l))
+        else:
 
-        def body(carry, xs):
-            p, st, cv = xs
-            h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, cv, quant=cfg.quant)
-            return h, (ns, nc)
+            def body(carry, xs):
+                p, st, cv = xs
+                h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, cv, quant=cfg.quant)
+                return h, (ns, nc)
 
-        x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], state["ssm"], state["conv"]))
-        new_state = dict(state, ssm=ns, conv=nc)
+            x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], state["ssm"], state["conv"]))
+            new_state = dict(state, ssm=ns, conv=nc)
     else:
         raise NotImplementedError(
             f"continuous-batching serving supports attn/ssm families, not {cfg.family!r}"

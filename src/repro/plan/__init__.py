@@ -1,0 +1,42 @@
+"""Deployment-plan compiler: search → autotune → apply → serve.
+
+The missing middle of the paper's unified flow, for the serving stack:
+``search`` picks per-layer ``(w_bits, a_bits)`` with the DSP-packing
+LUTs (or adapts a ``core.nas`` result), ``autotune`` measures kernel
+block shapes on-device, ``plan`` serializes the whole decision as a
+hashed JSON artifact, and ``apply`` lowers it onto real params for the
+continuous-batching engine (``launch.serve --plan``).
+"""
+from .plan import PLAN_SCHEMA_VERSION, PLANS_DIR, DeployPlan, LayerPlan, PlanError, summarize
+from .search import (
+    DEFAULT_BIT_CHOICES,
+    layer_matmul_shapes,
+    plan_from_bits,
+    plan_from_nas_result,
+    search_plan,
+    serving_lut,
+    uniform_plan,
+)
+from .autotune import autotune_plan, measure_block_k, measure_pair_times
+from .apply import apply_plan, prepack_tree
+
+__all__ = [
+    "PLAN_SCHEMA_VERSION",
+    "PLANS_DIR",
+    "DeployPlan",
+    "LayerPlan",
+    "PlanError",
+    "summarize",
+    "DEFAULT_BIT_CHOICES",
+    "layer_matmul_shapes",
+    "plan_from_bits",
+    "plan_from_nas_result",
+    "search_plan",
+    "serving_lut",
+    "uniform_plan",
+    "autotune_plan",
+    "measure_block_k",
+    "measure_pair_times",
+    "apply_plan",
+    "prepack_tree",
+]

@@ -1,0 +1,107 @@
+"""Apply a deployment plan to real params: per-layer quantize + prepack.
+
+This generalizes ``launch.serve.quantize_params_packed`` from one global
+``(w_bits, a_bits)`` pair to a per-layer map.  Uniform plans keep the
+stacked scan layout — byte-for-byte the same params (and therefore
+bit-exact logits) as the global path.  Heterogeneous plans unstack
+``params["layers"]`` into a per-layer list (the packed metadata differs
+per layer, so the layers cannot ride one ``jax.lax.scan``) which
+``transformer.forward_decode{,_paged}`` unrolls with identical math —
+MoE expert tensors and the LM head included.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+
+from repro.kernels.packed_matmul.ops import prepack_dense
+from repro.models.layers import prepack_lm_head
+from repro.plan.plan import DeployPlan
+
+# projection weights live at ".../<name>/w"; MoE expert tensors are bare
+# [E, d, f] / [L, E, d, f] arrays (no /w leaf)
+PROJ_WEIGHT_RE = r"(wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$"
+MOE_WEIGHT_RE = r"(w_up|w_gate|w_down)$"
+
+
+def prepack_tree(
+    tree,
+    *,
+    w_bits: int,
+    a_bits: int,
+    block_k: int | None = None,
+    skipped: list | None = None,
+):
+    """Quantize + bit-pack every projection weight in a params subtree.
+
+    Projection matrices ([K, N] or scan-stacked [L, K, N]) and MoE expert
+    tensors ([E, d, f] or [L, E, d, f]) become
+    :class:`~repro.kernels.packed_matmul.ops.PackedDenseParams` leaves.
+    Projection-shaped tensors left in float are appended to ``skipped``
+    so silent precision gaps stay visible.
+    """
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        if re.search(PROJ_WEIGHT_RE, pstr) and leaf.ndim in (2, 3):
+            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
+        if re.search(MOE_WEIGHT_RE, pstr) and leaf.ndim in (3, 4):
+            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
+        if (re.search(PROJ_WEIGHT_RE, pstr) or re.search(MOE_WEIGHT_RE, pstr)) and leaf.ndim >= 2:
+            if skipped is not None:
+                skipped.append(pstr)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def apply_plan(params: dict, cfg, plan: DeployPlan, *, verbose: bool = True):
+    """Turn float params + a plan into serveable mixed-precision params.
+
+    Returns ``(new_params, packed_head)``; ``packed_head`` is None when
+    the plan has no ``lm_head`` entry, otherwise prepacked LM-head
+    weights for :func:`repro.models.layers.lm_head` / the serving
+    engine.  The float ``embed`` stays in the params (token embedding
+    lookups read it); only the head *matmul* goes sub-8-bit.
+    """
+    plan.validate()
+    if plan.family != cfg.family:
+        raise ValueError(
+            f"plan family {plan.family!r} does not match config family {cfg.family!r}"
+        )
+    if len(plan.layers) != cfg.n_layers:
+        raise ValueError(
+            f"plan has {len(plan.layers)} layers, config {cfg.name!r} has {cfg.n_layers}"
+        )
+    skipped: list[str] = []
+    out = dict(params)
+    if plan.uniform:
+        lp = plan.layers[0]
+        out["layers"] = prepack_tree(
+            params["layers"], w_bits=lp.w_bits, a_bits=lp.a_bits,
+            block_k=lp.block_k, skipped=skipped,
+        )
+    else:
+        per_layer = []
+        for i, lp in enumerate(plan.layers):
+            layer_tree = jax.tree.map(lambda a: a[i], params["layers"])
+            per_layer.append(
+                prepack_tree(
+                    layer_tree, w_bits=lp.w_bits, a_bits=lp.a_bits,
+                    block_k=lp.block_k, skipped=skipped,
+                )
+            )
+        out["layers"] = per_layer
+    head = None
+    if plan.lm_head is not None:
+        head = prepack_lm_head(
+            params["embed"], w_bits=plan.lm_head.w_bits, a_bits=plan.lm_head.a_bits
+        )
+    if skipped and verbose:
+        uniq = sorted(set(skipped))
+        print(
+            f"apply_plan: {len(uniq)} projection tensors left in float: "
+            + ", ".join(uniq)
+        )
+    return out, head

@@ -1,0 +1,193 @@
+"""On-device block-shape autotuner for deployment plans.
+
+``kernels/common.py`` keeps a *static* per-backend ``block_k`` fallback
+(whole-K in interpret mode, 256 compiled).  That default is right on
+average and wrong per shape; this module measures the actual winner for
+every unique ``(M, N, K, w_bits, a_bits)`` matmul in a plan by timing
+the real serving entry point (:func:`packed_dense` over prepacked
+weights) on the current device, then writes the winning ``block_k``
+into each :class:`LayerPlan` — from where ``repro.plan.apply`` threads
+it into ``PackedDenseParams.block_k`` and the kernel dispatch.
+
+Results are cached inside the plan artifact (``plan.autotune``), keyed
+by shape+bits+backend, so re-applying a tuned plan never re-times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import resolve_interpret
+from repro.kernels.packed_matmul.ops import packed_dense, prepack_dense
+from repro.plan.plan import DeployPlan
+from repro.plan.search import layer_matmul_shapes
+
+
+def candidate_block_ks(k_dim: int, interpret: bool) -> list[int]:
+    """Small, shape-derived candidate set: the whole K extent (the
+    interpret-mode static default), power-of-two fractions down to 64,
+    and the compiled-backend static default.  Always concrete ints — a
+    tuned plan pins its block shapes instead of deferring to the static
+    fallback."""
+    cands: list[int] = [k_dim]
+    step = k_dim // 2
+    while step >= 64:
+        cands.append(step)
+        step //= 2
+    if not interpret:
+        cands.append(256)
+    # dedupe preserving order
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def _time_once(fn, *args) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def measure_block_k(
+    m: int, k: int, n: int, w_bits: int, a_bits: int,
+    *,
+    reps: int = 3,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> dict:
+    """Time every candidate ``block_k`` for one matmul shape; returns
+    ``{"block_k": winner, "timings_us": {...}}``.
+
+    The weight is prepacked once per candidate (packing is identical
+    across candidates — only the kernel's K-tiling changes), timing the
+    exact code path serving runs: the cached jitted closure behind
+    :func:`packed_dense`.  Minimum-of-reps beats the noise floor on
+    shared machines better than the mean.
+    """
+    interp = resolve_interpret(interpret)
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (m, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32)
+    pre = prepack_dense(w, w_bits=w_bits, a_bits=a_bits)  # pack once; only the
+    timings: dict[str, float] = {}                        # K-tiling varies below
+    best, best_t = None, float("inf")
+    for bk in candidate_block_ks(k, interp):
+
+        def run(x, bk=bk):
+            return packed_dense(x, pre, block_k=bk, interpret=interp)
+
+        _time_once(run, x)  # compile / warm the cache
+        t = min(_time_once(run, x) for _ in range(reps))
+        timings[str(bk)] = t * 1e6
+        if t < best_t:
+            best, best_t = bk, t
+    return {"block_k": best, "timings_us": timings}
+
+
+def measure_pair_times(
+    cfg,
+    *,
+    bit_choices,
+    n_slots: int = 8,
+    reps: int = 3,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> dict:
+    """Microbenchmark every (w_bits, a_bits) pair on the model's dominant
+    matmul shapes; returns ``{(w, a): seconds_per_layer}``.
+
+    The packing LUT's T_mul ranks placements by multiplier throughput —
+    the right model for the paper's DSP fabric and the TPU MXU, but
+    blind to per-backend kernel overheads (e.g. interpret-mode peel
+    rounds scale with ``ceil(K / acc_chunk)``, so a placement with a
+    tiny accumulation chunk can lose badly despite a high T_mul).
+    Plan search accepts this table (``pair_times=``) to regularize its
+    bit choices by *measured* kernel time on the serving device.
+    """
+    interp = resolve_interpret(interpret)
+    shapes = layer_matmul_shapes(cfg, n_slots)
+    # unique projection shapes across layers, weighted by occurrence count
+    # (a layer's step time is the sum of all its projections, not just the
+    # largest one)
+    uniq: dict[tuple[int, int, int], int] = {}
+    for projs in shapes:
+        for p in projs:
+            uniq[(p.m, p.k, p.n)] = uniq.get((p.m, p.k, p.n), 0) + p.count
+    total_layers = len(shapes)
+    R = 8  # amortize per-call dispatch: R independent matmuls per jit call
+    out: dict[tuple[int, int], float] = {}
+    for w_b in bit_choices:
+        for a_b in bit_choices:
+            t_sum = 0.0
+            for (m, k, n), n_occur in uniq.items():
+                kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+                xs = jax.random.uniform(kx, (R, m, k), jnp.float32)
+                wt = jax.random.normal(kw, (k, n), jnp.float32)
+                pre = prepack_dense(wt, w_bits=w_b, a_bits=a_b)
+
+                @jax.jit
+                def chain(xs, w_data=pre):
+                    # R independent applications in one dispatch — the same
+                    # inlined-kernel regime as the engine's fused step
+                    return sum(
+                        packed_dense(xs[r], w_data, interpret=interp).sum()
+                        for r in range(R)
+                    )
+
+                _time_once(chain, xs)
+                t = min(_time_once(chain, xs) for _ in range(reps)) / R
+                t_sum += t * n_occur / total_layers
+            out[(w_b, a_b)] = t_sum
+    return out
+
+
+def autotune_plan(
+    plan: DeployPlan,
+    cfg,
+    *,
+    n_slots: int | None = None,
+    reps: int = 3,
+    interpret: bool | None = None,
+    verbose: bool = False,
+) -> DeployPlan:
+    """Fill every layer's ``block_k`` from on-device microbenchmarks.
+
+    One measurement per unique ``(M, N, K, w_bits, a_bits)`` — layers
+    sharing a shape and bit pair share the cached winner.  A layer with
+    several projection shapes takes the winner of its *largest* matmul
+    (the K-extent that dominates its step time).  The measurement table
+    lands in ``plan.autotune`` so the artifact documents its own tuning.
+    """
+    n_slots = n_slots or int(plan.budget.get("n_slots", 8))
+    interp = resolve_interpret(interpret)
+    backend = "interpret" if interp else "compiled"
+    shapes = layer_matmul_shapes(cfg, n_slots)
+    if len(shapes) != len(plan.layers):
+        raise ValueError(
+            f"plan has {len(plan.layers)} layers but config yields {len(shapes)}"
+        )
+    cache: dict[str, dict] = dict(plan.autotune.get("table", {}))
+    new_layers = []
+    for lp, projs in zip(plan.layers, shapes):
+        dom = max(projs, key=lambda p: p.m * p.k * p.n)
+        key = f"{dom.m}x{dom.k}x{dom.n}|w{lp.w_bits}a{lp.a_bits}|{backend}"
+        if key not in cache:
+            cache[key] = measure_block_k(
+                dom.m, dom.k, dom.n, lp.w_bits, lp.a_bits,
+                reps=reps, interpret=interp,
+            )
+            if verbose:
+                print(f"autotune {key}: block_k={cache[key]['block_k']}")
+        new_layers.append(dataclasses.replace(lp, block_k=cache[key]["block_k"]))
+    tuned = dataclasses.replace(
+        plan,
+        layers=new_layers,
+        autotune={"backend": backend, "reps": reps, "n_slots": n_slots, "table": cache},
+    )
+    return tuned.validate()

@@ -1,0 +1,140 @@
+"""Plan-compile CLI: search + autotune + save a deployment plan.
+
+  PYTHONPATH=src python -m repro.plan.compile --arch llama3.2-3b \\
+      --objective footprint --budget-frac 0.85 --autotune
+  PYTHONPATH=src python -m repro.plan.compile --uniform 4 4   # global-4bit
+  PYTHONPATH=src python -m repro.plan.compile --from-nas artifacts/nas/selected_bits.json
+
+The emitted artifact (``artifacts/plans/*.json``) is what
+``python -m repro.launch.serve --plan <path>`` consumes.  With
+``--trace-cost`` the compiler also traces the paged decode step of the
+*applied* plan through ``repro.launch.cost.jaxpr_cost`` and records the
+scan-aware FLOP/byte totals in ``plan.predicted``.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.plan import apply as plan_apply
+from repro.plan import autotune as plan_autotune
+from repro.plan import plan as plan_mod
+from repro.plan import search as plan_search
+
+
+def _trace_cost(cfg, plan, n_slots: int) -> dict:
+    """Scan-aware predicted cost of one engine step under this plan."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.launch.cost import jaxpr_cost
+    from repro.models import transformer as T
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    applied, head = plan_apply.apply_plan(params, cfg, plan, verbose=False)
+    page_size = 8
+    n_pages = n_slots * 4 + 1
+    state = T.init_paged_state(cfg, n_slots, n_pages, page_size)
+    table = jnp.zeros((n_slots, 4), jnp.int32)
+    tokens = jnp.zeros((n_slots, 1), jnp.int32)
+    pos = jnp.zeros((n_slots,), jnp.int32)
+    jx = jax.make_jaxpr(
+        lambda p, s, t, tk, ps: T.forward_decode_paged(p, cfg, s, t, tk, ps, head=head)
+    )(applied, state, table, tokens, pos)
+    c = jaxpr_cost(jx)
+    return {f"step_{k}": v for k, v in c.items()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--full", action="store_true", help="full (non-smoke) config shapes")
+    ap.add_argument("--objective", choices=("footprint", "latency"), default="footprint")
+    ap.add_argument("--budget-frac", type=float, default=0.85,
+                    help="cost budget as a fraction of uniform w4a4")
+    ap.add_argument("--bits", type=int, nargs="+",
+                    default=list(plan_search.DEFAULT_BIT_CHOICES))
+    ap.add_argument("--beam", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=8, help="serving batch the plan targets")
+    ap.add_argument("--head-bits", type=int, nargs=2, default=(8, 8), metavar=("W", "A"))
+    ap.add_argument("--uniform", type=int, nargs=2, metavar=("W", "A"),
+                    help="emit a global single-bit-pair plan instead of searching")
+    ap.add_argument("--layer-bits", nargs="+", metavar="W,A",
+                    help="explicit per-layer pairs, e.g. --layer-bits 2,2 4,4 5,3")
+    ap.add_argument("--from-nas", metavar="JSON",
+                    help="adapt a core.nas selected-bits artifact (convnet path)")
+    ap.add_argument("--nas-spec", default="vgg_tiny",
+                    help="convnets spec name for --from-nas (vgg_tiny|ultranet|...)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="microbenchmark block_k per unique shape on this device")
+    ap.add_argument("--reps", type=int, default=3, help="autotune timing repetitions")
+    ap.add_argument("--trace-cost", action="store_true",
+                    help="record jaxpr-level step cost of the applied plan")
+    ap.add_argument("--out", help="output path (default artifacts/plans/<auto>.json)")
+    ap.add_argument("--name", help="artifact stem under artifacts/plans/")
+    args = ap.parse_args(argv)
+
+    if args.from_nas:
+        import json
+        import types
+
+        if args.autotune or args.trace_cost:
+            raise SystemExit(
+                "--autotune/--trace-cost need serving-family layer shapes; "
+                "they do not apply to --from-nas convnet plans"
+            )
+
+        from repro.core.packing import DSP48E2, cached_luts
+        from repro.models import convnets
+
+        payload = json.loads(open(args.from_nas).read())
+        # selected_bits.json: {model_name: {"bits": [[w, a], ...], ...}}
+        key = args.nas_spec if args.nas_spec in payload else next(iter(payload))
+        bits = [tuple(b) for b in payload[key]["bits"]]
+        spec = getattr(convnets, key.replace("-", "_"))()
+        luts = cached_luts(
+            plan_search.DEFAULT_LUT_PATH, profile=DSP48E2, kernel_lens=(1, 3, 5)
+        )
+        result = types.SimpleNamespace(
+            bits=bits,
+            op_dsp=payload[key].get("op_dsp"),
+            final_metric=payload[key].get("metric"),
+        )
+        plan = plan_search.plan_from_nas_result(result, spec, luts, arch=key)
+    else:
+        from repro.configs import get_config
+
+        cfg = get_config(args.arch, smoke=not args.full)
+        if args.uniform:
+            plan = plan_search.uniform_plan(
+                cfg, arch=args.arch, w_bits=args.uniform[0], a_bits=args.uniform[1],
+                n_slots=args.slots, head_bits=tuple(args.head_bits),
+                smoke=not args.full,
+            )
+        elif args.layer_bits:
+            bits = [tuple(int(b) for b in pair.split(",")) for pair in args.layer_bits]
+            plan = plan_search.plan_from_bits(
+                cfg, arch=args.arch, bits=bits, n_slots=args.slots,
+                head_bits=tuple(args.head_bits), smoke=not args.full,
+            )
+        else:
+            plan = plan_search.search_plan(
+                cfg, arch=args.arch, objective=args.objective,
+                budget_frac=args.budget_frac, bit_choices=tuple(args.bits),
+                beam=args.beam, n_slots=args.slots,
+                head_bits=tuple(args.head_bits), smoke=not args.full,
+            )
+        if args.autotune:
+            plan = plan_autotune.autotune_plan(
+                plan, cfg, n_slots=args.slots, reps=args.reps, verbose=True
+            )
+        if args.trace_cost:
+            plan.predicted.update(_trace_cost(cfg, plan, args.slots))
+
+    path = plan.save(args.out, name=args.name)
+    print(plan_mod.summarize(plan))
+    print(f"plan written to {path}")
+    return path
+
+
+if __name__ == "__main__":
+    main()

@@ -59,7 +59,12 @@ class Engine:
         params,
         ecfg: EngineConfig = EngineConfig(),
         rules: ShardingRules | None = None,
+        head=None,
     ):
+        """``head`` optionally injects prepacked LM-head weights (e.g. from
+        a deployment plan's ``lm_head`` entry via
+        :func:`repro.plan.apply.apply_plan`); otherwise ``ecfg.packed_head``
+        prepacks the tied embedding at ``ecfg.head_bits`` here."""
         if cfg.family not in ("attn", "ssm"):
             raise NotImplementedError(
                 f"continuous batching supports attn/ssm families, not {cfg.family!r}"
@@ -76,13 +81,10 @@ class Engine:
             ecfg.n_slots, self.allocator, self.block_table, ecfg.page_size,
             policy=ecfg.policy,
         )
-        head = (
-            prepack_lm_head(
+        if head is None and ecfg.packed_head:
+            head = prepack_lm_head(
                 params["embed"], w_bits=ecfg.head_bits[0], a_bits=ecfg.head_bits[1]
             )
-            if ecfg.packed_head
-            else None
-        )
 
         def step_fn(p, state, table, tokens, pos):
             with use_rules(self.rules):

@@ -1,0 +1,354 @@
+"""Deployment-plan compiler invariants: schema/hash round-trips, search
+budget feasibility, autotune caching, per-layer apply correctness (bit-
+exact vs the global packed path when uniform; vs the packed reference
+per layer when mixed), mixed-precision serving end to end, and the
+int8 paged-KV pool option."""
+import dataclasses as dc
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.packed_matmul.ops import PackedDenseParams, packed_dense, packed_dense_reference, prepack_dense
+from repro.models import transformer as T
+from repro.plan import (
+    DeployPlan,
+    PlanError,
+    apply_plan,
+    autotune_plan,
+    plan_from_bits,
+    plan_from_nas_result,
+    search_plan,
+    serving_lut,
+    uniform_plan,
+)
+from repro.serving import Engine, EngineConfig
+from repro.serving.paged_kv import BlockTable, PageAllocator
+
+
+# ---------------------------------------------------------------------------
+# schema / hash / round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_roundtrip_and_hash_stable(tmp_path):
+    cfg = get_config("gemma3-1b", smoke=True)
+    plan = search_plan(cfg, arch="gemma3-1b", budget_frac=0.85)
+    h0 = plan.content_hash()
+    path = plan.save(tmp_path / "p.json")
+    loaded = DeployPlan.load(path)
+    assert loaded.content_hash() == h0
+    assert loaded.bit_pairs() == plan.bit_pairs()
+    assert loaded.budget == plan.budget
+    # hash is content-derived: a second save/load cycle is a fixed point
+    path2 = loaded.save(tmp_path / "p2.json")
+    assert DeployPlan.load(path2).content_hash() == h0
+    # and moves when content moves
+    bumped = dc.replace(
+        plan, layers=[dc.replace(plan.layers[0], w_bits=8)] + plan.layers[1:]
+    )
+    assert bumped.content_hash() != h0
+
+
+def test_plan_rejects_corruption(tmp_path):
+    cfg = get_config("gemma3-1b", smoke=True)
+    plan = uniform_plan(cfg, arch="gemma3-1b", w_bits=4, a_bits=4)
+    path = plan.save(tmp_path / "p.json")
+    payload = json.loads(path.read_text())
+    payload["layers"][0]["w_bits"] = 3  # tamper without re-hashing
+    (tmp_path / "bad.json").write_text(json.dumps(payload))
+    with pytest.raises(PlanError):
+        DeployPlan.load(tmp_path / "bad.json")
+    payload2 = json.loads(path.read_text())
+    payload2["layers"][0]["w_bits"] = 99  # invalid bits
+    del payload2["content_hash"]
+    (tmp_path / "bad2.json").write_text(json.dumps(payload2))
+    with pytest.raises(PlanError):
+        DeployPlan.load(tmp_path / "bad2.json")
+
+
+def test_search_respects_budget_and_orders_by_sensitivity():
+    cfg = get_config("gemma3-1b", smoke=True)
+    plan = search_plan(cfg, arch="gemma3-1b", objective="footprint", budget_frac=0.85)
+    assert plan.predicted["weight_bytes"] <= plan.budget["budget"] + 1e-6
+    base = uniform_plan(cfg, arch="gemma3-1b", w_bits=4, a_bits=4)
+    assert plan.predicted["weight_bytes"] < base.predicted["weight_bytes"]
+    # infeasible budget is a loud error, not a silent overrun
+    with pytest.raises(ValueError):
+        search_plan(cfg, arch="gemma3-1b", budget_frac=0.05)
+
+
+def test_nas_adapter_emits_valid_plan():
+    import types
+
+    from repro.core.packing import DSP48E2, build_lut
+    from repro.models import convnets
+
+    spec = convnets.vgg_tiny()
+    luts = {k: build_lut(DSP48E2, kernel_len=k) for k in (1, 3)}
+    bits = [(2, 2), (3, 2), (4, 4), (2, 3), (5, 4), (4, 2), (8, 8)]
+    res = types.SimpleNamespace(bits=bits, op_dsp=1.0, final_metric=0.5)
+    plan = plan_from_nas_result(res, spec, luts, arch="vgg_tiny")
+    assert plan.family == "convnet" and plan.source == "nas"
+    assert plan.bit_pairs() == bits
+    assert plan.validate() is plan
+
+
+# ---------------------------------------------------------------------------
+# autotune
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_fills_block_k_and_caches():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    plan = uniform_plan(cfg, arch="llama3.2-3b", w_bits=4, a_bits=4, n_slots=2)
+    tuned = autotune_plan(plan, cfg, reps=1)
+    assert all(l.block_k is not None for l in tuned.layers)
+    assert tuned.autotune["table"]  # measurements recorded in the artifact
+    # identical layers share one measurement (2 layers, same shapes+bits)
+    assert len(tuned.autotune["table"]) == 1
+    # re-tuning reuses the cache (table object equality, not re-timing noise)
+    again = autotune_plan(tuned, cfg, reps=1)
+    assert again.autotune["table"] == tuned.autotune["table"]
+    # the tuned block_k actually reaches the packed weights
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    applied, _ = apply_plan(params, cfg, tuned, verbose=False)
+    leaf = applied["layers"]["attn"]["wq"]["w"]
+    assert isinstance(leaf, PackedDenseParams)
+    assert leaf.block_k == tuned.layers[0].block_k
+
+
+# ---------------------------------------------------------------------------
+# apply: uniform == global path, mixed == per-layer reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-130m", "qwen3-moe-30b-a3b"])
+def test_uniform_plan_apply_bitexact_vs_global_packed(arch):
+    """A one-bit-pair plan must produce byte-identical packed params (and
+    logits) to the existing quantize_params_packed global path."""
+    from repro.launch.serve import quantize_params_packed
+
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    plan = uniform_plan(cfg, arch=arch, w_bits=4, a_bits=4)
+    applied, head = apply_plan(params, cfg, plan, verbose=False)
+    want = quantize_params_packed(params, w_bits=4, a_bits=4, verbose=False)
+    assert head is not None  # plan carries an lm_head entry
+    got_leaves = jax.tree_util.tree_leaves(applied["layers"])
+    want_leaves = jax.tree_util.tree_leaves(want["layers"])
+    assert len(got_leaves) == len(want_leaves)
+    for g, w in zip(got_leaves, want_leaves):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # same structure => same decode path => identical logits
+    cache_a = T.init_cache(cfg, 2, 8)
+    cache_b = T.init_cache(cfg, 2, 8)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    la, _ = T.forward_decode(applied, cfg, cache_a, toks, jnp.asarray(0, jnp.int32))
+    lb, _ = T.forward_decode(want, cfg, cache_b, toks, jnp.asarray(0, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_mixed_plan_per_layer_bitexact_vs_reference():
+    """Every layer of an applied mixed plan carries weights that reproduce
+    the packed integer reference at that layer's own bit pair."""
+    cfg = get_config("gemma3-1b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    bits = [(2, 2), (3, 3), (5, 4)]
+    plan = plan_from_bits(cfg, arch="gemma3-1b", bits=bits)
+    assert plan.n_distinct_bit_pairs == 3
+    applied, _ = apply_plan(params, cfg, plan, verbose=False)
+    assert isinstance(applied["layers"], list)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, cfg.d_model))
+    for i, (w_b, a_b) in enumerate(bits):
+        for proj in ("wq", "wk", "wv", "wo"):
+            leaf = applied["layers"][i]["attn"][proj]["w"]
+            assert isinstance(leaf, PackedDenseParams)
+            assert (leaf.w_bits, leaf.a_bits) == (w_b, a_b)
+            w_float = params["layers"]["attn"][proj]["w"][i]
+            xx = x if w_float.shape[0] == cfg.d_model else jax.random.uniform(
+                jax.random.PRNGKey(2), (4, w_float.shape[0])
+            )
+            got = packed_dense(xx, leaf)
+            want = packed_dense_reference(xx, w_float, w_bits=w_b, a_bits=a_b)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mixed_plan_serves_through_engine_three_bit_pairs():
+    """Continuous batching over a genuinely mixed-precision model: >= 3
+    distinct per-layer bit pairs in one engine, requests complete, no
+    page leaks, logits finite."""
+    cfg = get_config("gemma3-1b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    plan = plan_from_bits(cfg, arch="gemma3-1b", bits=[(2, 2), (3, 3), (5, 4)])
+    applied, head = apply_plan(params, cfg, plan, verbose=False)
+    eng = Engine(
+        cfg, applied, EngineConfig(n_slots=2, page_size=4, max_len=24), head=head
+    )
+    key = jax.random.PRNGKey(1)
+    for i, n in enumerate((3, 5, 2)):
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (n,), 1, cfg.vocab)
+        eng.submit(prompt.tolist(), max_new_tokens=3)
+    m = eng.run(realtime=False)
+    assert m["n_requests"] == 3 and m["generated_tokens"] == 9
+    assert eng.allocator.n_free == eng.allocator.n_usable
+
+
+def test_mixed_plan_ssm_family_serves_and_matches_monolithic():
+    """Per-layer unroll for the SSM family: mixed-precision mamba decodes
+    identically through the paged and monolithic paths and completes
+    requests through the engine."""
+    cfg = get_config("mamba2-130m", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    plan = plan_from_bits(cfg, arch="mamba2-130m", bits=[(2, 2), (5, 3)])
+    applied, head = apply_plan(params, cfg, plan, verbose=False)
+    assert isinstance(applied["layers"], list)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 5), 0, cfg.vocab)
+    cache = T.init_cache(cfg, 2, 16)
+    state = T.init_paged_state(cfg, 2, 9, 4)
+    tbl = jnp.zeros((2, 4), jnp.int32)  # ssm ignores the block table
+    for t in range(toks.shape[1]):
+        lg_m, cache = T.forward_decode(
+            applied, cfg, cache, toks[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+        lg_p, state = T.forward_decode_paged(
+            applied, cfg, state, tbl, toks[:, t : t + 1], jnp.full((2,), t, jnp.int32)
+        )
+        np.testing.assert_array_equal(np.asarray(lg_m), np.asarray(lg_p))
+    eng = Engine(cfg, applied, EngineConfig(n_slots=2, page_size=4, max_len=16), head=head)
+    for i, n in enumerate((3, 4)):
+        prompt = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(1), i), (n,), 1, cfg.vocab)
+        eng.submit(prompt.tolist(), max_new_tokens=2)
+    m = eng.run(realtime=False)
+    assert m["n_requests"] == 2 and m["generated_tokens"] == 4
+
+
+def test_mixed_plan_moe_experts_per_layer():
+    """Heterogeneous plan over an MoE model: each layer's expert tensors
+    carry that layer's bits and the decode step stays finite."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    bits = [(2, 2), (4, 4)][: cfg.n_layers]
+    plan = plan_from_bits(cfg, arch="qwen3-moe-30b-a3b", bits=bits)
+    applied, _ = apply_plan(params, cfg, plan, verbose=False)
+    assert isinstance(applied["layers"], list)
+    for i, (w_b, a_b) in enumerate(bits):
+        for k in ("w_up", "w_gate", "w_down"):
+            leaf = applied["layers"][i]["moe"][k]
+            assert isinstance(leaf, PackedDenseParams), (i, k)
+            assert (leaf.w_bits, leaf.a_bits) == (w_b, a_b)
+    cache = T.init_cache(cfg, 2, 8)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    logits, _ = T.forward_decode(applied, cfg, cache, toks, jnp.asarray(0, jnp.int32))
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_mixed_plan_paged_decode_matches_unrolled_monolithic():
+    """Paged decode under a mixed plan equals the monolithic cache decode
+    of the same applied params (both run the unrolled per-layer path)."""
+    cfg = get_config("gemma3-1b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    plan = plan_from_bits(cfg, arch="gemma3-1b", bits=[(2, 2), (4, 4), (5, 3)])
+    applied, _ = apply_plan(params, cfg, plan, verbose=False)
+    B, steps, ps, max_len = 2, 6, 4, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, steps), 0, cfg.vocab)
+    cache = T.init_cache(cfg, B, max_len)
+    mono = []
+    for t in range(steps):
+        lg, cache = T.forward_decode(
+            applied, cfg, cache, toks[:, t : t + 1], jnp.asarray(t, jnp.int32)
+        )
+        mono.append(np.asarray(lg))
+    n_blocks = max_len // ps
+    alloc = PageAllocator(B * n_blocks + 1)
+    table = BlockTable(B, n_blocks)
+    for b in range(B):
+        table.assign(b, alloc.alloc(n_blocks))
+    state = T.init_paged_state(cfg, B, B * n_blocks + 1, ps)
+    tbl = jnp.asarray(table.as_array())
+    for t in range(steps):
+        lg, state = T.forward_decode_paged(
+            applied, cfg, state, tbl, toks[:, t : t + 1], jnp.full((B,), t, jnp.int32)
+        )
+        np.testing.assert_array_equal(mono[t], np.asarray(lg), err_msg=f"step {t}")
+
+
+# ---------------------------------------------------------------------------
+# packing LUT single-file cache
+# ---------------------------------------------------------------------------
+
+
+def test_cached_luts_builds_once_and_invalidates_on_profile_change(tmp_path, monkeypatch):
+    from repro.core.packing import TPU_VPU15, MulProfile, cached_luts
+    from repro.core.packing import optimizer as opt
+
+    path = tmp_path / "packing_luts.json"
+    luts = cached_luts(path, profile=TPU_VPU15, kernel_lens=(1,))
+    assert path.exists() and 1 in luts
+    # second call must load, not rebuild
+    calls = []
+    real = opt.build_lut
+    monkeypatch.setattr(opt, "build_lut", lambda *a, **k: calls.append(1) or real(*a, **k))
+    luts2 = cached_luts(path, profile=TPU_VPU15, kernel_lens=(1,))
+    assert not calls
+    assert luts2[1].table == luts[1].table
+    # a different profile with the same name invalidates the entry
+    fake = MulProfile(name="tpu_vpu15", port_big=14, port_small=14)
+    cached_luts(path, profile=fake, kernel_lens=(1,))
+    assert calls  # rebuilt
+    # corrupt file is rebuilt, not trusted
+    path.write_text("{broken json")
+    luts3 = cached_luts(path, profile=TPU_VPU15, kernel_lens=(1,))
+    assert luts3[1].table == luts[1].table
+
+
+# ---------------------------------------------------------------------------
+# int8 paged-KV pool
+# ---------------------------------------------------------------------------
+
+
+def test_int8_paged_pool_close_to_fp_pool():
+    """ROADMAP item: int8 paged KV (per-page-row scales) stays within
+    tolerance of the fp pool and preserves argmax."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B, steps, ps, max_len = 2, 8, 4, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, steps), 0, cfg.vocab)
+    n_blocks = max_len // ps
+
+    def run(kv_dtype):
+        alloc = PageAllocator(B * n_blocks + 1)
+        table = BlockTable(B, n_blocks)
+        for b in range(B):
+            table.assign(b, alloc.alloc(n_blocks))
+        state = T.init_paged_state(cfg, B, B * n_blocks + 1, ps, kv_dtype=kv_dtype)
+        tbl = jnp.asarray(table.as_array())
+        out = None
+        for t in range(steps):
+            out, state = T.forward_decode_paged(
+                params, cfg, state, tbl, toks[:, t : t + 1], jnp.full((B,), t, jnp.int32)
+            )
+        return np.asarray(out)
+
+    fp = run(None)
+    q8 = run(jnp.int8)
+    rel = float(np.linalg.norm(q8 - fp) / np.linalg.norm(fp))
+    assert rel < 0.05, rel
+    assert np.array_equal(np.argmax(q8, -1), np.argmax(fp, -1))
+
+
+def test_int8_paged_engine_end_to_end():
+    cfg = dc.replace(get_config("llama3.2-3b", smoke=True), kv_dtype="int8")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=2, page_size=4, max_len=16))
+    key = jax.random.PRNGKey(1)
+    for i, n in enumerate((3, 5)):
+        prompt = jax.random.randint(jax.random.fold_in(key, i), (n,), 1, cfg.vocab)
+        eng.submit(prompt.tolist(), max_new_tokens=3)
+    m = eng.run(realtime=False)
+    assert m["n_requests"] == 2 and m["generated_tokens"] == 6
+    assert eng.allocator.n_free == eng.allocator.n_usable
