@@ -129,7 +129,7 @@ def run_blocking(wb: int = 4, ab: int = 4, shapes=None) -> list[dict]:
             raw = jax.jit(
                 functools.partial(
                     packed_matmul_raw, n_seg=cfg.n_seg, stride=cfg.stride,
-                    acc_chunk=cfg.acc_chunk, block_k=bk,
+                    acc_chunk=cfg.acc_chunk, overlap=cfg.overlap, block_k=bk,
                 )
             )
             out.append(

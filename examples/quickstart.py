@@ -6,6 +6,7 @@
 4. Bit-exact packed inference through the Pallas kernel path
 5. Continuous-batching serving (paged KV + packed LM head)
 6. Deployment-plan compiler: search -> autotune -> serve mixed precision
+7. 1-bit overpacking: denser placements, bits recovered in-kernel (§IV-B-1)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -113,4 +114,32 @@ print(f"  {m['n_requests']} mixed-precision requests @ {m['tokens_per_s']:.1f} t
 # from the shell:
 #   PYTHONPATH=src python -m repro.plan.compile --arch llama3.2-3b --autotune
 #   PYTHONPATH=src python -m repro.launch.serve --plan artifacts/plans/<stem>.json
+
+# -- 7. overpacking ----------------------------------------------------------
+print("== 1-bit overpacking (overlap=1, paper §IV-B-1 / Fig. 3) ==")
+# Overpacking steals one guard bit per segment: adjacent products share a
+# bit, and the kernel recovers each stolen MSB from the *operands* — the
+# true LSB of the next segment is the XOR over the accumulation chunk of
+# (weight LSB AND activation LSB), computed as one extra integer dot of
+# the activation LSBs against a masked view of the packed weights (bit
+# d*stride of the packed word IS segment d's LSB), then a bottom-up peel.
+from repro.kernels.packed_matmul.ops import choose_config
+
+for wb, ab in ((2, 3), (4, 4)):
+    sel = choose_config(wb, ab)
+    base = choose_config(wb, ab, allow_overpack=False)
+    what = (f"{sel.n_seg} vs {base.n_seg} weights/int32 word"
+            if sel.n_seg > base.n_seg else
+            f"acc_chunk {sel.acc_chunk} vs {base.acc_chunk} (half the peel rounds)")
+    print(f"  w{wb}a{ab}: overpacked placement wins {what}")
+# the serving path picks overpacked placements automatically: prepack
+# (zero extra storage — the LSB planes are masked views) and compare
+wb, ab = 2, 3  # packs 3 channels per int32 word; no-overpack tops out at 2
+pre = prepack_dense(w, w_bits=wb, a_bits=ab)
+got = packed_dense(x, pre)
+want = packed_dense_reference(x, w, w_bits=wb, a_bits=ab)
+print(f"  w{wb}a{ab} overpacked kernel bit-exact vs unpacked oracle: "
+      f"{np.array_equal(np.asarray(got), np.asarray(want))} "
+      f"(packed words: {pre.w_packed.shape[1]} vs {-(-w.shape[1] // 2)} no-overpack)")
+# density record across all pairs: python benchmarks/packing_efficiency.py
 print("quickstart complete.")

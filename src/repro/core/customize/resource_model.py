@@ -14,9 +14,24 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.packing import PackingConfig, lut_overhead_estimate
+from repro.core.packing import DSP48E2, MulProfile, PackingConfig, best_packing, lut_overhead_estimate
 
 ULTRA96 = {"dsp": 360, "lut": 70_560, "bram": 216, "freq_mhz": 250.0}
+
+
+def runtime_packing(
+    w_bits: int, a_bits: int, kernel_len: int = 1, profile: MulProfile = DSP48E2
+) -> PackingConfig:
+    """The placement the kernel runtime would actually execute for this
+    stage — routed through the same selection helper as the kernel
+    wrappers (``core.packing.select`` via ``best_packing(method=
+    "runtime")``), overpacking included.  Build a :class:`StageConfig`
+    from this instead of a raw ``mixq`` LUT cell when the stage must
+    score exactly what the kernels deliver (``mixq`` also admits operand
+    separation / filter densities the matmul runtime has no path for);
+    ``benchmarks/packing_efficiency.py`` records both selections per bit
+    pair so the gap stays visible."""
+    return best_packing(profile, w_bits, a_bits, kernel_len=kernel_len, method="runtime")
 
 
 @dataclasses.dataclass(frozen=True)

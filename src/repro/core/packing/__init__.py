@@ -1,5 +1,13 @@
-from .profiles import PROFILES, DSP48E2, TPU_MXU8, TPU_VPU15, MulProfile
+from .profiles import PROFILES, DSP48E2, TPU_MXU7, TPU_MXU8, TPU_VPU15, MulProfile
 from .strategies import PackingConfig, all_placements, filter_placements, kernel_placements
+from .select import (
+    filter_acc_chunk,
+    kernel_acc_chunk,
+    runtime_kernel_placements,
+    select_filter_placement,
+    select_kernel_placement,
+    trivial_placement,
+)
 from .optimizer import (
     DEFAULT_BITS,
     PackingLUT,
@@ -15,9 +23,16 @@ from . import bitpack
 __all__ = [
     "PROFILES",
     "DSP48E2",
+    "TPU_MXU7",
     "TPU_MXU8",
     "TPU_VPU15",
     "MulProfile",
+    "filter_acc_chunk",
+    "kernel_acc_chunk",
+    "runtime_kernel_placements",
+    "select_filter_placement",
+    "select_kernel_placement",
+    "trivial_placement",
     "PackingConfig",
     "all_placements",
     "filter_placements",

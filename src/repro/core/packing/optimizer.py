@@ -21,6 +21,7 @@ import pathlib
 from typing import Mapping
 
 from .profiles import PROFILES, DSP48E2, MulProfile
+from .select import select_filter_placement, select_kernel_placement, trivial_placement
 from .strategies import PackingConfig, all_placements, filter_placements, kernel_placements
 
 DEFAULT_BITS = tuple(range(2, 9))  # the paper's 2..8-bit search space
@@ -35,8 +36,28 @@ def best_packing(
     seq_len: int = 32,
     method: str = "mixq",
 ) -> PackingConfig:
-    """Best placement for one bit-width combination under ``method``."""
-    if method == "mixq":
+    """Best placement for one bit-width combination under ``method``.
+
+    ``method="runtime"`` scores only what the Pallas kernels can execute
+    — the shared selection helper of :mod:`repro.core.packing.select`
+    (kernel packing with scalar activations, int32-safe filter packing,
+    1-bit overpacking, no operand separation) — so LUTs built with it
+    promise exactly the density the serving runtime delivers.  Pairs
+    with no executable multi-segment placement fall back to the trivial
+    n_seg=1 config (T_mul = 1, the plain integer path).
+    """
+    if method == "runtime":
+        cands = []
+        sel = select_kernel_placement(profile, w_bits, a_bits)
+        if sel is not None:
+            cands.append(sel[0])
+        if kernel_len > 1:
+            fsel = select_filter_placement(profile, w_bits, a_bits, kernel_len)
+            if fsel is not None:
+                cands.append(fsel[0])
+        if not cands:
+            cands = [trivial_placement(w_bits, a_bits)]
+    elif method == "mixq":
         cands = all_placements(profile, w_bits, a_bits, kernel_len, seq_len)
     elif method == "no_enhance":  # Mixed Packing without §IV-B enhancements
         cands = all_placements(

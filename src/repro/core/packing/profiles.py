@@ -53,4 +53,11 @@ TPU_VPU15 = MulProfile(name="tpu_vpu15", port_big=15, port_small=15)
 # but it is the highest-throughput primitive on the chip.
 TPU_MXU8 = MulProfile(name="tpu_mxu8", port_big=8, port_small=8)
 
-PROFILES = {p.name: p for p in (DSP48E2, TPU_VPU15, TPU_MXU8)}
+# Sign-safe MXU lane: the int8 datapath is signed, so packed *unsigned*
+# operands only get 7 usable bits per port.  This is the profile the
+# runtime chooser for the int8-lane packed path uses
+# (``kernels.quant_matmul.ops.choose_mxu_config``); TPU_MXU8 stays the
+# nominal-width analytical model.
+TPU_MXU7 = MulProfile(name="tpu_mxu7", port_big=7, port_small=7)
+
+PROFILES = {p.name: p for p in (DSP48E2, TPU_VPU15, TPU_MXU8, TPU_MXU7)}

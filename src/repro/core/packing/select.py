@@ -1,0 +1,180 @@
+"""Runtime placement selection — the one helper the kernels, the plan
+compiler, and the cost model all route through.
+
+Historically each kernel wrapper re-implemented its own placement choice
+(`packed_matmul.ops.choose_config`, `filter_conv.ops.choose_filter_config`)
+with ``allow_overpack`` hard-coded to False, while the optimizer/resource
+model scored overlap placements the runtime could not execute — so the
+LUTs driving plan search promised densities the kernels never delivered.
+This module is the fix: one enumeration + one feasibility filter, shared
+by scoring and execution, so the cost model and the runtime cannot
+disagree about which placements exist.
+
+Feasibility here means *executable on an int32 lane*:
+
+  * the packed accumulator (``n_seg`` segments of ``stride`` bits, the
+    top one ``stride + overlap`` wide) fits ``container_bits``;
+  * the pre-decode accumulation chunk obeys Eq. 4's **exact** bound at
+    ``stride + overlap`` decoded bits:
+    ``acc_chunk * (2**w - 1) * (2**a - 1) <= 2**(stride + overlap) - 1``
+    (overpacking steals the guard bit back for accumulation headroom —
+    at equal density the chunk roughly doubles, halving peel rounds);
+  * overpacked placements additionally bound the per-segment LSB-parity
+    *count* (the Fig. 3 recovery is computed as a second integer dot of
+    the operand LSB planes; its per-segment counters must not carry into
+    the next segment): ``count <= 2**stride - 1``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterator
+
+from .profiles import MulProfile
+from .strategies import PackingConfig, filter_placements, kernel_placements
+
+
+def _ceil_log2(x: int) -> int:
+    return math.ceil(math.log2(x)) if x > 1 else 0
+
+
+def kernel_acc_chunk(cfg: PackingConfig) -> int:
+    """Exact Eq. 4 pre-decode accumulation bound for a kernel placement.
+
+    Largest A with ``A * max_prod <= 2**(stride + overlap) - 1`` — the
+    up-rounded power-of-two E_g undersells e.g. w4a4 (9 vs 8) and the
+    overpacked bit doubles it again (18).  Overpacked placements are
+    additionally capped at ``2**stride - 1`` so the parity-plane dot's
+    per-segment product counters stay segment-aligned.
+    """
+    max_prod = ((1 << cfg.w_bits) - 1) * ((1 << cfg.a_bits) - 1)
+    chunk = max(1, ((1 << (cfg.stride + cfg.overlap)) - 1) // max_prod)
+    if cfg.overlap:
+        chunk = min(chunk, (1 << cfg.stride) - 1)
+    return chunk
+
+
+def _container_bits_kernel(cfg: PackingConfig) -> int:
+    """Bits the packed accumulator occupies: n_seg segments at ``stride``,
+    the top one allowed ``stride + overlap`` decoded bits."""
+    n_seg = cfg.n_w * cfg.n_a
+    return (n_seg - 1) * cfg.stride + cfg.stride + cfg.overlap
+
+
+def runtime_kernel_placements(
+    profile: MulProfile,
+    w_bits: int,
+    a_bits: int,
+    *,
+    allow_overpack: bool = True,
+    container_bits: int = 31,
+) -> Iterator[PackingConfig]:
+    """Kernel-packing placements the matmul kernels can actually run:
+    weights packed on one port (``n_a == 1``, activations stay scalar per
+    lane) and the whole accumulator int32-safe."""
+    for cfg in kernel_placements(profile, w_bits, a_bits, allow_overpack=allow_overpack):
+        if cfg.n_a != 1:
+            continue
+        if container_bits is not None and _container_bits_kernel(cfg) > container_bits:
+            continue
+        yield cfg
+
+
+def select_kernel_placement(
+    profile: MulProfile,
+    w_bits: int,
+    a_bits: int,
+    *,
+    allow_overpack: bool = True,
+    min_chunk: int = 4,
+    container_bits: int = 31,
+) -> tuple[PackingConfig, int] | None:
+    """Best executable kernel placement under the paper's lexicographic
+    objective — density (T_mul == n_seg) first, then accumulation
+    headroom; exact ties prefer no-overpack (no correction logic).
+
+    Placements whose chunk falls below ``min_chunk`` are dropped (for
+    ``n_w > 1``): a tiny chunk means a decode peel every few products,
+    which the serving kernels cannot amortize.  Returns the winning
+    placement and its exact accumulation chunk, or None when no
+    multi-segment placement survives (callers fall back to the plain
+    integer path).
+    """
+    best: tuple[tuple[int, int, int], PackingConfig, int] | None = None
+    for cfg in runtime_kernel_placements(
+        profile, w_bits, a_bits,
+        allow_overpack=allow_overpack, container_bits=container_bits,
+    ):
+        chunk = kernel_acc_chunk(cfg)
+        if chunk < min_chunk and cfg.n_w > 1:
+            continue
+        score = (cfg.n_w, chunk, -cfg.overlap)
+        if best is None or score > best[0]:
+            best = (score, cfg, chunk)
+    if best is None or best[1].n_w == 1:
+        return None
+    return best[1], best[2]
+
+
+def filter_acc_chunk(cfg: PackingConfig, *, container_bits: int = 31) -> int | None:
+    """Pre-decode channel-accumulation chunk for a filter placement, or
+    None when the placement is not executable on an int32 lane.
+
+    A single invocation's segment already sums ``min(k_p, n_p)`` products;
+    ``chunk`` channels multiply that.  The decoded per-segment total must
+    fit ``stride + overlap`` bits, the full packed accumulator must fit
+    the container, and (overpacked) the parity counters must fit
+    ``stride`` bits.
+    """
+    k_p, n_p = cfg.n_w, cfg.n_a
+    nseg = k_p + n_p - 1
+    guard = cfg.stride + cfg.overlap - (cfg.w_bits + cfg.a_bits) - _ceil_log2(min(k_p, n_p))
+    container = cfg.w_bits + cfg.a_bits + (nseg - 1) * cfg.stride + cfg.overlap
+    if container > container_bits or guard < 0:
+        return None
+    chunk = 1 << min(guard, container_bits - container)
+    if cfg.overlap:
+        # parity counters: up to chunk * min(k_p, n_p) LSB products per
+        # segment, packed at stride-bit alignment in the parity dot
+        chunk = min(chunk, ((1 << cfg.stride) - 1) // min(k_p, n_p))
+        if chunk < 1:
+            return None
+        if nseg * cfg.stride > container_bits:
+            return None  # parity-plane product itself must stay int32
+    return max(1, chunk)
+
+
+def select_filter_placement(
+    profile: MulProfile,
+    w_bits: int,
+    a_bits: int,
+    kernel_len: int,
+    *,
+    allow_overpack: bool = True,
+    container_bits: int = 31,
+) -> tuple[PackingConfig, int] | None:
+    """Best executable filter placement: maximizes
+    ``t_mul * min(chunk, 4)`` (a little pre-decode accumulation headroom
+    is preferred over raw density when available), then density, then
+    headroom; exact ties prefer no-overpack."""
+    best: tuple[tuple, PackingConfig, int] | None = None
+    for cfg in filter_placements(
+        profile, w_bits, a_bits, kernel_len, 1 << 30, allow_overpack=allow_overpack
+    ):
+        chunk = filter_acc_chunk(cfg, container_bits=container_bits)
+        if chunk is None:
+            continue
+        score = (cfg.t_mul * min(chunk, 4), cfg.t_mul, chunk, -cfg.overlap)
+        if best is None or score > best[0]:
+            best = (score, cfg, chunk)
+    if best is None:
+        return None
+    return best[1], best[2]
+
+
+def trivial_placement(w_bits: int, a_bits: int) -> PackingConfig:
+    """The n_seg == 1 fallback (plain integer path): T_mul = 1, no guard."""
+    return PackingConfig(
+        strategy="kernel", w_bits=w_bits, a_bits=a_bits, n_w=1, n_a=1,
+        stride=w_bits + a_bits, overlap=0, w_port_big=False, separated="",
+        t_mul=1.0, e_g=0,
+    )

@@ -9,9 +9,27 @@ input-channel accumulation happens pre-decode in chunks of
 ``acc_chunk`` products when the guard bits allow (Eq. 4's E_g), else
 post-decode.
 
-Container-safety: the config chooser (ops.choose_filter_config) enforces
-  w + a + (k_p + n_p - 2) * stride + log2(acc_chunk) <= 31
+Container-safety: the config chooser (ops.choose_filter_config, via
+core.packing.select) enforces
+  w + a + (k_p + n_p - 2) * stride + overlap + log2(acc_chunk) <= 31
 so the packed accumulator never overflows an int32 lane.
+
+## Overpacking (overlap == 1, §IV-B-1)
+
+Overpacked placements shave the guard bit off the stride, fitting e.g.
+a full (k_p=3, n_p=3) placement at w3a3 where no-overpack placements
+top out at 3 coefficients per multiply.  Each coefficient sum may then
+need ``stride + 1`` bits; the stolen MSB is recovered bottom-up with the
+paper's Fig. 3 chain: the true LSB of segment m is the XOR over all its
+contributing products (f_i * s_j with i + j = m, times the accumulated
+channel chunk) of the product LSBs.  In kernel form that whole AND/XOR
+tree is one extra packed multiply: the *LSB planes* of the filter and
+sequence chunks multiply into per-segment popcounts whose bit 0 is
+exactly the XOR chain (the chooser bounds the counts below
+``2**stride`` so they stay segment-aligned).  The planes cost nothing
+to materialize: stride >= operand bits, so masking the packed
+filter/sequence words at the stride-aligned bit positions
+(``peel.lsb_mask``) yields them from data already in registers.
 
 ## Blocking
 
@@ -43,6 +61,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.peel import lsb_mask
+
 
 def _kernel(
     s_ref,  # [bb, bc, bn] int32 sequence-level tile (bn = bn_sc * n_p)
@@ -54,6 +74,7 @@ def _kernel(
     n_p: int,
     stride: int,
     acc_chunk: int,
+    overlap: int,
     n_out: int,
 ):
     j = pl.program_id(1)  # sequence-block index
@@ -77,6 +98,12 @@ def _kernel(
     shifts = (jnp.arange(n_p, dtype=jnp.int32) * stride)[None, None, None, :]
     s_pack = jnp.sum(s_chunks << shifts, axis=-1)  # [bb, bc, bn_sc]
     fp = fp_ref[...]
+    if overlap:
+        # masked-view LSB planes (stride >= operand bits): their product
+        # yields per-segment popcounts of the Fig. 3 AND terms (bit 0 ==
+        # the XOR chain)
+        s_lsb = s_pack & lsb_mask(n_p, stride)
+        fp_lsb = fp & lsb_mask(k_p, stride)
     local = jnp.zeros((bb, local_w), jnp.int32)
     for u in range(n_fc):
         for v in range(bn_sc):
@@ -88,9 +115,28 @@ def _kernel(
                 packed = jnp.sum(
                     s_pack[:, c0:c1, v] * fp[None, c0:c1, u], axis=1
                 )  # [bb]
-                for m in range(nseg):
-                    seg = jax.lax.shift_right_logical(packed, m * stride) & mask
-                    dec = dec.at[:, m].add(seg)
+                if overlap:
+                    parity = jnp.sum(
+                        s_lsb[:, c0:c1, v] * fp_lsb[None, c0:c1, u], axis=1
+                    )
+                    p = packed
+                    for m in range(nseg):
+                        if m == nseg - 1:
+                            val = p  # top coefficient keeps all remaining bits
+                        else:
+                            low = p & mask
+                            bit_p = jax.lax.shift_right_logical(p, stride) & 1
+                            nxt = (
+                                jax.lax.shift_right_logical(parity, (m + 1) * stride)
+                                & 1
+                            )
+                            val = low + ((bit_p ^ nxt) << stride)
+                            p = jax.lax.shift_right_logical(p - val, stride)
+                        dec = dec.at[:, m].add(val)
+                else:
+                    for m in range(nseg):
+                        seg = jax.lax.shift_right_logical(packed, m * stride) & mask
+                        dec = dec.at[:, m].add(seg)
             local = jax.lax.dynamic_update_slice(
                 local,
                 jax.lax.dynamic_slice(local, (0, off), (bb, nseg)) + dec,
@@ -116,12 +162,17 @@ def filter_conv_raw(
     acc_chunk: int,
     k_len: int,
     n_len: int,
+    overlap: int = 0,
     block_b: int = 8,
     block_c: int | None = None,
     block_n: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Full convolution summed over channels: [B, n_len + k_len - 1] int32."""
+    """Full convolution summed over channels: [B, n_len + k_len - 1] int32.
+
+    ``overlap=1`` selects the overpacked decode (its LSB planes are
+    masked views of the packed operands); see the module docstring.
+    """
     from repro.kernels.common import resolve_interpret
 
     interpret = resolve_interpret(interpret)
@@ -148,7 +199,8 @@ def filter_conv_raw(
         )
         f_packed = jnp.pad(f_packed, ((0, grid[2] * bc - c), (0, 0)))
     kernel = functools.partial(
-        _kernel, k_p=k_p, n_p=n_p, stride=stride, acc_chunk=acc_chunk, n_out=n_out
+        _kernel, k_p=k_p, n_p=n_p, stride=stride, acc_chunk=acc_chunk,
+        overlap=overlap, n_out=n_out,
     )
     return pl.pallas_call(
         kernel,

@@ -4,13 +4,13 @@ Filter Packing, with int32-container-safe configuration choice.
 from __future__ import annotations
 
 import functools
-import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import TPU_VPU15, filter_placements
+from repro.core.packing import TPU_VPU15
+from repro.core.packing.select import select_filter_placement
 from repro.kernels.common import resolve_interpret
 
 from . import ref
@@ -18,44 +18,47 @@ from .kernel import filter_conv_raw
 
 
 class FilterConfig(NamedTuple):
-    """Frozen filter-placement choice (immutable: safe to cache/share)."""
+    """Frozen filter-placement choice (immutable: safe to cache/share).
+
+    ``overlap=1`` marks an overpacked placement: coefficients share one
+    bit, recovered by the in-kernel Fig. 3 LSB chain against the packed
+    filter/sequence LSB planes.
+    """
 
     k_p: int
     n_p: int
     stride: int
     acc_chunk: int
+    overlap: int = 0
 
 
 @functools.lru_cache(maxsize=None)
-def choose_filter_config(w_bits: int, a_bits: int, k_len: int) -> FilterConfig | None:
-    """Best no-overpack filter placement whose packed accumulator fits int32.
+def choose_filter_config(
+    w_bits: int, a_bits: int, k_len: int, *, allow_overpack: bool = True
+) -> FilterConfig | None:
+    """Best filter placement whose packed accumulator fits int32,
+    overpacked placements included.
 
-    Maximizes t_mul * min(channel-chunk, 4) so a little pre-decode
-    accumulation headroom is preferred over raw density when available.
+    Routes through
+    :func:`repro.core.packing.select.select_filter_placement` — the same
+    enumeration + feasibility filter the optimizer and the customization
+    resource model score, so the cost model can never promise a density
+    this runtime refuses (the historical hard-coded
+    ``allow_overpack=False`` here did exactly that).  Scoring maximizes
+    ``t_mul * min(channel-chunk, 4)``: a little pre-decode accumulation
+    headroom is preferred over raw density when available, e.g. w3a3
+    packs 6 coefficients per multiply overpacked vs 3 without.
     """
-    best = None
-    for cfg in filter_placements(
-        TPU_VPU15, w_bits, a_bits, k_len, 1 << 30, allow_overpack=False
-    ):
-        nseg = cfg.n_w + cfg.n_a - 1
-        guard = cfg.stride - (w_bits + a_bits) - _ceil_log2(min(cfg.n_w, cfg.n_a))
-        container = w_bits + a_bits + (nseg - 1) * cfg.stride
-        if container > 31 or guard < 0:
-            continue
-        acc = 1 << min(guard, 31 - container)
-        score = (cfg.t_mul * min(acc, 4), cfg.t_mul, acc)
-        if best is None or score > best[0]:
-            best = (score, cfg, acc)
-    if best is None:
-        return None
-    _, cfg, acc = best
-    return FilterConfig(
-        k_p=cfg.n_w, n_p=cfg.n_a, stride=cfg.stride, acc_chunk=int(max(1, acc))
+    sel = select_filter_placement(
+        TPU_VPU15, w_bits, a_bits, k_len, allow_overpack=allow_overpack
     )
-
-
-def _ceil_log2(x: int) -> int:
-    return math.ceil(math.log2(x)) if x > 1 else 0
+    if sel is None:
+        return None
+    cfg, acc = sel
+    return FilterConfig(
+        k_p=cfg.n_w, n_p=cfg.n_a, stride=cfg.stride,
+        acc_chunk=int(max(1, acc)), overlap=cfg.overlap,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret"))
@@ -85,6 +88,7 @@ def _packed_conv1d(
         acc_chunk=cfg.acc_chunk,
         k_len=k,
         n_len=n,
+        overlap=cfg.overlap,
         interpret=interpret,
     )
 

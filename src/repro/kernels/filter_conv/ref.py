@@ -16,6 +16,17 @@ def pack_filter(f_lvl: jnp.ndarray, k_p: int, stride: int) -> jnp.ndarray:
     return jnp.sum(chunks << shifts, axis=-1).astype(jnp.int32)
 
 
+def pack_lsb_filter(f_lvl: jnp.ndarray, k_p: int, stride: int) -> jnp.ndarray:
+    """Reference construction of the filter-LSB planes the overpacked
+    decode (Fig. 3) multiplies: :func:`pack_filter` layout, each segment
+    holding only the tap's LSB.  The kernel derives these as a masked
+    view of the packed filter word (stride >= w_bits, so this equals
+    ``pack_filter(f) & sum_i(1 << i*stride)`` — an identity the tests
+    assert); the product against the sequence LSB planes yields the
+    per-coefficient popcount of product LSBs — bit 0 is the XOR chain."""
+    return pack_filter(f_lvl & 1, k_p, stride)
+
+
 def conv_full_levels(f_lvl: jnp.ndarray, s_lvl: jnp.ndarray) -> jnp.ndarray:
     """Ground truth: sum_c full_convolution(f[c], s[b, c]) -> [B, N+K-1]."""
 

@@ -6,9 +6,28 @@ unsigned multiplier so every packed partial product stays < 2**30.
 ``n_seg`` weight levels from adjacent output channels are packed at
 ``stride``-bit segments into one int32; one integer multiply by an
 activation level then computes ``n_seg`` products simultaneously, and a
-segment sum stays decodable for ``acc_chunk = 2**e_g`` accumulations
-(the guard-bit headroom of Eq. 4), after which segments are peeled into
-int32 accumulators.
+segment sum stays decodable for ``acc_chunk`` accumulations (Eq. 4's
+exact guard-bit bound), after which segments are peeled into int32
+accumulators.
+
+## Overpacking (overlap == 1, §IV-B-1)
+
+With ``overlap=1`` the placement steals one guard bit per segment:
+adjacent segments share a bit, buying either one extra segment per lane
+(denser packing, e.g. w2a3 fits 3 channels instead of 2) or — at equal
+density — one extra decoded bit, doubling ``acc_chunk`` and halving the
+peel rounds (w4a4: 18 vs 9).  The stolen MSB of each segment is
+recovered in-kernel by the paper's Fig. 3 chain: the true LSB of the
+*next* segment is recomputed from operand LSBs (AND per product, XOR
+over the accumulation chunk), which collapses into one extra integer dot
+of the activation LSBs against the weight-LSB planes plus a bottom-up
+subtract-and-shift peel — see :mod:`repro.kernels.peel` for the
+derivation and ``core.packing.bitpack`` for the Python-int oracle it is
+tested against.  The LSB planes cost no storage or extra DMA: because
+``stride >= w_bits``, bit ``d*stride`` of the packed word already *is*
+segment d's LSB, so one AND against a compile-time mask materializes
+them from the weight tile that is resident anyway, and decode-time
+recovery costs one XOR per segment.
 
 ## Performance
 
@@ -25,26 +44,20 @@ fits one step (``grid_k == 1``, the common serve case) a scratch-free
 kernel body writes the output tile directly.
 
 Within a K step the packed->peel cadence is preserved: the tile is
-reduced in ``acc_chunk``-column sub-chunks (the Eq. 4 guard-bit bound on
-pre-decode accumulation).  The peel has two formulations, chosen
-statically per backend:
+reduced in ``acc_chunk``-column sub-chunks.  The no-overpack peel has
+two formulations, chosen statically per backend (broadcasted shift on
+compiled TPU, unrolled shift+mask in interpret mode — ~1.8x faster
+there); the overpacked peel is inherently sequential (a bottom-up carry
+chain) and shared across backends.  All are bit-identical; the property
+tests and ``tests/diffcheck.py`` cover every placement.
 
-  * compiled TPU (``interpret=False``): one broadcasted
-    ``shift_right_logical`` of the chunk product against a
-    ``[n_seg, 1, 1]`` shift vector — a single VPU op peels every
-    segment, instead of ``n_seg`` serial scatter-adds;
-  * interpret mode (CPU emulation): an unrolled per-segment
-    shift+mask+add — measured ~1.8x faster there, because XLA CPU fuses
-    the short unrolled chain better than the materialized
-    ``[n_seg, bm, bnp]`` broadcast.
-
-Both are bit-identical; the property tests cover every placement.
 ``block_k=None`` is backend-adaptive: 256 when compiling for TPU (the
 VMEM-residency bound the blocking exists for), whole-K in interpret
 mode, where "VMEM" is host memory and extra grid steps are pure
 overhead (~1.6x at M=8, K=1024 shapes).  The wrapper zero-pads all
 three dimensions up to block multiples, which is exact because zero
-levels contribute nothing to any segment.
+levels contribute nothing to any segment (including the LSB-parity
+planes).
 """
 from __future__ import annotations
 
@@ -55,80 +68,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _peel_chunks(a, wp_ref, *, n_seg: int, stride: int, acc_chunk: int,
-                 broadcast_peel: bool):
-    """Chunked packed dot + segment peel -> [n_seg, bm, bnp] accumulator.
-
-    ``a`` is the loaded [bm, bk] int32 activation tile; ``wp_ref`` the
-    packed-weight block ref (sliced per chunk).
-    """
-    bm, bk = a.shape
-    bnp = wp_ref.shape[1]
-    mask = (1 << stride) - 1
-    acc = jnp.zeros((n_seg, bm, bnp), jnp.int32)
-    if broadcast_peel:
-        shifts = jnp.broadcast_to(
-            jax.lax.broadcasted_iota(jnp.int32, (n_seg, 1, 1), 0) * stride,
-            (n_seg, bm, bnp),
-        )
-    for c0 in range(0, bk, acc_chunk):
-        c1 = min(c0 + acc_chunk, bk)
-        # packed partial dot: every element-wise product carries n_seg
-        # low-bit products in disjoint bit segments; the dot's additions
-        # stay segment-aligned thanks to the guard-bit headroom.
-        part = jax.lax.dot_general(
-            a[:, c0:c1],
-            wp_ref[c0:c1, :],
-            (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32,
-        )
-        if broadcast_peel:
-            wide = jnp.broadcast_to(part[None, :, :], (n_seg, bm, bnp))
-            acc = acc + (jax.lax.shift_right_logical(wide, shifts) & mask)
-        else:
-            for d in range(n_seg):
-                seg = jax.lax.shift_right_logical(part, d * stride) & mask
-                acc = acc.at[d].add(seg)
-    return acc
+from repro.kernels.peel import interleave, peel_chunks
 
 
-def _interleave(acc):
-    """Restore channel order: out[:, j*n_seg + d] = acc[d, :, j]."""
-    n_seg, bm, bnp = acc.shape
-    return jnp.moveaxis(acc, 0, -1).reshape(bm, bnp * n_seg)
-
-
-def _kernel_single_k(a_ref, wp_ref, o_ref, *, n_seg, stride, acc_chunk, broadcast_peel):
-    o_ref[...] = _interleave(
-        _peel_chunks(a_ref[...], wp_ref, n_seg=n_seg, stride=stride,
-                     acc_chunk=acc_chunk, broadcast_peel=broadcast_peel)
+def _kernel_single_k(a_ref, wp_ref, o_ref, *, n_seg, stride, acc_chunk, overlap,
+                     broadcast_peel):
+    o_ref[...] = interleave(
+        peel_chunks(a_ref[...], wp_ref, n_seg=n_seg, stride=stride,
+                    acc_chunk=acc_chunk, overlap=overlap,
+                    broadcast_peel=broadcast_peel)
     )
 
 
 def _kernel_blocked(a_ref, wp_ref, o_ref, acc_ref, *, n_seg, stride, acc_chunk,
-                    broadcast_peel):
+                    overlap, broadcast_peel):
     k_idx = pl.program_id(2)
 
     @pl.when(k_idx == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += _peel_chunks(a_ref[...], wp_ref, n_seg=n_seg, stride=stride,
-                                 acc_chunk=acc_chunk, broadcast_peel=broadcast_peel)
+    acc_ref[...] += peel_chunks(a_ref[...], wp_ref, n_seg=n_seg,
+                                stride=stride, acc_chunk=acc_chunk,
+                                overlap=overlap, broadcast_peel=broadcast_peel)
 
     @pl.when(k_idx == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = _interleave(acc_ref[...])
+        o_ref[...] = interleave(acc_ref[...])
 
 
 def _kernel_fused(x_ref, wp_ref, o_ref, asum_ref, *, a_bits, n_seg, stride,
-                  acc_chunk, broadcast_peel):
+                  acc_chunk, overlap, broadcast_peel):
     n_lvl = (1 << a_bits) - 1
     a = jnp.round(jnp.clip(x_ref[...], 0.0, 1.0) * n_lvl).astype(jnp.int32)
-    acc = _peel_chunks(a, wp_ref, n_seg=n_seg, stride=stride,
-                       acc_chunk=acc_chunk, broadcast_peel=broadcast_peel)
-    o_ref[...] = _interleave(acc)
+    acc = peel_chunks(a, wp_ref, n_seg=n_seg, stride=stride,
+                      acc_chunk=acc_chunk, overlap=overlap,
+                      broadcast_peel=broadcast_peel)
+    o_ref[...] = interleave(acc)
     asum_ref[...] = jnp.sum(a, axis=1, keepdims=True)
 
 
@@ -140,6 +116,7 @@ def packed_dense_fused_raw(
     n_seg: int,
     stride: int,
     acc_chunk: int,
+    overlap: int = 0,
     block_m: int = 128,
     block_n: int = 128,
     interpret: bool | None = None,
@@ -166,7 +143,7 @@ def packed_dense_fused_raw(
     w_packed = pad_to(w_packed, k, grid[1] * bnp)
     kernel = functools.partial(
         _kernel_fused, a_bits=a_bits, n_seg=n_seg, stride=stride,
-        acc_chunk=acc_chunk, broadcast_peel=not interpret,
+        acc_chunk=acc_chunk, overlap=overlap, broadcast_peel=not interpret,
     )
     acc, a_sum = pl.pallas_call(
         kernel,
@@ -189,18 +166,26 @@ def packed_dense_fused_raw(
 
 
 def packed_matmul_raw(
-    a_lvl: jax.Array,  # [M, K] int32 activation levels (unsigned, < 2**a_bits)
-    w_packed: jax.Array,  # [K, N // n_seg] int32 packed weight levels
+    a_lvl: jax.Array,  # [M, K] activation levels (unsigned, < 2**a_bits)
+    w_packed: jax.Array,  # [K, N // n_seg] packed weight levels
     *,
     n_seg: int,
     stride: int,
     acc_chunk: int,
+    overlap: int = 0,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Integer matmul of levels; returns [M, N] int32 accumulator."""
+    """Integer matmul of levels; returns [M, N] int32 accumulator.
+
+    Operands may be int32 (the VPU lane path) or int8 (the MXU lane path
+    — ``kernels.quant_matmul.quant_packed_matmul_raw``); the dot always
+    accumulates int32.  ``overlap=1`` runs the overpacked decode (the
+    weight-LSB planes it needs are a masked view of ``w_packed`` — see
+    the module docstring).
+    """
     from repro.kernels.common import pad_to, resolve_block_k, resolve_interpret
 
     interpret = resolve_interpret(interpret)
@@ -214,7 +199,7 @@ def packed_matmul_raw(
     a_lvl = pad_to(a_lvl, grid[0] * bm, grid[2] * bk)
     w_packed = pad_to(w_packed, grid[2] * bk, grid[1] * bnp)
     opts = dict(
-        n_seg=n_seg, stride=stride, acc_chunk=acc_chunk,
+        n_seg=n_seg, stride=stride, acc_chunk=acc_chunk, overlap=overlap,
         broadcast_peel=not interpret,
     )
     if grid[2] == 1:

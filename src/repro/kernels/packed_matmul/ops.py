@@ -29,7 +29,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.packing import TPU_VPU15, kernel_placements
+from repro.core.packing import TPU_VPU15
+from repro.core.packing.select import select_kernel_placement
 from repro.core.quant import act_to_int_levels, weight_to_int_levels
 from repro.kernels.common import resolve_interpret
 
@@ -38,38 +39,46 @@ from .kernel import packed_dense_fused_raw, packed_matmul_raw
 
 
 class PackConfig(NamedTuple):
-    """Frozen kernel-placement choice (immutable: safe to cache/share)."""
+    """Frozen kernel-placement choice (immutable: safe to cache/share).
+
+    ``overlap=1`` marks an overpacked placement (§IV-B-1): segments share
+    one bit, recovered in-kernel via the Fig. 3 LSB chain against a
+    masked view of the packed weights (``repro.kernels.peel``).
+    """
 
     n_seg: int
     stride: int
     acc_chunk: int
+    overlap: int = 0
 
 
 @functools.lru_cache(maxsize=None)
-def choose_config(w_bits: int, a_bits: int, min_chunk: int = 4) -> PackConfig | None:
-    """Best no-overpack kernel placement with weights on the packed port
-    and >= min_chunk accumulation headroom.
+def choose_config(
+    w_bits: int, a_bits: int, min_chunk: int = 4, *, allow_overpack: bool = True
+) -> PackConfig | None:
+    """Best kernel placement with weights on the packed port and
+    >= min_chunk accumulation headroom, overpacked placements included.
 
-    ``acc_chunk`` uses Eq. 4's exact decodability bound — the largest A
-    with ``A * (2**w - 1) * (2**a - 1) <= 2**stride - 1`` — rather than
-    the power-of-two convenience ``2**e_g`` (e.g. 9 instead of 8 at
-    w4a4/stride 11), which shaves one peel round in eight off the kernel.
+    Routes through :func:`repro.core.packing.select.select_kernel_placement`
+    — the same enumeration + feasibility filter the plan compiler's LUTs
+    and the customization cost model score, so the optimizer can never
+    pick a placement this runtime cannot execute.  ``acc_chunk`` is
+    Eq. 4's exact decodability bound at ``stride + overlap`` decoded bits
+    (e.g. 9 instead of 8 at w4a4/stride 11 no-overpack, 18 overpacked —
+    the stolen guard bit halves the peel rounds); an overpacked placement
+    wins only when it beats the no-overpack winner on (density,
+    headroom), e.g. w2a3 packs 3 segments instead of 2.
     """
-    max_prod = ((1 << w_bits) - 1) * ((1 << a_bits) - 1)
-    best = None
-    for cfg in kernel_placements(TPU_VPU15, w_bits, a_bits, allow_overpack=False):
-        if cfg.n_a != 1:
-            continue  # activations stay scalar per lane; weights pack
-        headroom = max(1, ((1 << cfg.stride) - 1) // max_prod)
-        if headroom < min_chunk and cfg.n_w > 1:
-            continue
-        score = (cfg.n_w, headroom)
-        if best is None or score > best[0]:
-            best = (score, cfg, headroom)
-    if best is None or best[1].n_w == 1:
+    sel = select_kernel_placement(
+        TPU_VPU15, w_bits, a_bits,
+        allow_overpack=allow_overpack, min_chunk=min_chunk,
+    )
+    if sel is None:
         return None  # no profitable packing; caller uses plain int path
-    _, cfg, headroom = best
-    return PackConfig(n_seg=cfg.n_w, stride=cfg.stride, acc_chunk=int(headroom))
+    cfg, chunk = sel
+    return PackConfig(
+        n_seg=cfg.n_w, stride=cfg.stride, acc_chunk=int(chunk), overlap=cfg.overlap
+    )
 
 
 @functools.partial(
@@ -86,7 +95,10 @@ class PackedDenseParams:
     set.  Scales and the placement are static metadata so the params can
     flow through jit/scan without retracing on values.  ``block_k`` is
     the autotuned K-tile for this weight's matmul shape (None = static
-    backend default; see ``repro.plan.autotune``).
+    backend default; see ``repro.plan.autotune``).  Overpacked
+    placements (``cfg.overlap == 1``) need no extra tensors: the
+    weight-LSB planes the in-kernel Fig. 3 recovery reads are a masked
+    view of ``w_packed`` itself (see ``repro.kernels.peel``).
     """
 
     w_packed: jax.Array | None  # [K, N // n_seg] int32 packed levels
@@ -157,6 +169,7 @@ def _prepacked_fn(
     def run(x: jax.Array, w_data: jax.Array) -> jax.Array:
         from repro.kernels.common import resolve_block_k
 
+        overlap = cfg.overlap if cfg is not None else 0
         resolved_bk = resolve_block_k(block_k, x.shape[1], interpret)
         if cfg is not None and resolved_bk >= x.shape[1]:
             # whole-K tile resident: one fused kernel does quantize +
@@ -168,6 +181,7 @@ def _prepacked_fn(
                 n_seg=cfg.n_seg,
                 stride=cfg.stride,
                 acc_chunk=cfg.acc_chunk,
+                overlap=overlap,
                 interpret=interpret,
             )
             out = ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
@@ -182,6 +196,7 @@ def _prepacked_fn(
                 n_seg=cfg.n_seg,
                 stride=cfg.stride,
                 acc_chunk=cfg.acc_chunk,
+                overlap=overlap,
                 block_k=block_k,
                 interpret=interpret,
             )
@@ -217,6 +232,7 @@ def _packed_dense_repack(
             n_seg=cfg.n_seg,
             stride=cfg.stride,
             acc_chunk=cfg.acc_chunk,
+            overlap=cfg.overlap,
             block_k=block_k,
             interpret=interpret,
         )

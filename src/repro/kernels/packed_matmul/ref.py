@@ -13,6 +13,21 @@ def pack_weights(w_lvl: jnp.ndarray, n_seg: int, stride: int) -> jnp.ndarray:
     return jnp.sum(grouped << shifts[None, None, :], axis=-1).astype(jnp.int32)
 
 
+def pack_lsb_planes(w_lvl: jnp.ndarray, n_seg: int, stride: int) -> jnp.ndarray:
+    """Reference construction of the weight-LSB planes the overpacked
+    decode (Fig. 3) reads: :func:`pack_weights` layout, each segment
+    holding only the level's LSB.
+
+    The kernel never stores these — because stride >= w_bits, this
+    equals ``pack_weights(w_lvl) & sum_d(1 << d*stride)`` (a masked view
+    of the packed word; see ``repro.kernels.peel.lsb_mask``).  Tests
+    assert that identity, and the in-kernel parity dot against the
+    masked view recovers every segment's true LSB (AND per product via
+    the multiply by a 0/1 activation bit, XOR via popcount mod 2).
+    """
+    return pack_weights(w_lvl & 1, n_seg, stride)
+
+
 def matmul_levels(a_lvl: jnp.ndarray, w_lvl: jnp.ndarray) -> jnp.ndarray:
     """Ground-truth integer matmul of quantization levels."""
     return jnp.dot(

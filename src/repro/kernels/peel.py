@@ -1,0 +1,125 @@
+"""Shared in-kernel segment peel for the packed matmul kernels.
+
+One chunked packed-dot + segment-peel implementation serves both the
+int32 VPU kernel (``kernels/packed_matmul``) and the int8 MXU-lane
+packed path (``kernels/quant_matmul``): the arithmetic is identical,
+only the operand storage dtype differs (the dot always accumulates
+int32 via ``preferred_element_type``).
+
+## No-overpack peel (overlap == 0)
+
+Every segment sum fits ``stride`` bits, so segments are independent
+bit-slices of the chunk product.  Two formulations, chosen statically
+per backend (see ``packed_matmul/kernel.py``): a single broadcasted
+``shift_right_logical`` against a ``[n_seg, 1, 1]`` shift vector on
+compiled TPU, an unrolled shift+mask chain in interpret mode.
+
+## Overpacked peel (overlap == 1, paper §IV-B-1 / Fig. 3)
+
+Overpacking steals one guard bit: each segment sum may need
+``stride + 1`` bits, its MSB colliding with the next segment's LSB.  The
+stolen bit is recovered from the operands, not the product: the true LSB
+of a *sum* of products is the XOR of the per-product LSBs, and the LSB
+of one product is the AND of its operand LSBs
+(``bitpack.lsb_of_segment_products`` is the Python-int oracle).  In
+kernel form the whole AND/XOR tree collapses into a second integer dot:
+
+    parity = dot(a & 1, wp & LSB_MASK)       # LSB_MASK = sum_d 2**(d*stride)
+
+The weight-LSB planes need **no separate storage**: every placement has
+``stride >= w_bits`` (segments cannot be narrower than the operand they
+carry), so bit ``d*stride`` of the packed word *is* segment d's LSB —
+one AND against a compile-time mask materializes the planes the paper's
+Fig. 3 reads from registers, costing zero extra weight bytes or DMA.
+
+XOR over the chunk == popcount mod 2, and the per-segment popcounts land
+segment-aligned in ``parity`` because the chunk bound keeps every count
+below ``2**stride`` (see ``core.packing.select.kernel_acc_chunk``).
+Segments then peel **bottom-up** — a sequential carry chain, unlike the
+independent no-overpack slices:
+
+    low    = p & (2**stride - 1)             # exact: S_0's low bits
+    bit_p  = (p >> stride) & 1               # = msb(S_0) XOR lsb(S_1)
+    msb    = bit_p XOR parity(S_1)           # Fig. 3 correction
+    S_0    = low + (msb << stride)
+    p      = (p - S_0) >> stride             # recurse on S_1..
+
+The last segment keeps all remaining bits (it owns the container top).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def packed_dot(a, w):
+    """Element dot with int32 accumulation (MXU-native for int8 operands)."""
+    return jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def lsb_mask(n_seg: int, stride: int) -> int:
+    """Compile-time mask selecting each segment's LSB from a packed word
+    (bit d*stride of ``pack_weights`` output is level d's LSB, because
+    every placement has stride >= operand bits)."""
+    return sum(1 << (d * stride) for d in range(n_seg))
+
+
+def peel_chunks(a, wp_ref, *, n_seg: int, stride: int, acc_chunk: int,
+                overlap: int, broadcast_peel: bool):
+    """Chunked packed dot + segment peel -> [n_seg, bm, bnp] accumulator.
+
+    ``a`` is the loaded [bm, bk] activation-level tile (int32 or int8);
+    ``wp_ref`` the packed-weight block ref, sliced per accumulation
+    chunk.  With ``overlap == 1`` the weight-LSB planes for the Fig. 3
+    recovery are a masked view of the same packed chunk.
+    """
+    bm, bk = a.shape
+    bnp = wp_ref.shape[1]
+    mask = (1 << stride) - 1
+    acc = jnp.zeros((n_seg, bm, bnp), jnp.int32)
+    if broadcast_peel and not overlap:
+        shifts = jnp.broadcast_to(
+            jax.lax.broadcasted_iota(jnp.int32, (n_seg, 1, 1), 0) * stride,
+            (n_seg, bm, bnp),
+        )
+    wmask = lsb_mask(n_seg, stride)
+    for c0 in range(0, bk, acc_chunk):
+        c1 = min(c0 + acc_chunk, bk)
+        # packed partial dot: every element-wise product carries n_seg
+        # low-bit products in disjoint bit segments; the dot's additions
+        # stay segment-aligned thanks to the guard-bit headroom.
+        wp = wp_ref[c0:c1, :]
+        part = packed_dot(a[:, c0:c1], wp)
+        if overlap:
+            # Fig. 3 LSB recovery: per-segment popcount of operand-LSB
+            # ANDs; bit 0 of each stride-aligned counter is the XOR chain
+            parity = packed_dot(a[:, c0:c1] & 1, wp & wmask)
+            p = part
+            for d in range(n_seg):
+                if d == n_seg - 1:
+                    val = p  # top segment keeps all remaining bits
+                else:
+                    low = p & mask
+                    bit_p = jax.lax.shift_right_logical(p, stride) & 1
+                    lsb_next = (
+                        jax.lax.shift_right_logical(parity, (d + 1) * stride) & 1
+                    )
+                    val = low + ((bit_p ^ lsb_next) << stride)
+                    p = jax.lax.shift_right_logical(p - val, stride)
+                acc = acc.at[d].add(val)
+        elif broadcast_peel:
+            wide = jnp.broadcast_to(part[None, :, :], (n_seg, bm, bnp))
+            acc = acc + (jax.lax.shift_right_logical(wide, shifts) & mask)
+        else:
+            for d in range(n_seg):
+                seg = jax.lax.shift_right_logical(part, d * stride) & mask
+                acc = acc.at[d].add(seg)
+    return acc
+
+
+def interleave(acc):
+    """Restore channel order: out[:, j*n_seg + d] = acc[d, :, j]."""
+    n_seg, bm, bnp = acc.shape
+    return jnp.moveaxis(acc, 0, -1).reshape(bm, bnp * n_seg)

@@ -8,7 +8,11 @@ and the float rescale happens once per output tile.
 
 (The sub-4-bit segment-packing path lives in kernels/packed_matmul;
 this kernel is the >=4-bit fast path the customization stage assigns to
-MXU 'DSP-equivalents'.)
+MXU 'DSP-equivalents'.  :func:`quant_packed_matmul_raw` below is the
+bridge between the two: ultra-low-bit weights segment-packed *inside*
+the int8 lane itself — the "two int4 ops per int8 multiplier" trick,
+made feasible at more bit pairs by 1-bit overpacking with the same
+in-kernel Fig. 3 LSB-recovery peel as the VPU kernel.)
 
 ## Performance
 
@@ -94,3 +98,44 @@ def quant_matmul_raw(
         scratch_shapes=[] if single_k else [pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a_i8, w_i8, w_scale)[:m, :n]
+
+
+def quant_packed_matmul_raw(
+    a_i8: jax.Array,  # [M, K] int8 unsigned activation levels (< 2**a_bits)
+    w_packed_i8: jax.Array,  # [K, N // n_seg] int8 packed weight levels
+    *,
+    n_seg: int,
+    stride: int,
+    acc_chunk: int,
+    overlap: int = 0,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Segment-packed matmul *inside* the int8 MXU lane.
+
+    ``n_seg`` sub-4-bit weight levels share one int8 word (the sign-safe
+    7-bit port of ``TPU_MXU7``); the MXU's int8 x int8 -> int32 dot then
+    computes ``n_seg`` products per lane, and the same bottom-up segment
+    peel as the VPU kernel — including the overpacked Fig. 3 LSB-recovery
+    chain against the masked-view LSB planes — decodes them from the
+    int32 accumulator.  Overpacking is what makes this path *exist* at
+    several bit pairs: e.g. w2a3 has no feasible no-overpack placement on
+    a 7-bit port, but packs 2 segments with the shared guard bit.
+
+    The grid/blocking/peel machinery is identical to
+    :func:`repro.kernels.packed_matmul.kernel.packed_matmul_raw` (shared
+    via :mod:`repro.kernels.peel`); only the operand storage dtype
+    differs, so this wrapper validates int8-safety and delegates.
+    """
+    from repro.kernels.packed_matmul.kernel import packed_matmul_raw
+
+    for name, arr in (("a_i8", a_i8), ("w_packed_i8", w_packed_i8)):
+        if arr.dtype != jnp.int8:
+            raise TypeError(f"{name} must be int8 for the MXU lane path, got {arr.dtype}")
+    return packed_matmul_raw(
+        a_i8, w_packed_i8, n_seg=n_seg, stride=stride, acc_chunk=acc_chunk,
+        overlap=overlap, block_m=block_m, block_n=block_n,
+        block_k=block_k, interpret=interpret,
+    )

@@ -1,14 +1,93 @@
-"""Jitted public wrapper: float-in/float-out int8 matmul."""
+"""Jitted public wrappers: float-in/float-out int8 matmul, plus the
+segment-packed ultra-low-bit path inside the int8 lane (overpacking
+makes it feasible where a plain no-overpack placement does not exist on
+the sign-safe 7-bit port)."""
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
+import jax.numpy as jnp
 
+from repro.core.packing import TPU_MXU7
+from repro.core.packing.select import select_kernel_placement
 from repro.kernels.common import resolve_interpret
 
 from . import ref
-from .kernel import quant_matmul_raw
+from .kernel import quant_matmul_raw, quant_packed_matmul_raw
+
+
+class MxuPackConfig(NamedTuple):
+    """Frozen int8-lane placement choice (immutable: cache/share-safe)."""
+
+    n_seg: int
+    stride: int
+    acc_chunk: int
+    overlap: int = 0
+
+
+@functools.lru_cache(maxsize=None)
+def choose_mxu_config(
+    w_bits: int, a_bits: int, min_chunk: int = 2, *, allow_overpack: bool = True
+) -> MxuPackConfig | None:
+    """Best segment packing inside the int8 MXU lane, via the same
+    placement-selection helper as the VPU/filter kernels
+    (:func:`repro.core.packing.select.select_kernel_placement`, profile
+    ``TPU_MXU7``).  The lane is narrow, so ``min_chunk`` defaults lower
+    than the VPU kernel's; several pairs (e.g. w2a3) only pack at all
+    with the overpacked guard-bit steal."""
+    sel = select_kernel_placement(
+        TPU_MXU7, w_bits, a_bits,
+        allow_overpack=allow_overpack, min_chunk=min_chunk,
+    )
+    if sel is None:
+        return None
+    cfg, chunk = sel
+    return MxuPackConfig(
+        n_seg=cfg.n_w, stride=cfg.stride, acc_chunk=int(chunk), overlap=cfg.overlap
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("w_bits", "a_bits", "interpret", "block_k"))
+def _quant_packed_dense(x, w, *, w_bits, a_bits, interpret, block_k):
+    from repro.core.quant import act_to_int_levels, weight_to_int_levels
+    from repro.kernels.packed_matmul import ref as pm_ref
+
+    cfg = choose_mxu_config(w_bits, a_bits)
+    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
+    a_lvl, a_scale = act_to_int_levels(x, a_bits)
+    n = w.shape[1]
+    if cfg is None or n % cfg.n_seg != 0:
+        acc = pm_ref.matmul_levels(a_lvl, w_lvl)
+    else:
+        wp = pm_ref.pack_weights(w_lvl, cfg.n_seg, cfg.stride).astype(jnp.int8)
+        acc = quant_packed_matmul_raw(
+            a_lvl.astype(jnp.int8), wp, n_seg=cfg.n_seg, stride=cfg.stride,
+            acc_chunk=cfg.acc_chunk, overlap=cfg.overlap,
+            block_k=block_k, interpret=interpret,
+        )
+    a_sum = jnp.sum(a_lvl, axis=1)
+    return pm_ref.dequantize(acc, a_sum, w_scale, w_zero, a_scale)
+
+
+def quant_packed_dense(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    w_bits: int,
+    a_bits: int,
+    interpret: bool | None = None,
+    block_k: int | None = None,
+) -> jax.Array:
+    """Ultra-low-bit dense layer on the int8 MXU lane: weights segment-
+    packed into int8 words, decoded by the shared (overpack-aware) peel.
+    Bit-exact vs :func:`repro.kernels.packed_matmul.ops.packed_dense_reference`
+    whenever a placement exists; plain integer fallback otherwise."""
+    return _quant_packed_dense(
+        x, w, w_bits=w_bits, a_bits=a_bits,
+        interpret=resolve_interpret(interpret), block_k=block_k,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_k"))

@@ -29,7 +29,10 @@ import json
 import pathlib
 from typing import Any
 
-PLAN_SCHEMA_VERSION = 1
+# v2: LayerPlan grew the ``overlap`` placement field (overpacked kernel
+# path).  v1 artifacts fail loudly (schema + content-hash mismatch) —
+# recompile with ``python -m repro.plan.compile``.
+PLAN_SCHEMA_VERSION = 2
 
 # repo root when running from the source tree (src/repro/plan/plan.py)
 _REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
@@ -52,10 +55,13 @@ class LayerPlan:
     w_bits: int
     a_bits: int
     # kernel-packing placement (None fields => no profitable packing;
-    # the kernel falls back to the plain integer path)
+    # the kernel falls back to the plain integer path).  ``overlap=1``
+    # marks an overpacked placement: the serving kernel runs the Fig. 3
+    # LSB-recovery peel against a masked view of the packed weights.
     n_seg: int = 1
     stride: int = 0
     acc_chunk: int = 1
+    overlap: int = 0
     t_mul: float = 1.0
     # autotuned kernel K-tile (None => backend default from kernels/common)
     block_k: int | None = None
@@ -120,6 +126,8 @@ class DeployPlan:
                     raise PlanError(f"layer {i}: {tag}={b} outside [1, 16]")
             if l.n_seg < 1 or l.acc_chunk < 1:
                 raise PlanError(f"layer {i}: n_seg/acc_chunk must be >= 1")
+            if l.overlap not in (0, 1):
+                raise PlanError(f"layer {i}: overlap={l.overlap} (only 1-bit overpacking)")
             if l.block_k is not None and l.block_k < 1:
                 raise PlanError(f"layer {i}: block_k={l.block_k} must be positive or null")
         if self.lm_head is not None:
@@ -219,9 +227,11 @@ def summarize(plan: DeployPlan) -> str:
     if "dsp_ops" in pred:
         extras.append(f"{pred['dsp_ops']:.3g} LUT-weighted ops/step")
     head = f", head w{plan.lm_head.w_bits}a{plan.lm_head.a_bits}" if plan.lm_head else ""
+    n_over = sum(1 for l in plan.layers if l.overlap)
+    over = f", {n_over} overpacked" if n_over else ""
     return (
         f"{plan.arch} [{plan.family}/{plan.source}] {len(plan.layers)} layers: "
-        f"{mix}{head}"
+        f"{mix}{head}{over}"
         + (f" ({'; '.join(extras)})" if extras else "")
         + f" hash={plan.content_hash()}"
     )

@@ -52,10 +52,17 @@ class ProjShape:
 
 
 def serving_lut(
-    profile: MulProfile = TPU_VPU15, *, path=None, method: str = "mixq"
+    profile: MulProfile = TPU_VPU15, *, path=None, method: str = "runtime"
 ) -> PackingLUT:
     """The kernel_len=1 (pure matmul) LUT for the serving profile, via the
-    single-file cache (built once, loaded on later startups)."""
+    single-file cache (built once, loaded on later startups).
+
+    ``method="runtime"`` scores exactly the placements the serving
+    kernels execute (shared selection helper, overpacking included) —
+    the historical ``mixq`` tables promised operand-separation/filter
+    densities the matmul runtime cannot deliver, so search T_mul and
+    served T_mul could disagree.
+    """
     path = DEFAULT_LUT_PATH if path is None else path
     return cached_luts(path, profile=profile, kernel_lens=(1,), method=method)[1]
 
@@ -171,6 +178,7 @@ def _packing_fields(w_bits: int, a_bits: int, lut: PackingLUT) -> dict:
         "n_seg": kcfg.n_seg if kcfg else 1,
         "stride": kcfg.stride if kcfg else 0,
         "acc_chunk": kcfg.acc_chunk if kcfg else 1,
+        "overlap": kcfg.overlap if kcfg else 0,
         "t_mul": lut.t_mul(w_bits, a_bits),
     }
 
@@ -381,7 +389,8 @@ def plan_from_nas_result(
         layers.append(
             LayerPlan(
                 index=i, name=f"conv_{i}", w_bits=w, a_bits=a,
-                n_seg=kcfg.n_w, stride=kcfg.stride, acc_chunk=1, t_mul=t,
+                n_seg=kcfg.n_w, stride=kcfg.stride, acc_chunk=1,
+                overlap=kcfg.overlap, t_mul=t,
                 cost=cost,
             )
         )

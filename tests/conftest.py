@@ -18,3 +18,19 @@ if importlib.util.find_spec("hypothesis") is None:
     sys.modules["hypothesis"] = _mod
     _spec.loader.exec_module(_mod)
     sys.modules["hypothesis.strategies"] = _mod.strategies
+else:
+    # Real hypothesis: register an "extended" profile for the deep CI
+    # sweep — derandomized (pinned seed) so a red run reproduces exactly.
+    # hypothesis has no built-in env-var selection, so the profile is
+    # loaded here from HYPOTHESIS_PROFILE; suites that read
+    # DIFFCHECK_MAX_EXAMPLES (tests/test_kernels.py) scale their
+    # max_examples independently, since per-test @settings would
+    # otherwise override the profile value.
+    import os
+
+    import hypothesis
+
+    hypothesis.settings.register_profile(
+        "extended", deadline=None, derandomize=True, max_examples=100
+    )
+    hypothesis.settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))

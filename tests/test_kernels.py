@@ -1,15 +1,27 @@
-"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle.
+
+The overpacked (overlap=1) suites drive every placement through the
+three-way differential harness in ``tests/diffcheck.py`` (Pallas kernel
+vs NumPy reference vs Python-int ``bitpack`` oracle).  ``MAX_EXAMPLES``
+below honors ``DIFFCHECK_MAX_EXAMPLES`` so the extended CI job can crank
+the sweeps without editing the suite.
+"""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import diffcheck
 from repro.kernels.filter_conv import ref as fc_ref
 from repro.kernels.filter_conv.ops import choose_filter_config, packed_conv1d
 from repro.kernels.packed_matmul import ref as pm_ref
 from repro.kernels.packed_matmul.ops import choose_config, packed_dense, packed_dense_reference
 from repro.kernels.quant_matmul.ops import quant_dense, quant_dense_reference
+
+MAX_EXAMPLES = int(os.environ.get("DIFFCHECK_MAX_EXAMPLES", "0")) or None
 
 
 # ---------------------------------------------------------------------------
@@ -75,6 +87,7 @@ def _check_packed_raw(wb, ab, m, k, n_groups, block_k, seed, block_m=16, block_n
     wp = pm_ref.pack_weights(wl, cfg.n_seg, cfg.stride)
     got = packed_matmul_raw(
         a, wp, n_seg=cfg.n_seg, stride=cfg.stride, acc_chunk=cfg.acc_chunk,
+        overlap=cfg.overlap,
         block_m=block_m, block_n=block_n, block_k=block_k,
     )
     want = pm_ref.matmul_levels(a, wl)
@@ -241,6 +254,154 @@ def test_filter_config_container_safe():
             nseg = cfg.k_p + cfg.n_p - 1
             bits = wb + ab + (nseg - 1) * cfg.stride + int(np.log2(cfg.acc_chunk))
             assert bits <= 31, (wb, ab, cfg)
+
+
+# ---------------------------------------------------------------------------
+# overpacked (overlap=1) placements: three-way differential harness
+# ---------------------------------------------------------------------------
+
+
+def test_choose_config_reaches_overpacked_density():
+    """At least one pair's selected placement is overpacked AND denser
+    than any no-overpack placement (the §IV-B-1 payoff), and selection
+    never regresses below the no-overpack winner."""
+    gain = diffcheck.overpack_gain_pairs()
+    assert (2, 3) in gain and (3, 2) in gain, gain
+    for w in range(2, 9):
+        for a in range(2, 9):
+            sel, base = choose_config(w, a), choose_config(w, a, allow_overpack=False)
+            if base is not None:
+                assert sel is not None
+                assert (sel.n_seg, sel.acc_chunk) >= (base.n_seg, base.acc_chunk), (w, a)
+
+
+@settings(max_examples=MAX_EXAMPLES or 12, deadline=None)
+@given(
+    wb=st.integers(2, 8),
+    ab=st.integers(2, 8),
+    m=st.sampled_from([1, 3, 5]),
+    k=st.sampled_from([2, 7, 19, 33]),
+    n_groups=st.sampled_from([1, 3]),
+    block_k=st.sampled_from([8, 16, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_every_overpacked_kernel_placement_matches_bitpack_oracle(
+    wb, ab, m, k, n_groups, block_k, seed
+):
+    """Every executable overlap=1 placement from kernel_placements — not
+    just the chooser winner — decodes in-kernel bit-for-bit against the
+    Python-int bitpack oracle and the NumPy reference, on odd shapes with
+    block_k below / at / above K."""
+    for cfg in diffcheck.overpack_kernel_placements(wb, ab):
+        diffcheck.check_matmul_case(
+            diffcheck.MatmulCase(wb, ab, cfg, m, k, n_groups, block_k, seed)
+        )
+
+
+def test_overpacked_kernel_all_chunk_boundaries():
+    """K extents straddling every accumulation-chunk and K-block boundary
+    (one short chunk, exact multiples, one-past, block-crossing) stay
+    bit-exact for the selected overpacked placements."""
+    checked = 0
+    for wb, ab in [(2, 3), (3, 2), (2, 2), (4, 4)]:
+        cfg = choose_config(wb, ab)
+        assert cfg is not None and cfg.overlap == 1, (wb, ab, cfg)
+        block_k = 16
+        for k in diffcheck.boundary_ks(cfg.acc_chunk, block_k):
+            diffcheck.check_matmul_case(
+                diffcheck.MatmulCase(wb, ab, cfg, 2, k, 2, block_k, seed=wb * 10 + ab + k)
+            )
+            checked += 1
+    assert checked
+
+
+@settings(max_examples=MAX_EXAMPLES or 10, deadline=None)
+@given(
+    wb=st.integers(2, 6),
+    ab=st.integers(2, 6),
+    k_len=st.sampled_from([3, 5]),
+    b=st.sampled_from([1, 3]),
+    c=st.sampled_from([1, 5]),
+    n=st.sampled_from([5, 11]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_every_overpacked_filter_placement_matches_bitpack_oracle(
+    wb, ab, k_len, b, c, n, seed
+):
+    """Every executable overlap=1 filter placement decodes in-kernel
+    bit-for-bit against the bitpack oracle (pre-decode channel chunks
+    included) and np.convolve, under C/N blocking."""
+    for cfg in diffcheck.overpack_filter_placements(wb, ab, k_len):
+        diffcheck.check_conv_case(
+            diffcheck.ConvCase(wb, ab, cfg, b, c, n, k_len, seed),
+            block_c=2, block_n=8,
+        )
+
+
+def test_overpacked_prepack_stores_no_extra_planes_and_serves_exact():
+    """Overpacked prepacking costs zero extra weight storage — the Fig. 3
+    LSB planes are a masked view of the packed word (stride >= w_bits),
+    an identity asserted here — and the serving fast path (fused whole-K
+    + K-blocked kernels) stays bit-exact vs the unpacked reference."""
+    from repro.kernels.packed_matmul.ops import prepack_dense
+    from repro.kernels.peel import lsb_mask
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.uniform(kx, (9, 45))
+    w = jax.random.normal(kw, (45, 21))
+    for wb, ab in [(2, 3), (4, 4)]:
+        pre = prepack_dense(w, w_bits=wb, a_bits=ab)
+        assert pre.cfg.overlap == 1, (wb, ab)
+        # the masked view IS the packed-LSB-planes reference construction
+        from repro.core.quant import weight_to_int_levels
+
+        w_lvl = weight_to_int_levels(w, wb)[0].astype(jnp.int32)
+        n_pad = -(-w.shape[1] // pre.cfg.n_seg) * pre.cfg.n_seg
+        w_lvl = jnp.pad(w_lvl, ((0, 0), (0, n_pad - w.shape[1])))
+        np.testing.assert_array_equal(
+            np.asarray(pre.w_packed) & lsb_mask(pre.cfg.n_seg, pre.cfg.stride),
+            np.asarray(pm_ref.pack_lsb_planes(w_lvl, pre.cfg.n_seg, pre.cfg.stride)),
+        )
+        want = packed_dense_reference(x, w, w_bits=wb, a_bits=ab)
+        # fused whole-K path and the K-blocked path both recover the bits
+        np.testing.assert_array_equal(np.asarray(packed_dense(x, pre)), np.asarray(want))
+        np.testing.assert_array_equal(
+            np.asarray(packed_dense(x, pre, block_k=16)), np.asarray(want)
+        )
+
+
+@settings(max_examples=MAX_EXAMPLES or 10, deadline=None)
+@given(
+    wb=st.integers(2, 3),
+    ab=st.integers(2, 4),
+    m=st.sampled_from([1, 9]),
+    k=st.sampled_from([13, 40]),
+    n=st.sampled_from([8, 18]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mxu_packed_dense_matches_reference(wb, ab, m, k, n, seed):
+    """The int8-lane segment-packed path (quant_matmul) is bit-exact vs
+    the packed reference wherever a placement exists (several only exist
+    thanks to overpacking), and falls back cleanly elsewhere."""
+    from repro.kernels.quant_matmul.ops import quant_packed_dense
+
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.uniform(kx, (m, k))
+    w = jax.random.normal(kw, (k, n))
+    got = quant_packed_dense(x, w, w_bits=wb, a_bits=ab)
+    want = packed_dense_reference(x, w, w_bits=wb, a_bits=ab)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mxu_config_needs_overpacking_at_w2a3():
+    """On the sign-safe 7-bit int8 lane, w2a3 packs only via the stolen
+    guard bit — the placement the old hard-coded allow_overpack=False
+    choosers could never reach."""
+    from repro.kernels.quant_matmul.ops import choose_mxu_config
+
+    assert choose_mxu_config(2, 3, allow_overpack=False) is None
+    cfg = choose_mxu_config(2, 3)
+    assert cfg is not None and cfg.overlap == 1 and cfg.n_seg == 2
 
 
 # ---------------------------------------------------------------------------

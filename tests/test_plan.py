@@ -277,6 +277,65 @@ def test_mixed_plan_paged_decode_matches_unrolled_monolithic():
         np.testing.assert_array_equal(mono[t], np.asarray(lg), err_msg=f"step {t}")
 
 
+def test_overpacked_plan_roundtrip_compile_hash_load_apply_serve(tmp_path):
+    """Plan round-trip carrying overpacked placements: compile -> hash ->
+    load -> apply -> the engine serves a mixed overpacked/no-overpack
+    stack bit-identically to the unpaged reference decode."""
+    import diffcheck
+
+    cfg = get_config("gemma3-1b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    bits = diffcheck.MIXED_STACK_BITS[: cfg.n_layers]
+    plan = plan_from_bits(cfg, arch="gemma3-1b", bits=bits)
+    # the artifact records the overpacked placements: (2,3) is denser than
+    # any no-overpack placement, (4,4) overpacks for headroom, (8,8) falls
+    # back to the plain integer path
+    assert [l.overlap for l in plan.layers] == [1, 1, 0]
+    assert plan.layers[0].n_seg == 3 and plan.layers[0].overlap == 1
+    path = plan.save(tmp_path / "overpacked.json")
+    loaded = DeployPlan.load(path)
+    assert loaded.content_hash() == plan.content_hash()
+    assert [(l.n_seg, l.overlap) for l in loaded.layers] == [
+        (l.n_seg, l.overlap) for l in plan.layers
+    ]
+    applied, head = apply_plan(params, cfg, loaded, verbose=False)
+    leaf = applied["layers"][0]["attn"]["wq"]["w"]
+    assert isinstance(leaf, PackedDenseParams)
+    assert leaf.cfg.overlap == 1
+    leaf8 = applied["layers"][2]["attn"]["wq"]["w"]
+    assert leaf8.cfg is None  # w8a8: plain-int fallback
+    # per-layer exactness at each layer's own bits
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, cfg.d_model))
+    for i, (w_b, a_b) in enumerate(bits):
+        lw = applied["layers"][i]["attn"]["wq"]["w"]
+        w_float = params["layers"]["attn"]["wq"]["w"][i]
+        np.testing.assert_array_equal(
+            np.asarray(packed_dense(x, lw)),
+            np.asarray(packed_dense_reference(x, w_float, w_bits=w_b, a_bits=a_b)),
+        )
+    # engine vs unpaged monolithic reference: identical greedy tokens
+    from repro.serving import Engine, EngineConfig
+
+    prompt = jax.random.randint(jax.random.PRNGKey(7), (5,), 1, cfg.vocab).tolist()
+    max_new = 4
+    eng = Engine(cfg, applied, EngineConfig(n_slots=2, page_size=4, max_len=32), head=head)
+    req = eng.submit(prompt, max_new)
+    eng.run(realtime=False)
+    assert req.out_tokens == diffcheck.greedy_decode_reference(
+        applied, cfg, head, prompt, max_new
+    )
+    assert eng.allocator.n_free == eng.allocator.n_usable
+
+
+def test_plan_rejects_bad_overlap(tmp_path):
+    cfg = get_config("gemma3-1b", smoke=True)
+    plan = uniform_plan(cfg, arch="gemma3-1b", w_bits=4, a_bits=4)
+    payload = plan.to_payload()
+    payload["layers"][0]["overlap"] = 2
+    with pytest.raises(PlanError):
+        DeployPlan.from_payload(payload)
+
+
 # ---------------------------------------------------------------------------
 # packing LUT single-file cache
 # ---------------------------------------------------------------------------

@@ -265,6 +265,33 @@ def test_prepack_dense_rank4_matches_per_slice():
             np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_engine_serves_overpacked_stack_bitexact_vs_unpaged():
+    """Continuous engine over a mixed overpacked / overlap-headroom /
+    unpacked-fallback stack (the diffcheck fixture bits) emits exactly
+    the greedy token stream of the unpaged monolithic decode loop."""
+    import diffcheck
+    from repro.plan import apply_plan, plan_from_bits
+
+    cfg = get_config("gemma3-1b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    bits = diffcheck.MIXED_STACK_BITS[: cfg.n_layers]
+    plan = plan_from_bits(cfg, arch="gemma3-1b", bits=bits)
+    overlaps = [l.overlap for l in plan.layers]
+    assert 1 in overlaps and 0 in overlaps, overlaps  # genuinely mixed
+    applied, head = apply_plan(params, cfg, plan, verbose=False)
+    prompts = _prompts(jax.random.PRNGKey(11), 2, (4, 6), cfg.vocab)
+    max_new = 4
+    eng = Engine(cfg, applied, EngineConfig(n_slots=2, page_size=4, max_len=32), head=head)
+    reqs = [eng.submit(p, max_new) for p in prompts]
+    m = eng.run(realtime=False)
+    assert m["n_requests"] == 2
+    for req, prompt in zip(reqs, prompts):
+        assert req.out_tokens == diffcheck.greedy_decode_reference(
+            applied, cfg, head, prompt, max_new
+        )
+    assert eng.allocator.n_free == eng.allocator.n_usable
+
+
 def test_moe_forward_packed_experts_finite():
     """moe_apply with prepacked expert weights runs and stays finite."""
     from repro.kernels.packed_matmul.ops import prepack_dense
