@@ -1,0 +1,216 @@
+"""Bench-invariant gate: fail CI on *structural* regressions, not noise.
+
+The smoke bench jobs used to upload JSON artifacts that nobody checked —
+a serving regression could merge green as long as the script exited 0.
+This gate runs after each smoke bench and asserts the invariants that
+survive CI-box timing noise:
+
+* serving — the continuous engine generates at least as fast as the
+  static gang-admission baseline at the backlogged rate (ratio gated
+  with a noise tolerance, not raw timings); both policies generate the
+  SAME token count per rate (greedy decoding is deterministic — a
+  mismatch means a scheduling/correctness bug, not noise); the
+  long-prompt admit sweep is present with both arms, token counts agree
+  across arms, and — for full (committed) runs — chunked on-demand
+  admission beats reserve-at-admit on p99 TTFT at the backlogged rate;
+* plan bench — at least one served plan carries >= 3 distinct bit pairs
+  (the mixed-precision path stays genuinely mixed);
+* packing efficiency — the overpack density-gain pairs are still
+  present, each > 1x denser and verified bit-exact through the kernel;
+* kernel bench — the prepack A/B and K-blocking sections exist with
+  positive timings (the pipeline measured what it claims);
+* deploy-plan artifact — the CI-compiled plan itself serves >= 3
+  distinct bit pairs.
+
+  python benchmarks/check_invariants.py BENCH_serving_smoke.json
+  python benchmarks/check_invariants.py artifacts/packing_efficiency.json
+  python benchmarks/check_invariants.py --kind deploy-plan artifacts/plans/ci-plan.json
+
+Exits non-zero listing every violated invariant.  ``--tolerance`` tunes
+the throughput-ratio slack (default 0.85: continuous may be up to 15%
+below static before the gate trips, absorbing shared-runner jitter
+while still catching a real policy regression).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _by(rows: list[dict], key: str) -> dict:
+    return {r[key]: r for r in rows}
+
+
+def check_serving(d: dict, *, tolerance: float = 0.85) -> list[str]:
+    errs: list[str] = []
+    rows = d.get("results") or []
+    if not rows:
+        return ["serving: no results"]
+    rates = sorted({r["rate_rps"] for r in rows})
+    backlogged = rates[-1]
+    for rate in rates:
+        cell = _by([r for r in rows if r["rate_rps"] == rate], "engine")
+        if set(cell) != {"continuous", "static"}:
+            errs.append(f"serving: rate {rate} missing a policy arm ({sorted(cell)})")
+            continue
+        if cell["continuous"]["generated_tokens"] != cell["static"]["generated_tokens"]:
+            errs.append(
+                f"serving: generated_tokens diverge at rate {rate} "
+                f"(continuous {cell['continuous']['generated_tokens']} vs "
+                f"static {cell['static']['generated_tokens']}) — greedy decode "
+                "must be policy-independent"
+            )
+        if rate == backlogged:
+            ratio = cell["continuous"]["tokens_per_s"] / cell["static"]["tokens_per_s"]
+            if ratio < tolerance:
+                errs.append(
+                    f"serving: continuous/static tokens/s = {ratio:.3f} < "
+                    f"{tolerance} at the backlogged rate {rate} — slot "
+                    "recycling stopped paying for itself"
+                )
+    lp = d.get("long_prompt")
+    if not lp or not lp.get("results"):
+        errs.append("serving: long_prompt admit sweep missing")
+        return errs
+    lp_rates = sorted({r["rate_rps"] for r in lp["results"]})
+    for rate in lp_rates:
+        cell = _by([r for r in lp["results"] if r["rate_rps"] == rate], "arm")
+        if set(cell) != {"reserve", "chunked-on-demand"}:
+            errs.append(f"serving: long_prompt rate {rate} missing an arm ({sorted(cell)})")
+            continue
+        if (cell["reserve"]["generated_tokens"]
+                != cell["chunked-on-demand"]["generated_tokens"]):
+            errs.append(
+                f"serving: long_prompt generated_tokens diverge at rate {rate} — "
+                "preemption/replay must resume token-identically"
+            )
+    if not d.get("smoke"):
+        # committed full runs gate the headline too: chunked on-demand must
+        # win p99 TTFT where the queue is actually backlogged
+        cell = _by([r for r in lp["results"] if r["rate_rps"] == lp_rates[-1]], "arm")
+        if set(cell) == {"reserve", "chunked-on-demand"}:
+            if cell["chunked-on-demand"]["ttft_p99"] >= cell["reserve"]["ttft_p99"]:
+                errs.append(
+                    f"serving: chunked on-demand p99 TTFT "
+                    f"({cell['chunked-on-demand']['ttft_p99']:.3f}s) does not beat "
+                    f"reserve ({cell['reserve']['ttft_p99']:.3f}s) at the "
+                    f"backlogged rate {lp_rates[-1]}"
+                )
+    return errs
+
+
+def check_plan(d: dict) -> list[str]:
+    results = d.get("results") or {}
+    if not results:
+        return ["plan: no results"]
+    best = max(
+        (r.get("n_distinct_bit_pairs", 0) for r in results.values()), default=0
+    )
+    if best < 3:
+        return [
+            f"plan: no served plan carries >= 3 distinct bit pairs (max {best}) — "
+            "mixed-precision serving degraded to (near-)uniform"
+        ]
+    return []
+
+
+def check_packing(d: dict) -> list[str]:
+    pairs = d.get("density_gain_pairs") or []
+    if not pairs:
+        return ["packing: overpack density-gain pairs vanished"]
+    errs = []
+    for p in pairs:
+        tag = f"w{p.get('w_bits')}a{p.get('a_bits')}"
+        if p.get("density_gain", 0) <= 1:
+            errs.append(f"packing: {tag} density_gain {p.get('density_gain')} <= 1")
+        if not p.get("kernel_bitexact_vs_reference", False):
+            errs.append(f"packing: {tag} overpacked kernel no longer bit-exact")
+    return errs
+
+
+def check_kernels(d: dict) -> list[str]:
+    errs = []
+    for section in ("prepack", "k_blocking", "kernels"):
+        rows = d.get(section) or []
+        if not rows:
+            errs.append(f"kernels: section {section!r} missing/empty")
+            continue
+        us_keys = [k for k in rows[0] if k.startswith("us")]
+        for r in rows:
+            if any(r.get(k, 0) <= 0 for k in us_keys):
+                errs.append(f"kernels: non-positive timing in {section}: {r}")
+                break
+    return errs
+
+
+def check_deploy_plan(d: dict) -> list[str]:
+    layers = d.get("layers") or []
+    if not layers:
+        return ["deploy-plan: no layers"]
+    pairs = {(l["w_bits"], l["a_bits"]) for l in layers}
+    if len(pairs) < 3:
+        return [
+            f"deploy-plan: {len(pairs)} distinct bit pair(s) {sorted(pairs)} — "
+            "the CI plan must serve >= 3"
+        ]
+    return []
+
+
+CHECKS = {
+    "serving": check_serving,
+    "plan": check_plan,
+    "packing": check_packing,
+    "kernels": check_kernels,
+    "deploy-plan": check_deploy_plan,
+}
+
+
+def infer_kind(path: pathlib.Path) -> str | None:
+    name = path.name.lower()
+    if "plans" in [p.lower() for p in path.parts[:-1]]:
+        return "deploy-plan"
+    for kind in ("serving", "plan", "packing", "kernels"):
+        if kind in name:
+            return kind
+    return None
+
+
+def run(path: str, kind: str | None = None, *, tolerance: float = 0.85) -> list[str]:
+    p = pathlib.Path(path)
+    kind = kind or infer_kind(p)
+    if kind is None:
+        return [f"{p}: cannot infer artifact kind; pass --kind"]
+    if kind not in CHECKS:
+        return [f"{p}: unknown kind {kind!r} (know {sorted(CHECKS)})"]
+    try:
+        d = json.loads(p.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{p}: unreadable artifact: {e}"]
+    check = CHECKS[kind]
+    errs = check(d, tolerance=tolerance) if kind == "serving" else check(d)
+    return [f"{p}: {e}" for e in errs]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="+", help="bench JSON artifact(s) to gate")
+    ap.add_argument("--kind", choices=sorted(CHECKS), default=None,
+                    help="artifact kind (default: inferred from the filename)")
+    ap.add_argument("--tolerance", type=float, default=0.85,
+                    help="serving throughput-ratio slack for CI noise")
+    args = ap.parse_args(argv)
+    failures: list[str] = []
+    for art in args.artifacts:
+        failures += run(art, args.kind, tolerance=args.tolerance)
+    if failures:
+        for f in failures:
+            print(f"INVARIANT VIOLATED — {f}", file=sys.stderr)
+        return 1
+    print(f"ok: {len(args.artifacts)} artifact(s) satisfy their bench invariants")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,21 +1,30 @@
-"""Serving benchmark: continuous batching vs the static fixed-batch loop.
+"""Serving benchmark: continuous batching vs the static fixed-batch loop,
+and chunked on-demand admission vs worst-case reservation.
 
-Synthetic Poisson-arrival workload (exponential inter-arrival gaps,
+Synthetic Poisson-arrival workloads (exponential inter-arrival gaps,
 mixed prompt/generation lengths) driven through the SAME jitted paged
-decode step under two admission policies:
+decode step under competing scheduler configurations:
 
-  * ``continuous`` — slots refill the moment a sequence finishes;
-  * ``static`` — gang admission: the whole batch must drain before any
-    waiting request starts (the classic fixed-batch serving loop).
+* policy sweep — ``continuous`` (slots refill the moment a sequence
+  finishes) vs ``static`` (gang admission: the whole batch must drain
+  before any waiting request starts);
+* long-prompt admit sweep — ``reserve`` (worst-case pages at admit,
+  one-token prefill: the PR-2 engine) vs ``chunked on-demand``
+  (multi-token prefill chunks + just-in-time pages with lowest-progress
+  preemption) on a long-prompt mix under a deliberately tight page pool,
+  where reservation head-of-line blocking shows up directly in TTFT.
 
-Every (rate x policy) cell reports generated tokens/s, p50/p99
-end-to-end request latency, TTFT, and mean slot occupancy.  Results land
-in ``BENCH_serving.json`` at the repo root (committed PR over PR);
-``--smoke`` runs one small rate and writes ``BENCH_serving_smoke.json``
-instead so CI can never clobber the committed trajectory file.
+Every cell reports generated tokens/s, p50/p99 end-to-end request
+latency, p50/p99 TTFT, preemption count, and mean slot occupancy.
+Results land in ``BENCH_serving.json`` at the repo root (committed PR
+over PR); ``--smoke`` runs one backlogged rate per sweep and writes
+``BENCH_serving_smoke.json`` instead so CI can never clobber the
+committed trajectory file.  Flags that a mode ignores are *errors*, not
+silent no-ops — a CI smoke run measures exactly what it claims.
 
-  python benchmarks/serving_bench.py           # full sweep (3 rates)
-  python benchmarks/serving_bench.py --smoke   # CI artifact
+  python benchmarks/serving_bench.py                 # full sweep (3 rates)
+  python benchmarks/serving_bench.py --rates 8,64    # custom full sweep
+  python benchmarks/serving_bench.py --smoke         # CI artifact
 """
 from __future__ import annotations
 
@@ -33,6 +42,9 @@ for _p in (str(_ROOT), str(_ROOT / "src")):  # support `python benchmarks/servin
 
 BENCH_JSON = _ROOT / "BENCH_serving.json"
 BENCH_JSON_SMOKE = _ROOT / "BENCH_serving_smoke.json"  # never the committed file
+
+# the long-prompt admit sweep's chunk budget (on-demand arm)
+CHUNK_TOKENS = 8
 
 
 def make_workload(
@@ -61,8 +73,9 @@ def make_workload(
     return out
 
 
-def run_policy(arch: str, policy: str, workload: list[dict], *, n_slots: int,
-               page_size: int, max_len: int, packed_head: bool) -> dict:
+def run_engine(arch: str, workload: list[dict], *, n_slots: int, page_size: int,
+               max_len: int, packed_head: bool = False, policy: str = "continuous",
+               admit: str = "reserve", chunk_tokens: int = 1, n_pages: int = 0) -> dict:
     import jax
 
     from repro.configs import get_config
@@ -76,18 +89,121 @@ def run_policy(arch: str, policy: str, workload: list[dict], *, n_slots: int,
         params,
         EngineConfig(
             n_slots=n_slots, page_size=page_size, max_len=max_len,
-            policy=policy, packed_head=packed_head,
+            n_pages=n_pages, policy=policy, admit=admit,
+            chunk_tokens=chunk_tokens, packed_head=packed_head,
         ),
     )
     for w in workload:
         eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
-    eng.warmup()  # compile outside the timed run; both policies start hot
+    eng.warmup()  # compile outside the timed run; every arm starts hot
     return eng.run(realtime=True)
+
+
+ROW_KEYS = (
+    "engine", "admit", "chunk_tokens", "tokens_per_s", "latency_p50",
+    "latency_p99", "ttft_p50", "ttft_p99", "steps", "slot_occupancy",
+    "generated_tokens", "preemptions", "wall",
+)
+
+
+def policy_sweep(args, rates: list[float], n_requests: int) -> tuple[list[dict], dict]:
+    """continuous vs static gang admission on the mixed-length workload."""
+    from repro.configs import get_config
+
+    vocab = get_config(args.arch, smoke=True).vocab
+    results = []
+    for rate in rates:
+        for policy in ("static", "continuous"):
+            # identical workload per policy: same seed => same arrivals/lengths
+            wl = make_workload(n_requests, rate, seed=args.seed, vocab=vocab)
+            m = run_engine(
+                args.arch, wl, n_slots=args.slots, page_size=args.page_size,
+                max_len=args.max_len, packed_head=args.packed_head, policy=policy,
+            )
+            row = {"rate_rps": rate, "n_requests": n_requests,
+                   **{k: m[k] for k in ROW_KEYS}}
+            results.append(row)
+            print(
+                f"serve_{policy}_rate{rate:g},{m['tokens_per_s']:.1f},"
+                f"p50={m['latency_p50']:.2f}s;p99={m['latency_p99']:.2f}s;"
+                f"occupancy={m['slot_occupancy']:.2f};steps={m['steps']}"
+            )
+    speedups = {}
+    for rate in rates:
+        by = {r["engine"]: r for r in results if r["rate_rps"] == rate}
+        speedups[str(rate)] = round(
+            by["continuous"]["tokens_per_s"] / by["static"]["tokens_per_s"], 3
+        )
+        print(f"speedup_rate{rate:g},0.0,continuous/static={speedups[str(rate)]}x")
+    return results, speedups
+
+
+def long_prompt_sweep(args, rates: list[float], n_requests: int, smoke: bool
+                      ) -> tuple[list[dict], dict, dict]:
+    """reserve-at-admit vs chunked on-demand under a tight page pool.
+
+    Long prompts make one-token prefill the TTFT wall and worst-case
+    reservation the occupancy wall; the pool is sized so only ~2 worst
+    cases fit at once, forcing the on-demand arm to actually preempt.
+    The geometry is therefore PINNED here (and recorded in the artifact
+    under ``long_prompt.workload``), not taken from --slots/--page-size/
+    --max-len, which shape only the policy sweep; --packed-head applies
+    to both sweeps.
+    """
+    from repro.configs import get_config
+
+    vocab = get_config(args.arch, smoke=True).vocab
+    if smoke:
+        shape = dict(prompt_range=(16, 33), gen_range=(4, 13), max_len=64,
+                     page_size=8, n_pages=13, n_slots=4)
+    else:
+        shape = dict(prompt_range=(24, 57), gen_range=(4, 25), max_len=96,
+                     page_size=8, n_pages=21, n_slots=4)
+    arms = (
+        {"admit": "reserve", "chunk_tokens": 1, "name": "reserve"},
+        {"admit": "on-demand", "chunk_tokens": CHUNK_TOKENS, "name": "chunked-on-demand"},
+    )
+    results = []
+    for rate in rates:
+        for arm in arms:
+            wl = make_workload(
+                n_requests, rate, seed=args.seed + 1, vocab=vocab,
+                prompt_range=shape["prompt_range"], gen_range=shape["gen_range"],
+            )
+            m = run_engine(
+                args.arch, wl, n_slots=shape["n_slots"], page_size=shape["page_size"],
+                max_len=shape["max_len"], n_pages=shape["n_pages"],
+                packed_head=args.packed_head,
+                admit=arm["admit"], chunk_tokens=arm["chunk_tokens"],
+            )
+            row = {"rate_rps": rate, "n_requests": n_requests, "arm": arm["name"],
+                   **{k: m[k] for k in ROW_KEYS}}
+            results.append(row)
+            print(
+                f"longprompt_{arm['name']}_rate{rate:g},{m['tokens_per_s']:.1f},"
+                f"ttft_p99={m['ttft_p99']:.2f}s;preemptions={m['preemptions']};"
+                f"occupancy={m['slot_occupancy']:.2f}"
+            )
+    ttft_ratio = {}
+    for rate in rates:
+        by = {r["arm"]: r for r in results if r["rate_rps"] == rate}
+        ttft_ratio[str(rate)] = round(
+            by["chunked-on-demand"]["ttft_p99"] / by["reserve"]["ttft_p99"], 3
+        )
+        print(
+            f"longprompt_ttft_rate{rate:g},0.0,"
+            f"on-demand/reserve_p99_ttft={ttft_ratio[str(rate)]}x"
+        )
+    return results, ttft_ratio, shape
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true", help="one small rate (CI artifact)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one backlogged rate per sweep (CI artifact)")
+    ap.add_argument("--rates", default=None,
+                    help="comma-separated arrival rates for the full sweep "
+                    "(incompatible with --smoke, which fixes its rate)")
     ap.add_argument("--arch", default="llama3.2-3b")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
@@ -97,49 +213,32 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.smoke and args.rates is not None:
+        # never silently ignore a flag: a smoke run that *looked* like it
+        # measured --rates would let a regression at those rates merge green
+        ap.error("--smoke fixes the rate sweep; drop --rates (or drop --smoke)")
+
     # low rate = arrival-bound (throughput parity, latency still wins);
-    # high rate = backlogged, where slot recycling shows up in tokens/s
-    rates = [4.0] if args.smoke else [8.0, 32.0, 128.0]
+    # high rate = backlogged, where slot recycling shows up in tokens/s.
+    # smoke runs ONLY the backlogged rate: that is where the CI invariant
+    # (continuous >= static tokens/s) actually binds
+    if args.smoke:
+        rates = [32.0]
+    elif args.rates is not None:
+        rates = [float(r) for r in args.rates.split(",") if r]
+        if not rates:
+            ap.error("--rates got no parseable rates")
+    else:
+        rates = [8.0, 32.0, 128.0]
     n_requests = args.requests or (10 if args.smoke else 48)
 
-    results = []
     print("name,tokens_per_s,derived")
-    for rate in rates:
-        for policy in ("static", "continuous"):
-            # identical workload per policy: same seed => same arrivals/lengths
-            from repro.configs import get_config
-
-            vocab = get_config(args.arch, smoke=True).vocab
-            wl = make_workload(n_requests, rate, seed=args.seed, vocab=vocab)
-            m = run_policy(
-                args.arch, policy, wl, n_slots=args.slots,
-                page_size=args.page_size, max_len=args.max_len,
-                packed_head=args.packed_head,
-            )
-            row = {
-                "rate_rps": rate,
-                "n_requests": n_requests,
-                **{k: m[k] for k in (
-                    "engine", "tokens_per_s", "latency_p50", "latency_p99",
-                    "ttft_p50", "steps", "slot_occupancy", "generated_tokens",
-                    "wall",
-                )},
-            }
-            results.append(row)
-            print(
-                f"serve_{policy}_rate{rate:g},{m['tokens_per_s']:.1f},"
-                f"p50={m['latency_p50']:.2f}s;p99={m['latency_p99']:.2f}s;"
-                f"occupancy={m['slot_occupancy']:.2f};steps={m['steps']}"
-            )
-
-    # headline: continuous vs static speedup per rate
-    speedups = {}
-    for rate in rates:
-        by = {r["engine"]: r for r in results if r["rate_rps"] == rate}
-        speedups[str(rate)] = round(
-            by["continuous"]["tokens_per_s"] / by["static"]["tokens_per_s"], 3
-        )
-        print(f"speedup_rate{rate:g},0.0,continuous/static={speedups[str(rate)]}x")
+    results, speedups = policy_sweep(args, rates, n_requests)
+    lp_rates = [rates[-1]] if args.smoke else rates
+    lp_requests = max(6, n_requests // 2) if args.smoke else n_requests // 2
+    lp_results, ttft_ratio, lp_shape = long_prompt_sweep(
+        args, lp_rates, lp_requests, args.smoke
+    )
 
     payload = {
         "arch": args.arch,
@@ -149,6 +248,16 @@ def main(argv=None) -> None:
         "smoke": args.smoke,
         "results": results,
         "continuous_over_static_tokens_per_s": speedups,
+        "long_prompt": {
+            "chunk_tokens": CHUNK_TOKENS,
+            # geometry pinned by the sweep itself — the top-level
+            # slots/page_size/max_len describe only the policy sweep
+            "workload": {**{k: list(v) if isinstance(v, tuple) else v
+                            for k, v in lp_shape.items()},
+                         "packed_head": args.packed_head},
+            "results": lp_results,
+            "on_demand_over_reserve_p99_ttft": ttft_ratio,
+        },
     }
     target = BENCH_JSON_SMOKE if args.smoke else BENCH_JSON
     target.write_text(json.dumps(payload, indent=2) + "\n")

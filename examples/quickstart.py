@@ -142,4 +142,36 @@ print(f"  w{wb}a{ab} overpacked kernel bit-exact vs unpacked oracle: "
       f"{np.array_equal(np.asarray(got), np.asarray(want))} "
       f"(packed words: {pre.w_packed.shape[1]} vs {-(-w.shape[1] // 2)} no-overpack)")
 # density record across all pairs: python benchmarks/packing_efficiency.py
+
+# -- 8. chunked prefill + preemption -----------------------------------------
+print("== Chunked prefill + on-demand admission with preemption/requeue ==")
+# Long prompts used to stall the batch: one prompt token per step, and
+# worst-case page reservation at admit left the pool under-used.  With
+# chunk_tokens=C the engine feeds each prefilling slot up to C prompt
+# tokens per fused step (decode slots ride along with 1 valid lane), and
+# admit="on-demand" grows pages just in time — on pool exhaustion the
+# lowest-progress slot is preempted: pages freed, request requeued with
+# its generated prefix, replayed chunked, resuming token-identically.
+long_prompt = rng.integers(1, cfg.vocab, size=24).tolist()
+runs = {}
+for chunk in (1, 8):
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, page_size=4, max_len=32,
+                                           chunk_tokens=chunk))
+    req = eng.submit(long_prompt, max_new_tokens=4)
+    m = eng.run(realtime=False)
+    runs[chunk] = (m["steps"], req.out_tokens)
+print(f"  24-token prompt, 4 generated: {runs[1][0]} steps unchunked vs "
+      f"{runs[8][0]} chunked (C=8); same tokens: {runs[1][1] == runs[8][1]}")
+# force preemption: pool of 5 usable pages for 3 requests
+eng = Engine(cfg, params, EngineConfig(n_slots=3, page_size=4, max_len=32,
+                                       n_pages=6, chunk_tokens=4,
+                                       admit="on-demand"))
+reqs = [eng.submit(rng.integers(1, cfg.vocab, size=n).tolist(), 6)
+        for n in (9, 6, 11)]
+m = eng.run(realtime=False)
+print(f"  undersized pool: {m['preemptions']} preemptions, all "
+      f"{m['n_requests']} requests completed, 0 leaked pages: "
+      f"{eng.allocator.n_free == eng.allocator.n_usable}")
+# from the shell (and in benchmarks/serving_bench.py's long-prompt sweep):
+#   PYTHONPATH=src python -m repro.launch.serve --chunk-tokens 8 --admit on-demand
 print("quickstart complete.")

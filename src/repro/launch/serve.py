@@ -5,8 +5,12 @@ fixed-batch decode loop (``--engine static``).
 (synthesized here from ``--batch``/``--prompt-len``/``--tokens``) flow
 through an admission scheduler into a paged KV/SSM cache, and one jitted
 step advances every active slot per iteration, refilling slots as
-sequences finish.  ``--engine static`` keeps the original monolithic
-``[L, B, T, ...]``-cache loop as the A/B baseline.
+sequences finish.  ``--chunk-tokens N`` prefills prompts N tokens per
+step (chunked prefill) instead of one, and ``--admit on-demand`` swaps
+worst-case page reservation for just-in-time page growth with
+lowest-progress preemption/requeue on pool exhaustion.  ``--engine
+static`` keeps the original monolithic ``[L, B, T, ...]``-cache loop as
+the A/B baseline.
 
 Weight options apply to both engines: ``--int8`` stores projection
 weights as int8 levels+scales; ``--packed`` quantizes AND segment-packs
@@ -133,6 +137,8 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
             page_size=args.page_size,
             max_len=args.max_len,
             n_pages=args.pages,
+            chunk_tokens=args.chunk_tokens,
+            admit=args.admit,
             packed_head=args.packed_head,
             head_bits=(args.wbits, args.abits) if args.packed else (8, 8),
         ),
@@ -169,6 +175,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--page-size", type=int, default=16, help="KV page size (tokens)")
     ap.add_argument("--pages", type=int, default=0,
                     help="KV page-pool budget (0 = full residency)")
+    ap.add_argument("--chunk-tokens", type=int, default=1,
+                    help="continuous engine: prefill chunk budget per slot per "
+                    "step (1 = legacy one-token-per-step prefill)")
+    ap.add_argument("--admit", choices=("reserve", "on-demand"), default="reserve",
+                    help="continuous engine: worst-case page reservation at "
+                    "admit, or on-demand growth with lowest-progress preemption")
     ap.add_argument("--int8", action="store_true", help="mixed-precision int8 weights")
     ap.add_argument(
         "--plan", metavar="JSON",
@@ -216,6 +228,11 @@ def main(argv=None) -> dict:
     engine = args.engine
     if engine is None:
         engine = "continuous" if cfg.family in ("attn", "ssm") else "static"
+    if engine != "continuous" and (args.chunk_tokens != 1 or args.admit != "reserve"):
+        raise SystemExit(
+            "--chunk-tokens/--admit drive the continuous engine; they have no "
+            "effect on --engine static — drop them or switch engines"
+        )
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     head = None
     if plan is not None:

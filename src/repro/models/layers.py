@@ -354,29 +354,40 @@ def attention_decode(
 def attention_decode_paged(
     params: dict,
     s: AttnSpec,
-    x: jax.Array,  # [S, 1, d] one new token per serving slot
+    x: jax.Array,  # [S, C, d] a chunk of C tokens per serving slot (C=1: decode)
     pool_k: jax.Array,  # [P, page_size, G*hd] physical page pool (this layer)
     pool_v: jax.Array,
     block_table: jax.Array,  # [S, n_blocks] int32 physical page ids (0 = null)
-    pos: jax.Array,  # [S] int32 per-slot position of the incoming token
+    pos: jax.Array,  # [S] int32 per-slot position of the chunk's first token
     *,
     window: jax.Array | int = 0,
     quant: QuantConfig = NO_QUANT,
     pool_k_scale: jax.Array | None = None,  # [P, page_size, 1] when pool is int8
     pool_v_scale: jax.Array | None = None,
+    lens: jax.Array | None = None,  # [S] int32 valid tokens in each chunk
 ):
-    """One decode step against a paged KV pool (continuous batching).
+    """One decode/prefill step against a paged KV pool (continuous batching).
 
     Each serving slot owns an ordered list of physical pages
-    (``block_table`` row); the new K/V row is scattered into page
-    ``pos // page_size`` at offset ``pos % page_size``, and attention runs
-    over the gathered ``pool[block_table]`` view with the same causal /
-    sliding-window mask as :func:`attention_decode` — bit-exact with the
-    monolithic cache because masked lanes underflow to exactly zero
-    probability either way.  Inactive slots carry an all-null block table,
-    so their (garbage) writes land on reserved page 0 and never touch a
-    live sequence.  Unlike the monolithic path, ``pos`` is a vector: slots
-    admitted at different times decode at different depths in one step.
+    (``block_table`` row); the chunk's K/V rows are scattered into pages
+    ``(pos+j) // page_size`` at offsets ``(pos+j) % page_size``, and
+    attention runs over the gathered ``pool[block_table]`` view with the
+    same causal / sliding-window mask as :func:`attention_decode` —
+    bit-exact with the monolithic cache because masked lanes underflow to
+    exactly zero probability either way.  Inactive slots carry an
+    all-null block table, so their (garbage) writes land on reserved
+    page 0 and never touch a live sequence.  Unlike the monolithic path,
+    ``pos`` is a vector: slots admitted at different times decode at
+    different depths in one step.
+
+    Chunked prefill rides the same step: with ``x`` carrying ``C > 1``
+    token lanes per slot and ``lens[i]`` of them valid, all valid K/V
+    rows scatter at once and each query lane ``j`` attends causally up to
+    its own position ``pos+j`` (chunk-internal keys included — they were
+    just written).  Invalid lanes are routed to null page 0 on scatter,
+    so a slot mid-decode (``lens == 1``) coexists with slots prefilling
+    full chunks in one jitted iteration.  ``lens=None`` means every lane
+    is valid (the legacy single-token call sites).
 
     An int8 pool (``pool_k.dtype == int8``) stores each K/V row as int8
     levels with one float scale per page row (pages carry a parallel
@@ -384,7 +395,7 @@ def attention_decode_paged(
     dequantized on gather, halving paged-KV HBM.  Returns two extra pool
     arrays (the updated scales) in that mode.
     """
-    S, _, d = x.shape
+    S, C, d = x.shape
     H, G, hd = s.n_heads, s.kv_heads, s.head_dim
     page_size = pool_k.shape[1]
     n_blocks = block_table.shape[1]
@@ -394,45 +405,55 @@ def attention_decode_paged(
     q = _split_heads(dense(params["wq"], h, name="attn_q", quant=quant), H, hd)
     k = _split_heads(dense(params["wk"], h, name="attn_k", quant=quant), G, hd)
     v = _split_heads(dense(params["wv"], h, name="attn_v", quant=quant), G, hd)
-    posb = pos[:, None]  # [S, 1]
+    posc = pos[:, None] + jnp.arange(C, dtype=jnp.int32)[None]  # [S, C]
     if s.use_mrope:
-        pos3 = jnp.broadcast_to(posb[..., None], (S, 1, 3))
+        pos3 = jnp.broadcast_to(posc[..., None], (S, C, 3))
         q = mrope(q, pos3, theta=s.rope_theta)
         k = mrope(k, pos3, theta=s.rope_theta)
     else:
-        q = rope(q, posb, theta=s.rope_theta)
-        k = rope(k, posb, theta=s.rope_theta)
-    k_row = k.reshape(S, G * hd)
-    v_row = v.reshape(S, G * hd)
-    page = jnp.take_along_axis(block_table, posb // page_size, axis=1)[:, 0]
-    off = pos % page_size
+        q = rope(q, posc, theta=s.rope_theta)
+        k = rope(k, posc, theta=s.rope_theta)
+    k_rows = k.reshape(S, C, G * hd)
+    v_rows = v.reshape(S, C, G * hd)
+    if lens is None:
+        page = jnp.take_along_axis(block_table, posc // page_size, axis=1)  # [S, C]
+        off = posc % page_size
+    else:
+        # invalid lanes (j >= lens) scatter onto null page 0; clamp their
+        # positions so the block-table lookup itself stays in range
+        lane_ok = jnp.arange(C, dtype=jnp.int32)[None] < lens[:, None]  # [S, C]
+        idx = jnp.minimum(posc, T - 1)
+        page = jnp.where(
+            lane_ok, jnp.take_along_axis(block_table, idx // page_size, axis=1), 0
+        )
+        off = idx % page_size
     if kv_int8:
-        k_lvl, k_sc = quantize_kv_row(k_row[:, None, :])
-        v_lvl, v_sc = quantize_kv_row(v_row[:, None, :])
-        pool_k = pool_k.at[page, off].set(k_lvl[:, 0])
-        pool_v = pool_v.at[page, off].set(v_lvl[:, 0])
-        pool_k_scale = pool_k_scale.at[page, off].set(k_sc[:, 0])
-        pool_v_scale = pool_v_scale.at[page, off].set(v_sc[:, 0])
+        k_lvl, k_sc = quantize_kv_row(k_rows)
+        v_lvl, v_sc = quantize_kv_row(v_rows)
+        pool_k = pool_k.at[page, off].set(k_lvl)
+        pool_v = pool_v.at[page, off].set(v_lvl)
+        pool_k_scale = pool_k_scale.at[page, off].set(k_sc)
+        pool_v_scale = pool_v_scale.at[page, off].set(v_sc)
         k_deq = pool_k[block_table].astype(x.dtype) * pool_k_scale[block_table].astype(x.dtype)
         v_deq = pool_v[block_table].astype(x.dtype) * pool_v_scale[block_table].astype(x.dtype)
         k_view = k_deq.reshape(S, T, G, hd)
         v_view = v_deq.reshape(S, T, G, hd)
     else:
-        pool_k = pool_k.at[page, off].set(k_row.astype(pool_k.dtype))
-        pool_v = pool_v.at[page, off].set(v_row.astype(pool_v.dtype))
+        pool_k = pool_k.at[page, off].set(k_rows.astype(pool_k.dtype))
+        pool_v = pool_v.at[page, off].set(v_rows.astype(pool_v.dtype))
         k_view = pool_k[block_table].reshape(S, T, G, hd)
         v_view = pool_v[block_table].reshape(S, T, G, hd)
     scale = 1.0 / jnp.sqrt(hd).astype(x.dtype)
-    scores = _gqa_scores(q, k_view.astype(x.dtype), scale=scale)  # [S,G,H/G,1,T]
+    scores = _gqa_scores(q, k_view.astype(x.dtype), scale=scale)  # [S,G,H/G,C,T]
     kpos = jnp.arange(T, dtype=jnp.int32)
     win = jnp.asarray(window, jnp.int32)
-    valid = kpos[None, :] <= posb
-    in_win = jnp.where(win > 0, (posb - kpos[None, :]) < win, True)
-    mask = (valid & in_win)[:, None, None, None, :]
+    valid = kpos[None, None, :] <= posc[:, :, None]  # [S, C, T] causal per lane
+    in_win = jnp.where(win > 0, (posc[:, :, None] - kpos[None, None, :]) < win, True)
+    mask = (valid & in_win)[:, None, None, :, :]
     scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     o = jnp.einsum("bghqk,bkgd->bqghd", p, v_view.astype(x.dtype))
-    out = dense(params["wo"], o.reshape(S, 1, H * hd), name="attn_o", quant=quant)
+    out = dense(params["wo"], o.reshape(S, C, H * hd), name="attn_o", quant=quant)
     if kv_int8:
         return x + out, pool_k, pool_v, pool_k_scale, pool_v_scale
     return x + out, pool_k, pool_v

@@ -192,3 +192,37 @@ def mamba_decode(
     y = rmsnorm(params["out_norm"], y)
     out = dense(params["out_proj"], y, name="ssm_out", quant=quant)
     return x + out, new_state, new_conv_state
+
+
+def mamba_decode_chunk(
+    params: dict,
+    s: MambaSpec,
+    x: jax.Array,  # [B, C, d_model] a chunk of C token lanes per sequence
+    ssm_state: jax.Array,  # [B, H, N, P] float32
+    conv_state: jax.Array,  # [B, conv_width-1, conv_dim]
+    *,
+    lens: jax.Array | None = None,  # [B] int32 valid lanes (None: all C)
+    quant: QuantConfig = NO_QUANT,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Recurrent step over a C-token chunk (chunked-prefill serving).
+
+    Scans :func:`mamba_decode` over the lane axis so each lane sees the
+    conv/SSM state left by the previous one — token-exact with C separate
+    single-token steps.  Lanes ``j >= lens[b]`` leave sequence ``b``'s
+    recurrent state untouched, so decode slots (one valid lane) ride in
+    the same jitted iteration as slots prefilling full chunks.
+    """
+    B, C, _ = x.shape
+
+    def body(carry, j):
+        st, cv = carry
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=1)
+        h, ns, nc = mamba_decode(params, s, xj, st, cv, quant=quant)
+        if lens is not None:
+            ok = j < lens  # [B]
+            ns = jnp.where(ok[:, None, None, None], ns, st)
+            nc = jnp.where(ok[:, None, None], nc, cv)
+        return (ns, nc), h[:, 0]
+
+    (ns, nc), hs = jax.lax.scan(body, (ssm_state, conv_state), jnp.arange(C))
+    return jnp.moveaxis(hs, 0, 1), ns, nc

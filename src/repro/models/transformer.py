@@ -661,16 +661,25 @@ def forward_decode_paged(
     cfg: ModelConfig,
     state: dict,
     block_table: jax.Array,  # [S, n_blocks] int32 (attn families; ignored for ssm)
-    tokens: jax.Array,  # [S, 1] int32, one token per serving slot
-    pos: jax.Array,  # [S] int32 per-slot positions
+    tokens: jax.Array,  # [S, C] int32, a chunk of C tokens per serving slot
+    pos: jax.Array,  # [S] int32 per-slot position of each chunk's first token
     head: Any = None,
+    lens: jax.Array | None = None,  # [S] int32 valid tokens per chunk (None: all)
 ) -> tuple[jax.Array, dict]:
-    """One continuous-batching decode step over the slot set.
+    """One continuous-batching decode/prefill step over the slot set.
 
     Same math as :func:`forward_decode` (bit-exact for identical
     sequences), but the KV cache is gathered through per-slot block
     tables and every slot carries its own position, so sequences admitted
     at different times coexist in one jitted step.
+
+    Chunked prefill: ``tokens`` may carry ``C > 1`` lanes per slot with
+    ``lens[i]`` of them valid — prefilling slots push a whole prompt
+    chunk through in one step while decoding slots ride along with
+    ``lens == 1`` (their spare lanes are masked).  The returned logits
+    are those of each slot's **last valid** lane, which is the only one
+    ever sampled.  With ``C == 1`` and ``lens=None`` this is exactly the
+    legacy one-token-per-step path.
 
     ``params["layers"]`` is either the stacked pytree (homogeneous
     layers, scanned — the fast path) or a *list* of per-layer pytrees.
@@ -679,7 +688,7 @@ def forward_decode_paged(
     static metadata differs per layer, so they cannot ride one scan and
     are unrolled instead — same math, layer by layer.
     """
-    x = params["embed"].astype(cfg.dtype)[tokens]  # [S, 1, d]
+    x = params["embed"].astype(cfg.dtype)[tokens]  # [S, C, d]
     x = shard(x, "batch", None, None)
     per_layer = isinstance(params["layers"], (list, tuple))
     if cfg.family == "attn":
@@ -692,12 +701,12 @@ def forward_decode_paged(
                 h, npk, npv, npks, npvs = L.attention_decode_paged(
                     p["attn"], aspec, h, pk, pv, block_table, pos,
                     window=win, quant=cfg.quant,
-                    pool_k_scale=pks, pool_v_scale=pvs,
+                    pool_k_scale=pks, pool_v_scale=pvs, lens=lens,
                 )
             else:
                 h, npk, npv = L.attention_decode_paged(
                     p["attn"], aspec, h, pk, pv, block_table, pos,
-                    window=win, quant=cfg.quant,
+                    window=win, quant=cfg.quant, lens=lens,
                 )
                 npks = npvs = None
             if cfg.is_moe:
@@ -747,12 +756,19 @@ def forward_decode_paged(
             )
             new_state = dict(state, k=nk, v=nv)
     elif cfg.family == "ssm":
+        chunked = tokens.shape[1] > 1 or lens is not None
+        sspec = cfg.ssm_spec()
+
+        def ssm_step(h, p, st, cv):
+            if chunked:
+                # recurrent over the lane axis; invalid lanes leave state alone
+                return M.mamba_decode_chunk(p, sspec, h, st, cv, lens=lens, quant=cfg.quant)
+            return M.mamba_decode(p, sspec, h, st, cv, quant=cfg.quant)
+
         if per_layer:
             ns_l, nc_l = [], []
             for i, p in enumerate(params["layers"]):
-                x, ns_i, nc_i = M.mamba_decode(
-                    p, cfg.ssm_spec(), x, state["ssm"][i], state["conv"][i], quant=cfg.quant
-                )
+                x, ns_i, nc_i = ssm_step(x, p, state["ssm"][i], state["conv"][i])
                 ns_l.append(ns_i)
                 nc_l.append(nc_i)
             new_state = dict(state, ssm=jnp.stack(ns_l), conv=jnp.stack(nc_l))
@@ -760,7 +776,7 @@ def forward_decode_paged(
 
             def body(carry, xs):
                 p, st, cv = xs
-                h, ns, nc = M.mamba_decode(p, cfg.ssm_spec(), carry, st, cv, quant=cfg.quant)
+                h, ns, nc = ssm_step(carry, p, st, cv)
                 return h, (ns, nc)
 
             x, (ns, nc) = jax.lax.scan(body, x, (params["layers"], state["ssm"], state["conv"]))
@@ -771,7 +787,16 @@ def forward_decode_paged(
         )
 
     x = L.rmsnorm(params["final_ln"], x)
-    logits = L.lm_head(x[:, 0, :], params["embed"], cfg.dtype, packed=head)
+    if lens is not None:
+        # only each slot's last valid lane is ever sampled; gather it before
+        # the (wide) LM-head matmul so the logits buffer stays [S, V]
+        last = jnp.maximum(lens - 1, 0)[:, None, None]
+        x_last = jnp.take_along_axis(x, last, axis=1)[:, 0]
+    else:
+        # lens=None: every lane valid, so the newest token is the last lane
+        # (identical to lane 0 on the legacy C == 1 call sites)
+        x_last = x[:, -1, :]
+    logits = L.lm_head(x_last, params["embed"], cfg.dtype, packed=head)
     return logits, new_state
 
 

@@ -2,9 +2,10 @@
 
 The packed kernels (PR 1) made each decode matmul fast; this package
 keeps them *fed*: a paged KV/SSM cache (:mod:`repro.serving.paged_kv`),
-an admission/eviction scheduler with a waiting queue and slot recycling
-(:mod:`repro.serving.scheduler`), and the request-level engine that jits
-one fused decode step over the whole slot set
+an admission/preemption scheduler with a waiting queue, slot recycling,
+and on-demand page growth (:mod:`repro.serving.scheduler`), and the
+request-level engine that jits one fused step — chunked prefill lanes
+and single-token decode lanes together — over the whole slot set
 (:mod:`repro.serving.engine`).
 """
 from repro.serving.engine import Engine, EngineConfig, Request

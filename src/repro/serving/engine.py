@@ -1,14 +1,23 @@
 """Continuous-batching decode engine over the paged KV/SSM cache.
 
-One jitted step advances *every* active slot by one token — prompt
-tokens for requests still in prefill, freshly sampled tokens for those
-in decode — so the batch stays full as long as the waiting queue has
-work (iteration-level scheduling).  The step gathers KV pages through
-the block table, writes the new row into each slot's current page, and
-finishes with the LM head (optionally prepacked sub-8-bit, so the last
-matmul of every step also runs through the Pallas Kernel-Packing
-kernel).  Host-side bookkeeping (argmax sampling, phase transitions,
-admission, eviction) runs between steps on plain numpy.
+One jitted step advances *every* active slot per iteration — a chunk of
+up to ``chunk_tokens`` prompt (or replayed) tokens for requests still
+prefilling, one freshly sampled token for those decoding — so the batch
+stays full as long as the waiting queue has work (iteration-level
+scheduling).  Prefill and decode coexist in the same fused step: tokens
+ship as a dense ``[S, C]`` block with a per-slot valid-length vector,
+the step scatters each slot's valid K/V rows through its block table,
+and finishes with the LM head on each slot's last valid lane (optionally
+prepacked sub-8-bit, so the last matmul of every step also runs through
+the Pallas Kernel-Packing kernel).  Host-side bookkeeping (argmax
+sampling, phase transitions, admission, page funding, preemption,
+eviction) runs between steps on plain numpy.
+
+With ``admit="on-demand"`` pages are granted just-in-time before each
+step instead of worst-case-reserved at admission; on pool exhaustion the
+lowest-progress slot is preempted (pages freed, request requeued with
+its generated prefix) and replayed chunked later — token-identical under
+greedy sampling because paged attention recomputes bit-exact rows.
 
 Per-request latency/throughput is recorded against either the wall
 clock (serving benchmarks) or a deterministic virtual step clock
@@ -39,6 +48,11 @@ class EngineConfig:
     # page-pool budget; 0 => full residency (every slot can hold max_len)
     n_pages: int = 0
     policy: str = "continuous"  # or "static" (gang admission baseline)
+    # prefill chunk budget per slot per step; 1 = legacy one-token prefill
+    chunk_tokens: int = 1
+    # page admission: "reserve" (worst case at admit) or "on-demand"
+    # (grow per step, preempt lowest-progress slot on pool exhaustion)
+    admit: str = "reserve"
     packed_head: bool = False
     head_bits: tuple[int, int] = (8, 8)
 
@@ -69,6 +83,8 @@ class Engine:
             raise NotImplementedError(
                 f"continuous batching supports attn/ssm families, not {cfg.family!r}"
             )
+        if ecfg.chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -79,16 +95,30 @@ class Engine:
         self.block_table = BlockTable(ecfg.n_slots, ecfg.blocks_per_slot)
         self.scheduler = Scheduler(
             ecfg.n_slots, self.allocator, self.block_table, ecfg.page_size,
-            policy=ecfg.policy,
+            policy=ecfg.policy, admit=ecfg.admit,
         )
         if head is None and ecfg.packed_head:
             head = prepack_lm_head(
                 params["embed"], w_bits=ecfg.head_bits[0], a_bits=ecfg.head_bits[1]
             )
 
-        def step_fn(p, state, table, tokens, pos):
-            with use_rules(self.rules):
-                return T.forward_decode_paged(p, cfg, state, table, tokens, pos, head=head)
+        # C == 1 keeps the legacy single-token step signature (and XLA
+        # graph) byte-identical; C > 1 threads the valid-length vector
+        # through the fused step so prefill chunks and decode lanes share
+        # one compilation
+        if ecfg.chunk_tokens > 1:
+
+            def step_fn(p, state, table, tokens, pos, lens):
+                with use_rules(self.rules):
+                    return T.forward_decode_paged(
+                        p, cfg, state, table, tokens, pos, head=head, lens=lens
+                    )
+
+        else:
+
+            def step_fn(p, state, table, tokens, pos):
+                with use_rules(self.rules):
+                    return T.forward_decode_paged(p, cfg, state, table, tokens, pos, head=head)
 
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._reset = jax.jit(
@@ -98,6 +128,7 @@ class Engine:
         self._next_rid = 0
         self.n_steps = 0
         self.slot_token_steps = 0  # active slots summed over steps (occupancy)
+        self.fed_tokens = 0  # valid token lanes summed over steps
         self.finished: list[Request] = []
 
     # -- request intake ----------------------------------------------------
@@ -124,47 +155,82 @@ class Engine:
     def warmup(self) -> None:
         """Compile the fused step before timing (all-slots-inactive shapes
         are identical to live ones; the garbage rows land on null page 0)."""
-        S = self.ecfg.n_slots
-        logits, self.state = self._step(
+        S, C = self.ecfg.n_slots, self.ecfg.chunk_tokens
+        args = [
             self.params,
             self.state,
             jnp.asarray(self.block_table.as_array()),
-            jnp.zeros((S, 1), jnp.int32),
+            jnp.zeros((S, C), jnp.int32),
             jnp.zeros((S,), jnp.int32),
-        )
+        ]
+        if C > 1:
+            args.append(jnp.zeros((S,), jnp.int32))
+        logits, self.state = self._step(*args)
         jax.block_until_ready(logits)
 
     def _admit(self, now: float) -> None:
         while self._pending and self._pending[0].arrival <= now:
             self.scheduler.submit(self._pending.pop(0))
         for req in self.scheduler.admit(now):
+            # zero recurrent state on every (re-)admission: a replayed SSM
+            # request rebuilds its state from position 0
             if self.cfg.family == "ssm":
                 self.state = self._reset(self.state, jnp.asarray(req.slot, jnp.int32))
 
+    def _fund_pages(self) -> None:
+        """On-demand mode: before the step, grow every active slot's page
+        list to cover its chunk.  Slots are funded in descending-progress
+        order; on pool exhaustion the lowest-progress slot is preempted
+        (freeing its pages for the rest) — possibly the requester itself,
+        in which case it leaves the batch and replays later.  The
+        highest-progress slot can always be funded (its total demand is
+        bounded by the submit-time worst-case feasibility check), so every
+        step advances at least one request — no livelock."""
+        sched, C = self.scheduler, self.ecfg.chunk_tokens
+        for req in sorted(sched.active.values(), key=lambda r: (-r.n_fed, r.rid)):
+            if req.slot == -1:
+                continue  # already preempted as someone else's victim
+            last_pos = req.n_fed + req.n_feed(C) - 1
+            while not sched.ensure_pages(req, last_pos):
+                victim = sched.pick_victim()
+                sched.preempt(victim)
+                if victim is req:
+                    break
+
     def _step_once(self, now_fn: Callable[[], float]) -> None:
         sched = self.scheduler
-        S = self.ecfg.n_slots
-        tokens = np.zeros((S, 1), np.int32)
+        S, C = self.ecfg.n_slots, self.ecfg.chunk_tokens
+        if self.ecfg.admit == "on-demand":
+            self._fund_pages()
+            if not sched.active:
+                return  # everything preempted; admission retries next loop
+        tokens = np.zeros((S, C), np.int32)
         pos = np.zeros((S,), np.int32)
+        lens = np.zeros((S,), np.int32)
         for slot, req in sched.active.items():
-            tokens[slot, 0] = req.next_token()
-            pos[slot] = req.position()
-        logits, self.state = self._step(
+            chunk, start = req.next_chunk(C)
+            tokens[slot, : len(chunk)] = chunk
+            pos[slot] = start
+            lens[slot] = len(chunk)
+        args = [
             self.params,
             self.state,
             jnp.asarray(self.block_table.as_array()),
             jnp.asarray(tokens),
             jnp.asarray(pos),
-        )
+        ]
+        if C > 1:
+            args.append(jnp.asarray(lens))
+        logits, self.state = self._step(*args)
         self.n_steps += 1
         self.slot_token_steps += len(sched.active)
+        self.fed_tokens += int(lens.sum())
         logits_np = np.asarray(logits)  # device sync; [S, V]
         t = now_fn()
         for slot, req in list(sched.active.items()):
-            if req.in_prefill:
-                req.n_fed += 1
-                if req.in_prefill:
-                    continue  # mid-prompt: this step's logits are not sampled
+            req.n_fed += int(lens[slot])
+            if req.n_fed < len(req.seq):
+                continue  # mid-prompt / mid-replay: logits not sampled
             nxt = int(np.argmax(logits_np[slot]))
             if not req.out_tokens:
                 req.t_first_token = t
@@ -217,15 +283,20 @@ class Engine:
         gen = sum(len(r.out_tokens) for r in done)
         return {
             "engine": self.ecfg.policy,
+            "admit": self.ecfg.admit,
+            "chunk_tokens": self.ecfg.chunk_tokens,
             "n_requests": len(done),
             "generated_tokens": gen,
             "prompt_tokens": sum(len(r.prompt) for r in done),
+            "fed_tokens": self.fed_tokens,
+            "preemptions": self.scheduler.n_preemptions,
             "steps": self.n_steps,
             "wall": wall,
             "tokens_per_s": gen / wall if wall > 0 else float("nan"),
             "latency_p50": float(np.percentile(lat, 50)) if lat else float("nan"),
             "latency_p99": float(np.percentile(lat, 99)) if lat else float("nan"),
             "ttft_p50": float(np.percentile(ttft, 50)) if ttft else float("nan"),
+            "ttft_p99": float(np.percentile(ttft, 99)) if ttft else float("nan"),
             "slot_occupancy": (
                 self.slot_token_steps / (self.n_steps * self.ecfg.n_slots)
                 if self.n_steps

@@ -73,6 +73,20 @@ class BlockTable:
         self._table[slot] = 0
         self._table[slot, : len(pages)] = pages
 
+    def append(self, slot: int, pages: list[int]) -> None:
+        """Extend a slot's page list in place (on-demand page growth).
+
+        Rows are dense prefixes of real (>= 1) page ids, so the used
+        count is just the nonzero count.
+        """
+        n_used = int(np.count_nonzero(self._table[slot]))
+        if n_used + len(pages) > self.n_blocks:
+            raise ValueError(
+                f"appending {len(pages)} pages to {n_used} used exceeds the "
+                f"{self.n_blocks}-block slot capacity"
+            )
+        self._table[slot, n_used : n_used + len(pages)] = pages
+
     def clear(self, slot: int) -> None:
         self._table[slot] = 0
 

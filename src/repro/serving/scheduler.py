@@ -1,18 +1,32 @@
-"""Request admission / eviction under a page-pool budget.
+"""Request admission / preemption / eviction under a page-pool budget.
 
 Iteration-level (Orca-style) scheduling: every engine step, each active
-slot advances by exactly one token — prompt tokens while the request is
-in its *prefill* phase, sampled tokens in its *decode* phase — and the
-scheduler tops the batch back up whenever a slot frees.  Admission is
-reservation-based: a request is admitted only when both a slot and its
-**worst-case** page count (prompt + max_new_tokens, rounded up to whole
-pages) are available, so an admitted request can never hit pool
-exhaustion mid-flight; requests that don't fit wait in a FIFO queue.
+slot advances by a *chunk* of tokens — up to ``chunk_tokens`` prompt (or
+replayed) tokens while the request is prefilling, exactly one sampled
+token once it is decoding — and the scheduler tops the batch back up
+whenever a slot frees.  Two admission modes:
+
+* ``admit="reserve"`` (the PR-2 behaviour): a request is admitted only
+  when both a slot and its **worst-case** page count (prompt +
+  max_new_tokens, rounded up to whole pages) are available, so an
+  admitted request can never hit pool exhaustion mid-flight; requests
+  that don't fit wait in a FIFO queue.  Safe but pessimistic — the pool
+  sits under-reserved because most requests finish early.
+
+* ``admit="on-demand"``: requests are admitted with **no** reservation
+  and grow their page list as their position advances
+  (:meth:`Scheduler.ensure_pages`).  When the pool runs dry mid-step the
+  engine preempts the lowest-progress slot (:meth:`Scheduler.preempt`):
+  its pages are freed, its slot recycled, and the request requeued at
+  the *head* of the waiting queue with its generated prefix preserved —
+  on re-admission it re-prefills ``prompt + out_tokens`` in chunks and
+  resumes sampling token-identically (greedy decode over a bit-exact
+  paged attention recompute).
 
 ``policy="static"`` turns the same machinery into the fixed-batch
 baseline: admission happens only when *every* slot is free (gang
 admission), so the batch drains fully before any waiting request starts
-— the A/B for ``benchmarks/serving_bench.py``.
+— the A/B for ``benchmarks/serving_bench.py``.  Static implies reserve.
 """
 from __future__ import annotations
 
@@ -25,7 +39,15 @@ from repro.serving.paged_kv import BlockTable, PageAllocator
 
 @dataclasses.dataclass
 class Request:
-    """One generation request plus its in-flight serving state."""
+    """One generation request plus its in-flight serving state.
+
+    ``n_fed`` counts tokens pushed through the model this *residency*:
+    positions ``0 .. n_fed-1`` of :attr:`seq` are resident in the paged
+    cache.  Preemption resets it to 0 (the cache rows are gone) while
+    keeping ``out_tokens`` — the replay after re-admission feeds the
+    whole ``prompt + out_tokens`` prefix again and only starts sampling
+    once the chunk that contains the final prefix token completes.
+    """
 
     rid: int
     prompt: list[int]
@@ -34,31 +56,34 @@ class Request:
     # runtime state (engine-owned)
     slot: int = -1
     pages: list[int] = dataclasses.field(default_factory=list)
-    n_fed: int = 0  # prompt tokens already pushed through the model
+    n_fed: int = 0  # tokens of `seq` resident in the cache (this residency)
     out_tokens: list[int] = dataclasses.field(default_factory=list)
+    n_preempted: int = 0
     t_admit: float | None = None
     t_first_token: float | None = None
     t_finish: float | None = None
 
     @property
-    def in_prefill(self) -> bool:
-        return self.n_fed < len(self.prompt)
+    def seq(self) -> list[int]:
+        """Every token that must be resident before the next sample:
+        the prompt plus all tokens generated so far.  The engine samples
+        only when ``n_fed`` reaches ``len(seq)`` — the step that fed the
+        newest token; prefill, replay, and decode all fall out of that
+        one rule."""
+        return self.prompt + self.out_tokens
 
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
 
-    def next_token(self) -> int:
-        """Token to feed this step (prompt during prefill, else sampled)."""
-        if self.in_prefill:
-            return self.prompt[self.n_fed]
-        return self.out_tokens[-1]
+    def n_feed(self, budget: int) -> int:
+        """Tokens to feed this step under a per-slot chunk budget: the
+        rest of the unfed context, capped — exactly 1 once decoding."""
+        return min(budget, len(self.seq) - self.n_fed)
 
-    def position(self) -> int:
-        """Position of the token being fed this step."""
-        if self.in_prefill:
-            return self.n_fed
-        return len(self.prompt) + len(self.out_tokens) - 1
+    def next_chunk(self, budget: int) -> tuple[list[int], int]:
+        """(tokens to feed this step, position of the first one)."""
+        return self.seq[self.n_fed : self.n_fed + self.n_feed(budget)], self.n_fed
 
 
 class Scheduler:
@@ -72,21 +97,29 @@ class Scheduler:
         page_size: int,
         *,
         policy: str = "continuous",
+        admit: str = "reserve",
     ):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown scheduling policy {policy!r}")
+        if admit not in ("reserve", "on-demand"):
+            raise ValueError(f"unknown admission mode {admit!r}")
+        if policy == "static" and admit != "reserve":
+            raise ValueError("static gang admission requires admit='reserve'")
         self.n_slots = n_slots
         self.allocator = allocator
         self.block_table = block_table
         self.page_size = page_size
         self.policy = policy
+        self.admit_mode = admit
         self.waiting: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
+        self.n_preemptions = 0
 
     # -- queue -------------------------------------------------------------
 
     def pages_needed(self, req: Request) -> int:
+        """Worst-case page count: the whole prompt + generation budget."""
         total = len(req.prompt) + req.max_new_tokens
         return -(-total // self.page_size)
 
@@ -113,17 +146,26 @@ class Scheduler:
     def admit(self, now: float = 0.0) -> list[Request]:
         """Move waiting requests into free slots while pages allow.
 
-        FIFO without bypass: when the head request's reservation doesn't
-        fit the free pool, admission stops (smaller requests behind it
-        wait too) — simple and starvation-free.
+        FIFO without bypass: when the head request can't be placed
+        (reserve: its worst-case reservation doesn't fit the free pool;
+        on-demand: not even one page is free), admission stops — smaller
+        requests behind it wait too, simple and starvation-free.
         """
         if self.policy == "static" and self.active:
             return []
         admitted: list[Request] = []
         while self.waiting and self._free_slots:
-            pages = self.allocator.alloc(self.pages_needed(self.waiting[0]))
-            if pages is None:
-                break
+            if self.admit_mode == "reserve":
+                pages = self.allocator.alloc(self.pages_needed(self.waiting[0]))
+                if pages is None:
+                    break
+            else:
+                # on-demand: no reservation — pages are granted step by
+                # step (ensure_pages) and reclaimed by preemption; gate on
+                # one free page so an admit can at least write position 0
+                if self.allocator.n_free < 1:
+                    break
+                pages = []
             req = self.waiting.popleft()
             req.slot = self._free_slots.pop()
             req.pages = pages
@@ -132,6 +174,43 @@ class Scheduler:
             self.active[req.slot] = req
             admitted.append(req)
         return admitted
+
+    def ensure_pages(self, req: Request, upto_pos: int) -> bool:
+        """Grow ``req``'s page list to cover position ``upto_pos``
+        (on-demand admission).  All-or-nothing: returns False — and
+        allocates nothing — when the pool can't supply the missing pages,
+        so the engine can pick a preemption victim and retry."""
+        need = upto_pos // self.page_size + 1 - len(req.pages)
+        if need <= 0:
+            return True
+        got = self.allocator.alloc(need)
+        if got is None:
+            return False
+        req.pages.extend(got)
+        self.block_table.append(req.slot, got)
+        return True
+
+    def pick_victim(self) -> Request:
+        """Preemption policy: the lowest-progress active slot loses —
+        it has the least resident work to replay (ties: youngest rid)."""
+        return min(self.active.values(), key=lambda r: (r.n_fed, -r.rid))
+
+    def preempt(self, req: Request, now: float = 0.0) -> None:
+        """Evict a *running* request on pool exhaustion: free its pages,
+        recycle its slot, and requeue it at the head of the waiting queue
+        with the generated prefix intact.  ``n_fed`` resets to 0 — on
+        re-admission the request re-prefills ``prompt + out_tokens`` in
+        chunks and resumes sampling exactly where it left off."""
+        self.allocator.free(req.pages)
+        req.pages = []
+        self.block_table.clear(req.slot)
+        del self.active[req.slot]
+        self._free_slots.append(req.slot)
+        req.slot = -1
+        req.n_fed = 0
+        req.n_preempted += 1
+        self.n_preemptions += 1
+        self.waiting.appendleft(req)
 
     def finish(self, req: Request, now: float = 0.0) -> None:
         """Evict a completed request: free its pages and recycle the slot."""

@@ -1,0 +1,167 @@
+"""The CI bench-invariant gate must (a) pass the repo's real committed
+artifacts and (b) demonstrably fail when fed doctored regression
+fixtures — otherwise it is the same green-no-matter-what upload step it
+replaced."""
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+import check_invariants as ci  # noqa: E402
+
+
+def _serving_row(engine, rate, *, tps=100.0, gen=500, ttft99=0.5):
+    return {
+        "engine": engine, "rate_rps": rate, "tokens_per_s": tps,
+        "generated_tokens": gen, "ttft_p99": ttft99,
+    }
+
+
+def _lp_row(arm, rate, *, tps=100.0, gen=300, ttft99=0.5):
+    return {
+        "arm": arm, "rate_rps": rate, "tokens_per_s": tps,
+        "generated_tokens": gen, "ttft_p99": ttft99,
+    }
+
+
+@pytest.fixture
+def serving_fixture():
+    return {
+        "smoke": False,
+        "results": [
+            _serving_row("static", 8.0), _serving_row("continuous", 8.0),
+            _serving_row("static", 128.0, tps=500.0),
+            _serving_row("continuous", 128.0, tps=700.0),
+        ],
+        "long_prompt": {
+            "results": [
+                _lp_row("reserve", 128.0, ttft99=0.5),
+                _lp_row("chunked-on-demand", 128.0, tps=150.0, ttft99=0.2),
+            ],
+        },
+    }
+
+
+def test_serving_good_fixture_passes(serving_fixture):
+    assert ci.check_serving(serving_fixture) == []
+
+
+def test_serving_throughput_regression_fails(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    for r in d["results"]:
+        if r["engine"] == "continuous" and r["rate_rps"] == 128.0:
+            r["tokens_per_s"] = 300.0  # continuous collapses below static
+    errs = ci.check_serving(d)
+    assert any("tokens/s" in e for e in errs)
+
+
+def test_serving_token_divergence_fails(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    d["results"][1]["generated_tokens"] += 3  # policies no longer agree
+    errs = ci.check_serving(d)
+    assert any("generated_tokens diverge" in e for e in errs)
+
+
+def test_serving_missing_long_prompt_fails(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    del d["long_prompt"]
+    assert any("long_prompt" in e for e in ci.check_serving(d))
+
+
+def test_serving_replay_divergence_fails(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    d["long_prompt"]["results"][1]["generated_tokens"] -= 1
+    errs = ci.check_serving(d)
+    assert any("token-identically" in e for e in errs)
+
+
+def test_serving_ttft_inversion_fails_full_runs_only(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    d["long_prompt"]["results"][1]["ttft_p99"] = 0.9  # on-demand loses TTFT
+    errs = ci.check_serving(d)
+    assert any("p99 TTFT" in e for e in errs)
+    d["smoke"] = True  # smoke runs don't gate the noisy TTFT headline
+    assert ci.check_serving(d) == []
+
+
+def test_serving_tolerance_absorbs_noise(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    for r in d["results"]:
+        if r["engine"] == "continuous" and r["rate_rps"] == 128.0:
+            r["tokens_per_s"] = 450.0  # 0.9x static: within tolerance
+    assert ci.check_serving(d, tolerance=0.85) == []
+    assert ci.check_serving(d, tolerance=0.95) != []
+
+
+def test_plan_gate():
+    good = {"results": {"searched": {"n_distinct_bit_pairs": 3}}}
+    assert ci.check_plan(good) == []
+    bad = {"results": {"searched": {"n_distinct_bit_pairs": 2}}}
+    assert any("distinct bit pairs" in e for e in ci.check_plan(bad))
+    assert ci.check_plan({}) != []
+
+
+def test_packing_gate():
+    pair = {"w_bits": 2, "a_bits": 3, "density_gain": 1.5,
+            "kernel_bitexact_vs_reference": True}
+    assert ci.check_packing({"density_gain_pairs": [pair]}) == []
+    assert any("vanished" in e for e in ci.check_packing({"density_gain_pairs": []}))
+    broken = dict(pair, kernel_bitexact_vs_reference=False)
+    assert any("bit-exact" in e
+               for e in ci.check_packing({"density_gain_pairs": [broken]}))
+    shrunk = dict(pair, density_gain=1.0)
+    assert any("<= 1" in e
+               for e in ci.check_packing({"density_gain_pairs": [shrunk]}))
+
+
+def test_kernels_gate():
+    good = {
+        "prepack": [{"us_prepacked": 1.0, "us_repack_per_call": 2.0}],
+        "k_blocking": [{"us": 1.0}],
+        "kernels": [{"us_per_call": 1.0}],
+    }
+    assert ci.check_kernels(good) == []
+    assert any("missing" in e for e in ci.check_kernels({"k_blocking": [], **{
+        k: good[k] for k in ("prepack", "kernels")}}))
+    doctored = copy.deepcopy(good)
+    doctored["prepack"][0]["us_prepacked"] = 0.0
+    assert any("non-positive" in e for e in ci.check_kernels(doctored))
+
+
+def test_deploy_plan_gate():
+    mixed = {"layers": [{"w_bits": w, "a_bits": a}
+                        for w, a in ((5, 4), (8, 4), (2, 2))]}
+    assert ci.check_deploy_plan(mixed) == []
+    uniform = {"layers": [{"w_bits": 4, "a_bits": 4}] * 3}
+    assert any("distinct bit pair" in e for e in ci.check_deploy_plan(uniform))
+
+
+def test_kind_inference_and_cli(tmp_path, serving_fixture):
+    assert ci.infer_kind(pathlib.Path("BENCH_serving_smoke.json")) == "serving"
+    assert ci.infer_kind(pathlib.Path("BENCH_plan.json")) == "plan"
+    assert ci.infer_kind(pathlib.Path("BENCH_kernels_smoke.json")) == "kernels"
+    assert ci.infer_kind(pathlib.Path("artifacts/packing_efficiency.json")) == "packing"
+    assert ci.infer_kind(pathlib.Path("artifacts/plans/ci-plan.json")) == "deploy-plan"
+    good = tmp_path / "BENCH_serving.json"
+    good.write_text(json.dumps(serving_fixture))
+    assert ci.main([str(good)]) == 0
+    doctored = copy.deepcopy(serving_fixture)
+    doctored["results"][3]["tokens_per_s"] = 1.0
+    bad = tmp_path / "BENCH_serving_doctored.json"
+    bad.write_text(json.dumps(doctored))
+    assert ci.main([str(bad)]) == 1
+    assert ci.main(["/nonexistent/BENCH_serving.json"]) == 1
+
+
+def test_real_committed_artifacts_pass():
+    """The trajectory files committed at the repo root must satisfy the
+    very gate CI applies to their smoke twins."""
+    for name in ("BENCH_serving.json", "artifacts/packing_efficiency.json"):
+        path = ROOT / name
+        assert path.exists(), name
+        assert ci.run(str(path)) == [], name
