@@ -13,6 +13,18 @@ survive CI-box timing noise:
   long-prompt admit sweep is present with both arms, token counts agree
   across arms, and — for full (committed) runs — chunked on-demand
   admission beats reserve-at-admit on p99 TTFT at the backlogged rate;
+* chaos/lifecycle — the chaos sweep covers BOTH an attn and an ssm
+  family at fault rate >= 0.2 with every fault family actually injected
+  (step, alloc, nan), zero token divergence of ``ok`` requests vs the
+  fault-free reference, zero leaked pages/slots, every request carrying
+  exactly one terminal status, and no request ending ``failed``; the
+  deadline sweep must shed under overload while every ``ok`` request
+  met its deadline.  Full serving artifacts must CONTAIN both sweeps;
+  smoke artifacts may skip them only by declaring so in ``skipped``;
+  ``chaos_only`` artifacts (``--smoke --chaos``) are gated on exactly
+  these sections.  Additionally every artifact of every kind is
+  rejected if it smuggles non-finite JSON constants (``NaN``,
+  ``Infinity``) — metrics must emit null;
 * plan bench — at least one served plan carries >= 3 distinct bit pairs
   (the mixed-precision path stays genuinely mixed);
 * packing efficiency — the overpack density-gain pairs are still
@@ -43,11 +55,124 @@ def _by(rows: list[dict], key: str) -> dict:
     return {r[key]: r for r in rows}
 
 
-def check_serving(d: dict, *, tolerance: float = 0.85) -> list[str]:
+# mirror of repro.serving.lifecycle.TERMINAL_STATUSES — duplicated on
+# purpose so this gate stays importable without PYTHONPATH=src
+TERMINAL = {"ok", "cancelled", "shed", "failed"}
+
+
+def _check_statuses(tag: str, block: dict, n_requests: int) -> list[str]:
+    """Every request must carry exactly one known terminal status."""
+    errs = []
+    statuses = block.get("statuses")
+    if not isinstance(statuses, dict) or not statuses:
+        return [f"{tag}: terminal statuses missing"]
+    bad = set(statuses) - TERMINAL
+    if bad:
+        errs.append(f"{tag}: unknown terminal status(es) {sorted(bad)}")
+    total = sum(statuses.values())
+    if total != n_requests:
+        errs.append(
+            f"{tag}: {total} terminal statuses for {n_requests} requests — "
+            "every request must end in exactly one of "
+            f"{sorted(TERMINAL)}"
+        )
+    return errs
+
+
+def check_chaos(d: dict) -> list[str]:
+    """Chaos sweep: faults actually injected, recovery token-identical,
+    nothing leaked, nobody abandoned."""
     errs: list[str] = []
+    chaos = d.get("chaos") or {}
+    rows = chaos.get("results") or []
+    if not rows:
+        return ["chaos: sweep missing/empty"]
+    fams = {r.get("family") for r in rows}
+    if not {"attn", "ssm"} <= fams:
+        errs.append(
+            f"chaos: families {sorted(f for f in fams if f)} must cover both "
+            "attn and ssm — recovery must hold for KV caches AND recurrent state"
+        )
+    for r in rows:
+        tag = f"chaos[{r.get('arch', '?')}]"
+        if r.get("fault_rate", 0) < 0.2:
+            errs.append(f"{tag}: fault_rate {r.get('fault_rate')} < 0.2")
+        injected = r.get("injected") or {}
+        for fam in ("step", "alloc", "nan"):
+            if injected.get(fam, 0) <= 0:
+                errs.append(
+                    f"{tag}: zero {fam} faults injected — the harness never "
+                    "exercised that recovery path"
+                )
+        if r.get("n_token_mismatch", 1) != 0:
+            errs.append(
+                f"{tag}: {r.get('n_token_mismatch')} ok request(s) diverged "
+                "from the fault-free reference — replay is not token-identical"
+            )
+        if r.get("leaked_pages", 1) != 0:
+            errs.append(f"{tag}: {r.get('leaked_pages')} leaked page(s)")
+        if r.get("leaked_slots", 1) != 0:
+            errs.append(f"{tag}: {r.get('leaked_slots')} leaked slot(s)")
+        errs += _check_statuses(tag, r, r.get("n_requests", -1))
+        if (r.get("statuses") or {}).get("failed"):
+            errs.append(
+                f"{tag}: {r['statuses']['failed']} request(s) ended 'failed' — "
+                "the retry/replay budget gave up under the gated fault rate"
+            )
+    return errs
+
+
+def check_deadlines(d: dict) -> list[str]:
+    """Deadline sweep: overload must shed, ok must mean on-time."""
+    errs: list[str] = []
+    dl = d.get("deadlines") or {}
+    classes = dl.get("classes") or []
+    if not classes:
+        return ["deadlines: sweep missing/empty"]
+    errs += _check_statuses("deadlines", dl, dl.get("n_requests", -1))
+    statuses = dl.get("statuses") or {}
+    if statuses.get("shed", 0) < 1:
+        errs.append(
+            "deadlines: nothing shed — the sweep must overload the bounded "
+            "queue or the load-shedding path went unexercised"
+        )
+    if statuses.get("ok", 0) < 1:
+        errs.append("deadlines: nothing completed ok")
+    for c in classes:
+        if c.get("deadline_violations_ok", 1) != 0:
+            errs.append(
+                f"deadlines[{c.get('slo', '?')}]: "
+                f"{c.get('deadline_violations_ok')} ok request(s) finished "
+                "past their deadline — 'ok' must mean on-time"
+            )
+    return errs
+
+
+def check_serving(d: dict, *, tolerance: float = 0.85) -> list[str]:
+    if d.get("chaos_only"):
+        # the --smoke --chaos artifact: gated on exactly the two
+        # lifecycle sweeps; the perf sweeps live in the sibling artifact
+        return check_chaos(d) + check_deadlines(d)
+    errs: list[str] = []
+    # lifecycle sections: mandatory on full runs; a smoke run may skip
+    # them only by saying so out loud in the artifact's skipped list
+    skipped = d.get("skipped") or []
+    for section, token, checker in (
+        ("chaos", "chaos", check_chaos),
+        ("deadlines", "deadline", check_deadlines),
+    ):
+        if section in d:
+            errs += checker(d)
+        elif not d.get("smoke"):
+            errs.append(f"serving: full run missing the {section} sweep")
+        elif not any(token in s for s in skipped):
+            errs.append(
+                f"serving: smoke run neither ran the {section} sweep nor "
+                "declared it in 'skipped' — scenarios must never vanish silently"
+            )
     rows = d.get("results") or []
     if not rows:
-        return ["serving: no results"]
+        return errs + ["serving: no results"]
     rates = sorted({r["rate_rps"] for r in rows})
     backlogged = rates[-1]
     for rate in rates:
@@ -184,10 +309,20 @@ def run(path: str, kind: str | None = None, *, tolerance: float = 0.85) -> list[
         return [f"{p}: cannot infer artifact kind; pass --kind"]
     if kind not in CHECKS:
         return [f"{p}: unknown kind {kind!r} (know {sorted(CHECKS)})"]
+    bad_consts: list[str] = []
     try:
-        d = json.loads(p.read_text())
+        # Python's json happily parses the NaN/Infinity literals that
+        # json.dumps(float("nan")) emits — but they are NOT valid JSON and
+        # poison any stricter consumer.  Intercept and reject: metrics
+        # must emit null for undefined values (applies to every kind).
+        d = json.loads(p.read_text(), parse_constant=bad_consts.append)
     except (OSError, json.JSONDecodeError) as e:
         return [f"{p}: unreadable artifact: {e}"]
+    if bad_consts:
+        return [
+            f"{p}: non-finite JSON constant(s) {sorted(set(bad_consts))} — "
+            "artifacts must encode undefined metrics as null, never NaN/Infinity"
+        ]
     check = CHECKS[kind]
     errs = check(d, tolerance=tolerance) if kind == "serving" else check(d)
     return [f"{p}: {e}" for e in errs]

@@ -14,17 +14,34 @@ decode step under competing scheduler configurations:
   preemption) on a long-prompt mix under a deliberately tight page pool,
   where reservation head-of-line blocking shows up directly in TTFT.
 
+* chaos sweep — the deterministic fault injector
+  (:mod:`repro.serving.chaos`) armed at rate >= 0.2 for all three fault
+  families (step faults, transient allocation failures, NaN-poisoned
+  logits) on BOTH an attention and an SSM arch, under the virtual clock;
+  every surviving request is compared token-for-token against a
+  fault-free reference run of the identical workload, and page/slot
+  accounting is checked for leaks;
+* deadline sweep — a mixed-SLO workload (interactive / standard / batch
+  classes plus a pre-run cancellation) over a bounded waiting queue
+  under backlog, reporting per-class completion, shed reasons, and
+  deadline compliance of every ``ok`` request.
+
 Every cell reports generated tokens/s, p50/p99 end-to-end request
 latency, p50/p99 TTFT, preemption count, and mean slot occupancy.
 Results land in ``BENCH_serving.json`` at the repo root (committed PR
 over PR); ``--smoke`` runs one backlogged rate per sweep and writes
 ``BENCH_serving_smoke.json`` instead so CI can never clobber the
-committed trajectory file.  Flags that a mode ignores are *errors*, not
-silent no-ops — a CI smoke run measures exactly what it claims.
+committed trajectory file.  ``--smoke --chaos`` runs ONLY the chaos +
+deadline sweeps and writes ``BENCH_serving_chaos_smoke.json`` (the CI
+chaos gate); full runs always include them.  Flags that a mode ignores
+are *errors*, not silent no-ops, and every scenario a mode skips is
+logged explicitly (``skipped,...`` lines + the artifact's ``skipped``
+list) — a CI smoke run measures exactly what it claims.
 
   python benchmarks/serving_bench.py                 # full sweep (3 rates)
   python benchmarks/serving_bench.py --rates 8,64    # custom full sweep
   python benchmarks/serving_bench.py --smoke         # CI artifact
+  python benchmarks/serving_bench.py --smoke --chaos # CI chaos artifact
 """
 from __future__ import annotations
 
@@ -42,9 +59,15 @@ for _p in (str(_ROOT), str(_ROOT / "src")):  # support `python benchmarks/servin
 
 BENCH_JSON = _ROOT / "BENCH_serving.json"
 BENCH_JSON_SMOKE = _ROOT / "BENCH_serving_smoke.json"  # never the committed file
+BENCH_JSON_CHAOS_SMOKE = _ROOT / "BENCH_serving_chaos_smoke.json"  # chaos CI gate
 
 # the long-prompt admit sweep's chunk budget (on-demand arm)
 CHUNK_TOKENS = 8
+
+# chaos sweep: every fault family injected at this rate (the CI gate
+# requires >= 0.2), on one attention and one SSM arch
+CHAOS_RATE = 0.2
+CHAOS_ARCHS = (("llama3.2-3b", "attn"), ("mamba2-130m", "ssm"))
 
 
 def make_workload(
@@ -197,10 +220,174 @@ def long_prompt_sweep(args, rates: list[float], n_requests: int, smoke: bool
     return results, ttft_ratio, shape
 
 
+def _lifecycle_engine(arch: str, *, chaos=None, **ecfg_kw):
+    """Engine under the deterministic virtual clock (chaos/deadline sweeps)."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving import Engine, EngineConfig
+
+    cfg = get_config(arch, smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return Engine(cfg, params, EngineConfig(**ecfg_kw), chaos=chaos)
+
+
+def chaos_sweep(args, smoke: bool) -> list[dict]:
+    """All three fault families at ``CHAOS_RATE`` on attn + ssm archs.
+
+    Each arch runs the SAME workload twice under the virtual clock: once
+    fault-free (the greedy reference) and once with the injector armed.
+    The tight on-demand page pool forces organic preemptions on top of
+    the injected ones, so fault recovery composes with the PR-5 replay
+    machinery rather than being tested in isolation.  Every ``ok``
+    request must match the reference token-for-token, and the drained
+    engine must hold zero leaked pages/slots — exactly what the
+    ``check_invariants.py`` chaos gate enforces on this artifact.
+    """
+    from repro.configs import get_config
+    from repro.serving import ChaosConfig
+
+    n_requests = 8 if smoke else 16
+    # geometry: worst case 3 pages/request vs 8 usable => preemption under
+    # load; max_request_retries is generous because a NaN strike costs a
+    # replay (correctness), not a failure — "failed" is for giving up
+    shape = dict(n_slots=4, page_size=8, max_len=32, n_pages=9,
+                 admit="on-demand", chunk_tokens=4, max_request_retries=64)
+    rows = []
+    for arch, family in CHAOS_ARCHS:
+        vocab = get_config(arch, smoke=True).vocab
+        wl = make_workload(n_requests, 2.0, seed=args.seed + 2, vocab=vocab,
+                           prompt_range=(4, 13), gen_range=(4, 11))
+
+        def run_one(chaos):
+            eng = _lifecycle_engine(arch, chaos=chaos, **shape)
+            for w in wl:
+                eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
+            eng.warmup()
+            m = eng.run(realtime=False)
+            return eng, m
+
+        ref_eng, ref_m = run_one(None)
+        assert ref_m["statuses"] == {"ok": n_requests}, (
+            f"fault-free reference must complete everything: {ref_m['statuses']}"
+        )
+        ref_out = {r.rid: list(r.out_tokens) for r in ref_eng.finished}
+        chaos = ChaosConfig(seed=args.seed + 3, step_fault_rate=CHAOS_RATE,
+                            alloc_fault_rate=CHAOS_RATE, nan_rate=CHAOS_RATE)
+        eng, m = run_one(chaos)
+        mismatch = sum(
+            1 for r in eng.finished
+            if r.status == "ok" and r.out_tokens != ref_out[r.rid]
+        )
+        row = {
+            "arch": arch, "family": family, "fault_rate": CHAOS_RATE,
+            "n_requests": n_requests,
+            "statuses": m["statuses"],
+            "n_token_mismatch": mismatch,
+            "leaked_pages": eng.allocator.n_usable - eng.allocator.n_free,
+            "leaked_slots": eng.ecfg.n_slots - eng.scheduler.n_free_slots,
+            "injected": m["injected"],
+            "step_retries": m["step_retries"],
+            "quarantines": m["quarantines"],
+            "hard_recoveries": m["hard_recoveries"],
+            "preemptions": m["preemptions"],
+            "steps": m["steps"],
+            "ref_steps": ref_m["steps"],
+            "generated_tokens_ok": m["generated_tokens_ok"],
+        }
+        rows.append(row)
+        print(
+            f"chaos_{family},0.0,"
+            f"injected={m['injected']};statuses={m['statuses']};"
+            f"mismatch={mismatch};quarantines={m['quarantines']};"
+            f"steps={m['steps']}(ref {ref_m['steps']})"
+        )
+    return rows
+
+
+def deadline_sweep(args, smoke: bool) -> dict:
+    """Mixed-SLO workload over a bounded queue under backlog.
+
+    Three classes round-robin across a backlogged Poisson workload on
+    the virtual clock: ``interactive`` (tight TTFT + total budgets),
+    ``standard`` (loose total budget), ``batch`` (unbounded).  The
+    waiting queue is bounded, so overflow sheds the least-slack request;
+    one batch request is cancelled before the run to exercise the
+    cooperative-cancel path.  The gate: every ``ok`` request met its
+    deadline, at least one request was shed (the sweep is sized to
+    overload), and every request carries a terminal status.
+    """
+    from collections import Counter
+
+    from repro.configs import get_config
+    from repro.serving import SLO
+
+    vocab = get_config(args.arch, smoke=True).vocab
+    n_requests = 12 if smoke else 24
+    classes = (
+        SLO("interactive", ttft_budget=10.0, total_budget=26.0),
+        SLO("standard", total_budget=150.0),
+        SLO("batch"),
+    )
+    wl = make_workload(n_requests, 4.0, seed=args.seed + 4, vocab=vocab,
+                       prompt_range=(4, 13), gen_range=(8, 17))
+    eng = _lifecycle_engine(
+        args.arch, n_slots=2, page_size=8, max_len=32,
+        chunk_tokens=4, max_waiting=6,
+    )
+    reqs = []
+    for i, w in enumerate(wl):
+        reqs.append(eng.submit(w["prompt"], w["max_new_tokens"],
+                               arrival=w["arrival"], slo=classes[i % len(classes)]))
+    cancelled = next(r for r in reqs if r.slo == "batch")
+    eng.cancel(cancelled)  # pre-run cancellation, honoured at first policing
+    eng.warmup()
+    m = eng.run(realtime=False)
+
+    per_class = []
+    for slo in classes:
+        mine = [r for r in eng.finished if r.slo == slo.name]
+        ok = [r for r in mine if r.status == "ok"]
+        ttfts = [r.t_first_token - r.arrival for r in ok if r.t_first_token is not None]
+        per_class.append({
+            "slo": slo.name,
+            "ttft_budget": slo.ttft_budget,
+            "total_budget": slo.total_budget,
+            "n": len(mine),
+            "n_ok": len(ok),
+            "n_shed": sum(1 for r in mine if r.status == "shed"),
+            "n_cancelled": sum(1 for r in mine if r.status == "cancelled"),
+            "shed_reasons": dict(Counter(
+                r.shed_reason for r in mine if r.status == "shed")),
+            "deadline_violations_ok": sum(
+                1 for r in ok
+                if r.deadline is not None and r.t_finish > r.deadline
+            ),
+            "ttft_p50": float(np.percentile(ttfts, 50)) if ttfts else None,
+        })
+        print(
+            f"deadline_{slo.name},0.0,"
+            f"ok={per_class[-1]['n_ok']}/{per_class[-1]['n']};"
+            f"shed={per_class[-1]['n_shed']};"
+            f"violations={per_class[-1]['deadline_violations_ok']}"
+        )
+    return {
+        "n_requests": n_requests,
+        "max_waiting": 6,
+        "statuses": m["statuses"],
+        "classes": per_class,
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one backlogged rate per sweep (CI artifact)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="with --smoke: run ONLY the chaos + deadline sweeps "
+                    "and write BENCH_serving_chaos_smoke.json (the CI chaos "
+                    "gate); full runs always include those sweeps")
     ap.add_argument("--rates", default=None,
                     help="comma-separated arrival rates for the full sweep "
                     "(incompatible with --smoke, which fixes its rate)")
@@ -217,49 +404,88 @@ def main(argv=None) -> None:
         # never silently ignore a flag: a smoke run that *looked* like it
         # measured --rates would let a regression at those rates merge green
         ap.error("--smoke fixes the rate sweep; drop --rates (or drop --smoke)")
+    if args.chaos and not args.smoke:
+        # full runs ALWAYS include the chaos + deadline sweeps; --chaos
+        # exists only to carve out the focused CI smoke artifact
+        ap.error("--chaos selects the chaos-only smoke artifact; add --smoke "
+                 "(full runs include the chaos sweep unconditionally)")
 
-    # low rate = arrival-bound (throughput parity, latency still wins);
-    # high rate = backlogged, where slot recycling shows up in tokens/s.
-    # smoke runs ONLY the backlogged rate: that is where the CI invariant
-    # (continuous >= static tokens/s) actually binds
-    if args.smoke:
-        rates = [32.0]
-    elif args.rates is not None:
-        rates = [float(r) for r in args.rates.split(",") if r]
-        if not rates:
-            ap.error("--rates got no parseable rates")
-    else:
-        rates = [8.0, 32.0, 128.0]
-    n_requests = args.requests or (10 if args.smoke else 48)
-
+    skipped: list[str] = []  # every scenario a mode drops, logged explicitly
     print("name,tokens_per_s,derived")
-    results, speedups = policy_sweep(args, rates, n_requests)
-    lp_rates = [rates[-1]] if args.smoke else rates
-    lp_requests = max(6, n_requests // 2) if args.smoke else n_requests // 2
-    lp_results, ttft_ratio, lp_shape = long_prompt_sweep(
-        args, lp_rates, lp_requests, args.smoke
-    )
 
-    payload = {
-        "arch": args.arch,
-        "slots": args.slots,
-        "page_size": args.page_size,
-        "max_len": args.max_len,
-        "smoke": args.smoke,
-        "results": results,
-        "continuous_over_static_tokens_per_s": speedups,
-        "long_prompt": {
-            "chunk_tokens": CHUNK_TOKENS,
-            # geometry pinned by the sweep itself — the top-level
-            # slots/page_size/max_len describe only the policy sweep
-            "workload": {**{k: list(v) if isinstance(v, tuple) else v
-                            for k, v in lp_shape.items()},
-                         "packed_head": args.packed_head},
-            "results": lp_results,
-            "on_demand_over_reserve_p99_ttft": ttft_ratio,
-        },
-    }
-    target = BENCH_JSON_SMOKE if args.smoke else BENCH_JSON
+    if args.chaos:
+        skipped += [
+            "policy_sweep (chaos-only artifact; run --smoke without --chaos)",
+            "long_prompt_sweep (chaos-only artifact; run --smoke without --chaos)",
+        ]
+        payload = {
+            "arch": args.arch,
+            "smoke": True,
+            "chaos_only": True,
+            "chaos": {"fault_rate": CHAOS_RATE,
+                      "results": chaos_sweep(args, smoke=True)},
+            "deadlines": deadline_sweep(args, smoke=True),
+            "skipped": skipped,
+        }
+        target = BENCH_JSON_CHAOS_SMOKE
+    else:
+        # low rate = arrival-bound (throughput parity, latency still wins);
+        # high rate = backlogged, where slot recycling shows up in tokens/s.
+        # smoke runs ONLY the backlogged rate: that is where the CI invariant
+        # (continuous >= static tokens/s) actually binds
+        if args.smoke:
+            rates = [32.0]
+            skipped.append("rates 8.0,128.0 (smoke runs only the backlogged rate)")
+        elif args.rates is not None:
+            rates = [float(r) for r in args.rates.split(",") if r]
+            if not rates:
+                ap.error("--rates got no parseable rates")
+        else:
+            rates = [8.0, 32.0, 128.0]
+        n_requests = args.requests or (10 if args.smoke else 48)
+
+        results, speedups = policy_sweep(args, rates, n_requests)
+        lp_rates = [rates[-1]] if args.smoke else rates
+        lp_requests = max(6, n_requests // 2) if args.smoke else n_requests // 2
+        lp_results, ttft_ratio, lp_shape = long_prompt_sweep(
+            args, lp_rates, lp_requests, args.smoke
+        )
+
+        payload = {
+            "arch": args.arch,
+            "slots": args.slots,
+            "page_size": args.page_size,
+            "max_len": args.max_len,
+            "smoke": args.smoke,
+            "results": results,
+            "continuous_over_static_tokens_per_s": speedups,
+            "long_prompt": {
+                "chunk_tokens": CHUNK_TOKENS,
+                # geometry pinned by the sweep itself — the top-level
+                # slots/page_size/max_len describe only the policy sweep
+                "workload": {**{k: list(v) if isinstance(v, tuple) else v
+                                for k, v in lp_shape.items()},
+                             "packed_head": args.packed_head},
+                "results": lp_results,
+                "on_demand_over_reserve_p99_ttft": ttft_ratio,
+            },
+        }
+        if args.smoke:
+            # the chaos artifact is a separate CI job so a fault-injection
+            # regression can't hide behind a green perf smoke (and vice versa)
+            skipped += [
+                "chaos_sweep (covered by `serving_bench.py --smoke --chaos`)",
+                "deadline_sweep (covered by `serving_bench.py --smoke --chaos`)",
+            ]
+        else:
+            payload["chaos"] = {"fault_rate": CHAOS_RATE,
+                                "results": chaos_sweep(args, smoke=False)}
+            payload["deadlines"] = deadline_sweep(args, smoke=False)
+        payload["skipped"] = skipped
+        target = BENCH_JSON_SMOKE if args.smoke else BENCH_JSON
+
+    for s in skipped:
+        print(f"skipped,0.0,{s}")
     target.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"bench_json,0.0,written={target.name}")
 

@@ -7,6 +7,8 @@
 5. Continuous-batching serving (paged KV + packed LM head)
 6. Deployment-plan compiler: search -> autotune -> serve mixed precision
 7. 1-bit overpacking: denser placements, bits recovered in-kernel (§IV-B-1)
+8. Chunked prefill + on-demand admission with preemption/requeue
+9. Fault-hardened serving: deadlines, cancellation, shedding, chaos
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -174,4 +176,44 @@ print(f"  undersized pool: {m['preemptions']} preemptions, all "
       f"{eng.allocator.n_free == eng.allocator.n_usable}")
 # from the shell (and in benchmarks/serving_bench.py's long-prompt sweep):
 #   PYTHONPATH=src python -m repro.launch.serve --chunk-tokens 8 --admit on-demand
+
+# -- 9. fault-hardened serving ------------------------------------------------
+print("== Deadlines, cancellation, load shedding, and chaos ==")
+# Every request now ends in exactly one terminal status: ok | cancelled |
+# shed | failed.  Deadlines come either explicit (seconds from arrival,
+# resolved to absolute) or via an SLO class; the scheduler sheds work it
+# can no longer serve in time instead of burning slots on it, and a
+# bounded queue sheds the least-slack request on overflow.
+from repro.serving import SLO, ChaosConfig
+
+interactive = SLO("interactive", ttft_budget=10.0, total_budget=26.0)
+eng = Engine(cfg, params, EngineConfig(n_slots=2, page_size=4, max_len=32,
+                                       chunk_tokens=4, max_waiting=4))
+doomed = eng.submit(long_prompt, 4, deadline=0.0)       # already expired
+kept = [eng.submit(rng.integers(1, cfg.vocab, size=6).tolist(), 4,
+                   slo=interactive) for _ in range(3)]
+victim = eng.submit(rng.integers(1, cfg.vocab, size=6).tolist(), 4)
+victim.cancel()                                          # user hung up
+m = eng.run(realtime=False)
+print(f"  statuses: {m['statuses']}  (doomed={doomed.status}, "
+      f"victim={victim.status}, shed_reason={doomed.shed_reason})")
+# chaos harness: seeded injected faults (step exceptions, transient alloc
+# failures, NaN-poisoned logits) at rate 0.2 each — the engine retries,
+# quarantines the poisoned slot, preempts/requeues, and every surviving
+# request must decode token-identical to the fault-free greedy reference.
+chaos = ChaosConfig(seed=0, step_fault_rate=0.2, alloc_fault_rate=0.2,
+                    nan_rate=0.2)
+eng = Engine(cfg, params, EngineConfig(n_slots=2, page_size=4, max_len=32,
+                                       chunk_tokens=4, max_request_retries=64),
+             chaos=chaos)
+c_prompts = [rng.integers(1, cfg.vocab, size=n).tolist() for n in (9, 6, 11)]
+c_reqs = [eng.submit(p, 5) for p in c_prompts]
+m = eng.run(realtime=False)
+print(f"  chaos: injected={m['injected']} retries={m['step_retries']} "
+      f"quarantines={m['quarantines']} statuses={m['statuses']}")
+print(f"  zero leaked pages after chaos: "
+      f"{eng.allocator.n_free == eng.allocator.n_usable}")
+# CI runs this harness as a gated job:
+#   python benchmarks/serving_bench.py --smoke --chaos
+#   python benchmarks/check_invariants.py BENCH_serving_chaos_smoke.json
 print("quickstart complete.")

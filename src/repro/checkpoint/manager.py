@@ -126,6 +126,12 @@ class CheckpointManager:
         for key in flat_t:
             meta = manifest[key]
             arr = np.load(path / meta["file"])
+            if arr.dtype.kind == "V":
+                # extended dtypes (bfloat16, float8_*) survive np.save only
+                # as raw void bytes; the manifest remembers who they were
+                import ml_dtypes
+
+                arr = arr.view(np.dtype(getattr(ml_dtypes, meta["dtype"])))
             if shardings is not None and key in flat_s:
                 sh = flat_s[key]
                 loaded[key] = jax.device_put(arr, sh)

@@ -26,6 +26,13 @@ quantize + prepack (three or more distinct bit pairs in one model),
 autotuned kernel block shapes, and the plan's LM-head entry — the
 engine then serves genuinely mixed precision.
 
+Lifecycle/fault flags (continuous engine only): ``--deadline`` /
+``--ttft-deadline`` shed requests that blow their latency budget,
+``--max-waiting`` bounds the queue with least-slack shedding, and
+``--chaos-step-rate`` / ``--chaos-alloc-rate`` / ``--chaos-nan-rate``
+(+ ``--chaos-seed``) arm the deterministic fault injector — the run
+ends with a per-status summary instead of crashing.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 64
   PYTHONPATH=src python -m repro.launch.serve --packed --wbits 4 --abits 4
   PYTHONPATH=src python -m repro.launch.serve --engine static --int8
@@ -127,8 +134,14 @@ def _serve_static(args, cfg, params, head) -> dict:
 
 def _serve_continuous(args, cfg, params, head=None) -> dict:
     """Continuous-batching engine over a synthetic same-arrival workload."""
-    from repro.serving import Engine, EngineConfig
+    from repro.serving import ChaosConfig, Engine, EngineConfig
 
+    chaos = ChaosConfig(
+        seed=args.chaos_seed,
+        step_fault_rate=args.chaos_step_rate,
+        alloc_fault_rate=args.chaos_alloc_rate,
+        nan_rate=args.chaos_nan_rate,
+    )
     eng = Engine(
         cfg,
         params,
@@ -141,14 +154,19 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
             admit=args.admit,
             packed_head=args.packed_head,
             head_bits=(args.wbits, args.abits) if args.packed else (8, 8),
+            max_waiting=args.max_waiting,
         ),
         head=head,
+        chaos=chaos if chaos.enabled else None,
     )
     rng = jax.random.PRNGKey(2)
     for i in range(args.requests or 2 * args.batch):
         rng, k = jax.random.split(rng)
         prompt = jax.random.randint(k, (args.prompt_len,), 0, cfg.vocab).tolist()
-        eng.submit(prompt, args.tokens)
+        eng.submit(
+            prompt, args.tokens,
+            deadline=args.deadline, ttft_deadline=args.ttft_deadline,
+        )
     eng.warmup()  # compile outside the timed run, like the static loop
     m = eng.run(realtime=True)
     m["latency_ms_per_step"] = m["wall"] / max(1, m["steps"]) * 1e3
@@ -195,6 +213,23 @@ def main(argv=None) -> dict:
     ap.add_argument("--abits", type=int, default=4, help="--packed activation bits")
     ap.add_argument("--packed-head", action="store_true",
                     help="prepack the LM head too (w8a8 unless --packed sets bits)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="continuous engine: per-request total deadline "
+                    "(seconds after arrival); expired requests are shed")
+    ap.add_argument("--ttft-deadline", type=float, default=None,
+                    help="continuous engine: time-to-first-token deadline "
+                    "(seconds after arrival)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="continuous engine: waiting-queue bound (0 = "
+                    "unbounded); overflow sheds the least-slack request")
+    ap.add_argument("--chaos-step-rate", type=float, default=0.0,
+                    help="chaos: P(fused step raises) per attempt")
+    ap.add_argument("--chaos-alloc-rate", type=float, default=0.0,
+                    help="chaos: P(page alloc transiently fails) per call")
+    ap.add_argument("--chaos-nan-rate", type=float, default=0.0,
+                    help="chaos: P(sampling logits NaN-poisoned) per slot/step")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="chaos: fault-injection RNG seed")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
@@ -233,6 +268,17 @@ def main(argv=None) -> dict:
             "--chunk-tokens/--admit drive the continuous engine; they have no "
             "effect on --engine static — drop them or switch engines"
         )
+    lifecycle_flags = (
+        args.deadline is not None or args.ttft_deadline is not None
+        or args.max_waiting or args.chaos_step_rate or args.chaos_alloc_rate
+        or args.chaos_nan_rate
+    )
+    if engine != "continuous" and lifecycle_flags:
+        raise SystemExit(
+            "--deadline/--ttft-deadline/--max-waiting/--chaos-* drive the "
+            "continuous engine's request lifecycle; they have no effect on "
+            "--engine static — drop them or switch engines"
+        )
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     head = None
     if plan is not None:
@@ -260,11 +306,22 @@ def main(argv=None) -> dict:
         mode = "packed" if args.packed else ("int8" if args.int8 else "fp")
     if args.packed_head:
         mode += "+packed_head"
+    tps = out["tokens_per_s"]
+    tps_str = f"{tps:.1f}" if tps is not None else "n/a"
     print(
         f"arch={cfg.name} engine={engine} weights={mode} batch={args.batch} "
-        f"tokens/s={out['tokens_per_s']:.1f} "
+        f"tokens/s={tps_str} "
         f"latency={out['latency_ms_per_step']:.1f} ms/step"
     )
+    if "statuses" in out:
+        parts = " ".join(f"{k}={v}" for k, v in sorted(out["statuses"].items()))
+        faults = out.get("injected", {})
+        print(
+            f"statuses: {parts or 'none'}  "
+            f"(retries={out.get('step_retries', 0)} "
+            f"quarantines={out.get('quarantines', 0)} "
+            f"injected={faults})"
+        )
     return out
 
 

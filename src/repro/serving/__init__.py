@@ -7,16 +7,29 @@ and on-demand page growth (:mod:`repro.serving.scheduler`), and the
 request-level engine that jits one fused step — chunked prefill lanes
 and single-token decode lanes together — over the whole slot set
 (:mod:`repro.serving.engine`).
+
+PR 6 hardens the request lifecycle: per-request deadlines and SLO
+classes with deterministic load shedding and cooperative cancellation
+(:mod:`repro.serving.lifecycle`), and a seeded chaos harness
+(:mod:`repro.serving.chaos`) that injects step faults, transient
+allocation failures, and NaN-poisoned logits to prove the engine's
+retry / quarantine / token-identical-replay machinery in CI.
 """
-from repro.serving.engine import Engine, EngineConfig, Request
+from repro.serving.chaos import ChaosConfig, InjectedFault
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.lifecycle import SLO, TERMINAL_STATUSES, Request
 from repro.serving.paged_kv import BlockTable, PageAllocator
 from repro.serving.scheduler import Scheduler
 
 __all__ = [
     "BlockTable",
+    "ChaosConfig",
     "Engine",
     "EngineConfig",
+    "InjectedFault",
     "PageAllocator",
     "Request",
+    "SLO",
     "Scheduler",
+    "TERMINAL_STATUSES",
 ]

@@ -19,6 +19,28 @@ lowest-progress slot is preempted (pages freed, request requeued with
 its generated prefix) and replayed chunked later — token-identical under
 greedy sampling because paged attention recomputes bit-exact rows.
 
+**Request lifecycle & fault tolerance.**  Every request ends in exactly
+one terminal status (``ok | cancelled | shed | failed`` — see
+:mod:`repro.serving.lifecycle`).  Between steps the engine polices
+cooperative cancellation, TTFT/total deadlines (shedding requests that
+expired or provably cannot meet their deadline), and a bounded waiting
+queue (``max_waiting``) that sheds the lowest-deadline-slack request
+under backpressure.  A stall watchdog replaces the old hard
+``RuntimeError``: after ``watchdog_ticks`` idle loop iterations with
+waiting work the head request is shed deterministically, so ``run()``
+never crashes and never spins forever.  Faults in the fused step are
+retried up to ``max_step_retries`` times (transient faults fire *before*
+the step touches state, so the retry is exact); on exhaustion — or on a
+non-finite logits row about to be sampled — the victim request is
+preempted through the PR-5 token-identical requeue/replay path and its
+slot quarantined for ``quarantine_ticks``.  A request accumulating more
+than ``max_request_retries`` fault strikes is finalized ``failed``.
+Non-injected (hard) step exceptions invalidate the donated state buffer:
+the engine restores a ``CheckpointManager`` snapshot of the paged state
+(``snapshot_every``) or re-initializes it, then replays every in-flight
+request — correctness never depends on snapshot freshness because
+replay rebuilds all resident rows.
+
 Per-request latency/throughput is recorded against either the wall
 clock (serving benchmarks) or a deterministic virtual step clock
 (tests): ``run(realtime=False)`` counts one time unit per engine step.
@@ -27,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter
 from typing import Callable
 
 import jax
@@ -36,8 +59,10 @@ import numpy as np
 from repro.models import transformer as T
 from repro.models.layers import prepack_lm_head
 from repro.parallel.sharding import ShardingRules, use_rules
+from repro.serving.chaos import ChaosConfig, ChaosInjector, InjectedFault
+from repro.serving.lifecycle import SLO, TERMINAL_STATUSES, Request
 from repro.serving.paged_kv import BlockTable, PageAllocator
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +80,27 @@ class EngineConfig:
     admit: str = "reserve"
     packed_head: bool = False
     head_bits: tuple[int, int] = (8, 8)
+    # -- lifecycle / fault tolerance ------------------------------------
+    # waiting-queue bound; 0 = unbounded.  Overflow sheds the request
+    # with the least deadline slack (deadline-aware load shedding).
+    max_waiting: int = 0
+    # idle loop iterations with waiting-but-unplaceable work before the
+    # watchdog sheds the queue head (deterministic; replaces the old
+    # stall RuntimeError)
+    watchdog_ticks: int = 64
+    # ticks a slot sits out after hosting a fault (poisoned logits /
+    # escalated step fault) before re-entering admission
+    quarantine_ticks: int = 8
+    # consecutive fused-step retries before escalating to a victim
+    # preemption, and per-request fault strikes before status "failed"
+    max_step_retries: int = 4
+    max_request_retries: int = 3
+    # assert page/slot accounting invariants after a drained run()
+    check_invariants: bool = True
+    # > 0: snapshot the paged device state via CheckpointManager every N
+    # steps (restored on hard step faults; mirrors FaultTolerantRunner)
+    snapshot_every: int = 0
+    snapshot_dir: str | None = None
 
     @property
     def blocks_per_slot(self) -> int:
@@ -74,29 +120,46 @@ class Engine:
         ecfg: EngineConfig = EngineConfig(),
         rules: ShardingRules | None = None,
         head=None,
+        chaos: ChaosConfig | None = None,
     ):
         """``head`` optionally injects prepacked LM-head weights (e.g. from
         a deployment plan's ``lm_head`` entry via
         :func:`repro.plan.apply.apply_plan`); otherwise ``ecfg.packed_head``
-        prepacks the tied embedding at ``ecfg.head_bits`` here."""
+        prepacks the tied embedding at ``ecfg.head_bits`` here.  ``chaos``
+        arms the deterministic fault injector (:mod:`repro.serving.chaos`)
+        around the fused step and the page allocator."""
         if cfg.family not in ("attn", "ssm"):
             raise NotImplementedError(
                 f"continuous batching supports attn/ssm families, not {cfg.family!r}"
             )
         if ecfg.chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1")
+        if ecfg.max_step_retries < 0 or ecfg.max_request_retries < 0:
+            raise ValueError("retry budgets must be >= 0")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
         self.rules = rules if rules is not None else ShardingRules(enabled=False)
         n_pages = ecfg.pool_pages()
         self.state = T.init_paged_state(cfg, ecfg.n_slots, n_pages, ecfg.page_size)
-        self.allocator = PageAllocator(n_pages)
+        self._chaos = ChaosInjector(chaos) if chaos is not None and chaos.enabled else None
+        allocator = PageAllocator(n_pages)
+        if self._chaos is not None:
+            allocator = self._chaos.wrap_allocator(allocator)
+        self.allocator = allocator
         self.block_table = BlockTable(ecfg.n_slots, ecfg.blocks_per_slot)
         self.scheduler = Scheduler(
             ecfg.n_slots, self.allocator, self.block_table, ecfg.page_size,
             policy=ecfg.policy, admit=ecfg.admit,
         )
+        self._ckpt = None
+        if ecfg.snapshot_every > 0:
+            import tempfile
+
+            from repro.checkpoint.manager import CheckpointManager
+
+            snap_dir = ecfg.snapshot_dir or tempfile.mkdtemp(prefix="engine-snap-")
+            self._ckpt = CheckpointManager(snap_dir, keep=2)
         if head is None and ecfg.packed_head:
             head = prepack_lm_head(
                 params["embed"], w_bits=ecfg.head_bits[0], a_bits=ecfg.head_bits[1]
@@ -127,13 +190,30 @@ class Engine:
         self._pending: list[Request] = []  # sorted by arrival
         self._next_rid = 0
         self.n_steps = 0
+        self.ticks = 0  # run()-loop iterations (quarantine/watchdog clock)
         self.slot_token_steps = 0  # active slots summed over steps (occupancy)
         self.fed_tokens = 0  # valid token lanes summed over steps
         self.finished: list[Request] = []
+        self.step_retries = 0  # fused-step attempts burned on injected faults
+        self.hard_recoveries = 0  # state restores after non-injected step faults
+        self.fault_log: list[str] = []  # one line per recovered hard fault
+        self._step_time_ewma: float | None = None  # realtime deadline estimator
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, prompt, max_new_tokens: int, arrival: float = 0.0) -> Request:
+    def submit(
+        self,
+        prompt,
+        max_new_tokens: int,
+        arrival: float = 0.0,
+        *,
+        deadline: float | None = None,
+        ttft_deadline: float | None = None,
+        slo: SLO | None = None,
+    ) -> Request:
+        """Queue a request.  ``deadline``/``ttft_deadline`` are absolute
+        engine-clock times; an :class:`SLO` instead carries relative
+        budgets resolved against ``arrival`` (explicit deadlines win)."""
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -144,11 +224,30 @@ class Engine:
                 f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
                 f"max_len {self.ecfg.max_len}"
             )
-        req = Request(self._next_rid, prompt, max_new_tokens, arrival=arrival)
+        slo_name = None
+        if slo is not None:
+            slo_ttft, slo_total = slo.resolve(arrival)
+            ttft_deadline = ttft_deadline if ttft_deadline is not None else slo_ttft
+            deadline = deadline if deadline is not None else slo_total
+            slo_name = slo.name
+        req = Request(
+            self._next_rid, prompt, max_new_tokens, arrival=arrival,
+            deadline=deadline, ttft_deadline=ttft_deadline, slo=slo_name,
+        )
         self._next_rid += 1
         self._pending.append(req)
         self._pending.sort(key=lambda r: r.arrival)
         return req
+
+    def cancel(self, req: Request) -> bool:
+        """Request cooperative cancellation.  Returns False if the request
+        already carries a terminal status; otherwise it will be finalized
+        ``cancelled`` (pages/slot reclaimed, partial output kept) at the
+        next between-steps policing pass."""
+        if req.status is not None:
+            return False
+        req.cancel()
+        return True
 
     # -- step loop ---------------------------------------------------------
 
@@ -177,6 +276,126 @@ class Engine:
             if self.cfg.family == "ssm":
                 self.state = self._reset(self.state, jnp.asarray(req.slot, jnp.int32))
 
+    # -- lifecycle policing ------------------------------------------------
+
+    def _finalize(self, req: Request, status: str, now: float, reason: str | None = None) -> None:
+        """Move a request to its terminal status exactly once, reclaiming
+        its pages/slot through the scheduler if it is resident."""
+        assert req.status is None, f"rid {req.rid} already terminal ({req.status})"
+        assert status in TERMINAL_STATUSES, status
+        if req.slot != -1:
+            self.scheduler.finish(req, now)
+        else:
+            req.t_finish = now
+        req.status = status
+        if reason is not None:
+            req.shed_reason = reason
+        self.finished.append(req)
+
+    def _est_service_time(self, req: Request) -> float | None:
+        """Optimistic remaining-service estimate on the engine clock, or
+        None when no per-step time estimate exists yet (realtime warmup)."""
+        per_step = 1.0 if not self._realtime else self._step_time_ewma
+        if per_step is None:
+            return None
+        return req.min_steps_left(self.ecfg.chunk_tokens) * per_step
+
+    def _expired_reason(self, req: Request, now: float) -> str | None:
+        if req.deadline is not None and now >= req.deadline and not req.done:
+            return "deadline"
+        if (
+            req.ttft_deadline is not None
+            and req.t_first_token is None
+            and now >= req.ttft_deadline
+        ):
+            return "ttft"
+        return None
+
+    def _slack(self, req: Request, now: float) -> float:
+        """Deadline slack (time to spare under an optimistic service
+        estimate); +inf for requests without a deadline."""
+        if req.deadline is None:
+            return float("inf")
+        est = self._est_service_time(req)
+        return req.deadline - now - (est if est is not None else 0.0)
+
+    def _police(self, now: float) -> None:
+        """Between-steps lifecycle pass: cooperative cancellation, deadline
+        expiry/infeasibility shedding, and bounded-queue backpressure."""
+        sched = self.scheduler
+        # cancellation: cooperative, honoured wherever the request sits
+        for req in [r for r in self._pending if r.cancel_requested]:
+            self._pending.remove(req)
+            self._finalize(req, "cancelled", now)
+        for req in [r for r in list(sched.waiting) if r.cancel_requested]:
+            sched.remove_waiting(req)
+            self._finalize(req, "cancelled", now)
+        for req in [r for r in list(sched.active.values()) if r.cancel_requested]:
+            self._finalize(req, "cancelled", now)
+        # deadline expiry (active requests are dropped mid-decode: their
+        # pages fund work that can still meet its SLO)
+        for req in list(sched.active.values()):
+            reason = self._expired_reason(req, now)
+            if reason is not None:
+                self._finalize(req, "shed", now, reason=reason)
+        for req in list(sched.waiting):
+            reason = self._expired_reason(req, now)
+            if reason is None and req.deadline is not None:
+                est = self._est_service_time(req)
+                if est is not None and now + est > req.deadline:
+                    reason = "infeasible"
+            if reason is not None:
+                sched.remove_waiting(req)
+                self._finalize(req, "shed", now, reason=reason)
+        # backpressure: bounded waiting queue sheds the least-slack request
+        if self.ecfg.max_waiting:
+            while len(sched.waiting) > self.ecfg.max_waiting:
+                victim = min(
+                    sched.waiting,
+                    key=lambda r: (self._slack(r, now), -r.arrival, -r.rid),
+                )
+                sched.remove_waiting(victim)
+                self._finalize(victim, "shed", now, reason="queue-overflow")
+
+    # -- fault handling ----------------------------------------------------
+
+    def _strike(self, req: Request, now: float) -> None:
+        """One fault strike against a resident request: preempt it through
+        the token-identical requeue/replay path and quarantine its slot;
+        over-budget requests are finalized ``failed`` instead of replayed."""
+        sched = self.scheduler
+        slot = req.slot
+        req.n_faults += 1
+        sched.preempt(req, now)
+        sched.quarantine_slot(slot, self.ticks + self.ecfg.quarantine_ticks)
+        if req.n_faults > self.ecfg.max_request_retries:
+            sched.remove_waiting(req)
+            self._finalize(req, "failed", now)
+
+    def _recover_hard_fault(self, exc: Exception, now: float) -> None:
+        """A non-injected exception escaped the fused step: the donated
+        state buffer can no longer be trusted.  Restore the latest
+        snapshot (or re-initialize) and replay every in-flight request —
+        replay rewrites all resident rows, so correctness is independent
+        of snapshot freshness."""
+        self.hard_recoveries += 1
+        self.fault_log.append(f"step {self.n_steps}: {type(exc).__name__}: {exc}")
+        for req in list(self.scheduler.active.values()):
+            self._strike(req, now)
+        self.state = self._restore_state()
+
+    def _restore_state(self):
+        ecfg = self.ecfg
+        template = T.init_paged_state(
+            self.cfg, ecfg.n_slots, ecfg.pool_pages(), ecfg.page_size
+        )
+        if self._ckpt is not None:
+            self._ckpt.wait()
+            if self._ckpt.latest_step() is not None:
+                _, state = self._ckpt.restore(template)
+                return state
+        return template
+
     def _fund_pages(self) -> None:
         """On-demand mode: before the step, grow every active slot's page
         list to cover its chunk.  Slots are funded in descending-progress
@@ -185,7 +404,9 @@ class Engine:
         in which case it leaves the batch and replays later.  The
         highest-progress slot can always be funded (its total demand is
         bounded by the submit-time worst-case feasibility check), so every
-        step advances at least one request — no livelock."""
+        step advances at least one request — no livelock.  (A chaos-flaky
+        allocator can still starve a whole pass transiently; the requests
+        requeue and the next tick retries.)"""
         sched, C = self.scheduler, self.ecfg.chunk_tokens
         for req in sorted(sched.active.values(), key=lambda r: (-r.n_fed, r.rid)):
             if req.slot == -1:
@@ -221,34 +442,65 @@ class Engine:
         ]
         if C > 1:
             args.append(jnp.asarray(lens))
-        logits, self.state = self._step(*args)
+        for attempt in range(self.ecfg.max_step_retries + 1):
+            try:
+                if self._chaos is not None:
+                    self._chaos.before_step()  # raises BEFORE state is touched
+                logits, self.state = self._step(*args)
+                break
+            except InjectedFault:
+                self.step_retries += 1
+                if attempt == self.ecfg.max_step_retries:
+                    # transient fault outlasted the retry budget: treat it
+                    # like an attributable slot fault — replay the lowest-
+                    # progress victim, quarantine its slot, step next tick
+                    self._strike(sched.pick_victim(), now_fn())
+                    return
+            except Exception as exc:  # hard fault: donated state invalidated
+                self._recover_hard_fault(exc, now_fn())
+                return
         self.n_steps += 1
         self.slot_token_steps += len(sched.active)
         self.fed_tokens += int(lens.sum())
         logits_np = np.asarray(logits)  # device sync; [S, V]
+        sampling = [s for s, r in sched.active.items() if r.n_fed + int(lens[s]) >= len(r.seq)]
+        if self._chaos is not None:
+            logits_np = np.array(logits_np)  # writable host copy
+            self._chaos.poison_logits(logits_np, sampling)
         t = now_fn()
+        if self._ckpt is not None and self.n_steps % self.ecfg.snapshot_every == 0:
+            self._ckpt.save_async(self.n_steps, self.state)
         for slot, req in list(sched.active.items()):
             req.n_fed += int(lens[slot])
             if req.n_fed < len(req.seq):
                 continue  # mid-prompt / mid-replay: logits not sampled
-            nxt = int(np.argmax(logits_np[slot]))
+            row = logits_np[slot]
+            if not np.isfinite(row).all():
+                # poisoned (or genuinely non-finite) logits about to be
+                # sampled: never emit garbage — quarantine the slot and
+                # replay the request token-identically
+                self._strike(req, t)
+                continue
+            nxt = int(np.argmax(row))
             if not req.out_tokens:
                 req.t_first_token = t
             req.out_tokens.append(nxt)
             if req.done:
-                sched.finish(req, t)
-                self.finished.append(req)
+                self._finalize(req, "ok", t)
 
     def run(self, *, realtime: bool = True, max_steps: int | None = None) -> dict:
-        """Drive the engine until every submitted request completes.
+        """Drive the engine until every submitted request reaches a
+        terminal status.
 
         ``realtime=False`` uses a deterministic virtual clock (1.0 per
-        step; idle gaps jump straight to the next arrival) so tests and
-        A/B comparisons are noise-free.
+        step — idle ticks also advance it; idle gaps jump straight to the
+        next arrival) so tests and A/B comparisons are noise-free.
         """
         sched = self.scheduler
+        self._realtime = realtime
         t_wall0 = time.monotonic()
         vclock = 0.0
+        idle = 0
 
         def now() -> float:
             return (time.monotonic() - t_wall0) if realtime else vclock
@@ -256,47 +508,105 @@ class Engine:
         while self._pending or not sched.all_done():
             if max_steps is not None and self.n_steps >= max_steps:
                 break
+            self.ticks += 1
+            sched.release_quarantined(self.ticks)
+            self._police(now())
             self._admit(now())
             if not sched.active:
-                if not self._pending:
-                    # can't happen: with every slot and page free, submit()'s
-                    # feasibility check guarantees the queue head admits
-                    raise RuntimeError("scheduler stalled with waiting requests")
-                # nothing running: wait for (or jump to) the next arrival
-                nxt = self._pending[0].arrival
+                if self._pending:
+                    # nothing running: wait for (or jump to) the next arrival
+                    nxt = self._pending[0].arrival
+                    if realtime:
+                        time.sleep(min(max(nxt - now(), 0.0), 0.01))
+                    else:
+                        vclock = max(vclock, nxt)
+                    idle = 0
+                    continue
+                if sched.all_done():
+                    continue  # loop condition exits
+                # waiting work but nothing placeable (quarantine drain,
+                # flaky allocator, or a genuine stall): idle ticks release
+                # quarantines; the watchdog sheds the head deterministically
+                # instead of crashing or spinning forever
+                idle += 1
                 if realtime:
-                    time.sleep(min(max(nxt - now(), 0.0), 0.01))
+                    time.sleep(0.001)
                 else:
-                    vclock = max(vclock, nxt)
+                    vclock += 1.0
+                if idle > self.ecfg.watchdog_ticks:
+                    victim = sched.waiting[0]
+                    sched.remove_waiting(victim)
+                    self._finalize(victim, "shed", now(), reason="watchdog")
+                    idle = 0
                 continue
+            idle = 0
+            t_step0 = time.monotonic()
             self._step_once(now)
-            if not realtime:
+            if realtime:
+                dt = time.monotonic() - t_step0
+                self._step_time_ewma = (
+                    dt if self._step_time_ewma is None
+                    else 0.8 * self._step_time_ewma + 0.2 * dt
+                )
+            else:
                 vclock += 1.0
+        drained = not self._pending and sched.all_done()
+        if drained:
+            sched.release_quarantined(None)
+            if self._ckpt is not None:
+                self._ckpt.wait()
+            if self.ecfg.check_invariants:
+                self.assert_no_leaks()
         return self.metrics(time.monotonic() - t_wall0 if realtime else vclock)
+
+    _realtime = True  # set by run(); _est_service_time default
 
     # -- reporting ---------------------------------------------------------
 
+    def assert_no_leaks(self) -> None:
+        """Page + slot accounting invariant: every page is back on the free
+        list and every slot is free (or quarantined) with a cleared block
+        table.  Raises AssertionError naming the leak."""
+        self.allocator.assert_no_leaks()
+        self.scheduler.assert_all_reclaimed()
+
     def metrics(self, wall: float) -> dict:
         done = self.finished
-        lat = [r.t_finish - r.arrival for r in done if r.t_finish is not None]
+        ok = [r for r in done if r.status == "ok"]
+        statuses = Counter(r.status for r in done)
+        lat = [r.t_finish - r.arrival for r in ok if r.t_finish is not None]
         ttft = [r.t_first_token - r.arrival for r in done if r.t_first_token is not None]
         gen = sum(len(r.out_tokens) for r in done)
+
+        def pct(xs: list, q: float) -> float | None:
+            # None (JSON null), never float("nan"): the NaN literal is not
+            # valid JSON and poisons downstream artifact parsing
+            return float(np.percentile(xs, q)) if xs else None
+
         return {
             "engine": self.ecfg.policy,
             "admit": self.ecfg.admit,
             "chunk_tokens": self.ecfg.chunk_tokens,
             "n_requests": len(done),
+            "n_ok": len(ok),
+            "statuses": dict(statuses),
             "generated_tokens": gen,
+            "generated_tokens_ok": sum(len(r.out_tokens) for r in ok),
             "prompt_tokens": sum(len(r.prompt) for r in done),
             "fed_tokens": self.fed_tokens,
             "preemptions": self.scheduler.n_preemptions,
+            "quarantines": self.scheduler.n_quarantines,
+            "step_retries": self.step_retries,
+            "hard_recoveries": self.hard_recoveries,
+            "injected": self._chaos.counters() if self._chaos is not None
+            else {"step": 0, "alloc": 0, "nan": 0},
             "steps": self.n_steps,
             "wall": wall,
-            "tokens_per_s": gen / wall if wall > 0 else float("nan"),
-            "latency_p50": float(np.percentile(lat, 50)) if lat else float("nan"),
-            "latency_p99": float(np.percentile(lat, 99)) if lat else float("nan"),
-            "ttft_p50": float(np.percentile(ttft, 50)) if ttft else float("nan"),
-            "ttft_p99": float(np.percentile(ttft, 99)) if ttft else float("nan"),
+            "tokens_per_s": gen / wall if wall > 0 else None,
+            "latency_p50": pct(lat, 50),
+            "latency_p99": pct(lat, 99),
+            "ttft_p50": pct(ttft, 50),
+            "ttft_p99": pct(ttft, 99),
             "slot_occupancy": (
                 self.slot_token_steps / (self.n_steps * self.ecfg.n_slots)
                 if self.n_steps

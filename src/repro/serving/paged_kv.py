@@ -52,6 +52,22 @@ class PageAllocator:
                 raise ValueError(f"double free of page {p}")
             self._free.append(p)
 
+    def assert_no_leaks(self) -> None:
+        """Raise AssertionError unless every allocatable page is back in
+        the free list (and none is duplicated).  The engine asserts this
+        after a drained ``run()``; serving tests reuse it instead of
+        hand-rolled free-page arithmetic."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            dupes = sorted(p for p in free if self._free.count(p) > 1)
+            raise AssertionError(f"free-list corruption: duplicated page(s) {dupes}")
+        leaked = sorted(set(range(1, self.n_pages)) - free)
+        if leaked:
+            raise AssertionError(
+                f"page leak: {len(leaked)} page(s) never returned to the free "
+                f"list: {leaked}"
+            )
+
 
 class BlockTable:
     """Dense [n_slots, n_blocks] int32 map from slot to physical pages.

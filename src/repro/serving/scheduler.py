@@ -30,60 +30,15 @@ admission), so the batch drains fully before any waiting request starts
 """
 from __future__ import annotations
 
-import dataclasses
 from collections import deque
 from typing import Iterable
 
+import numpy as np
+
+from repro.serving.lifecycle import Request
 from repro.serving.paged_kv import BlockTable, PageAllocator
 
-
-@dataclasses.dataclass
-class Request:
-    """One generation request plus its in-flight serving state.
-
-    ``n_fed`` counts tokens pushed through the model this *residency*:
-    positions ``0 .. n_fed-1`` of :attr:`seq` are resident in the paged
-    cache.  Preemption resets it to 0 (the cache rows are gone) while
-    keeping ``out_tokens`` — the replay after re-admission feeds the
-    whole ``prompt + out_tokens`` prefix again and only starts sampling
-    once the chunk that contains the final prefix token completes.
-    """
-
-    rid: int
-    prompt: list[int]
-    max_new_tokens: int
-    arrival: float = 0.0
-    # runtime state (engine-owned)
-    slot: int = -1
-    pages: list[int] = dataclasses.field(default_factory=list)
-    n_fed: int = 0  # tokens of `seq` resident in the cache (this residency)
-    out_tokens: list[int] = dataclasses.field(default_factory=list)
-    n_preempted: int = 0
-    t_admit: float | None = None
-    t_first_token: float | None = None
-    t_finish: float | None = None
-
-    @property
-    def seq(self) -> list[int]:
-        """Every token that must be resident before the next sample:
-        the prompt plus all tokens generated so far.  The engine samples
-        only when ``n_fed`` reaches ``len(seq)`` — the step that fed the
-        newest token; prefill, replay, and decode all fall out of that
-        one rule."""
-        return self.prompt + self.out_tokens
-
-    @property
-    def done(self) -> bool:
-        return len(self.out_tokens) >= self.max_new_tokens
-
-    def n_feed(self, budget: int) -> int:
-        """Tokens to feed this step under a per-slot chunk budget: the
-        rest of the unfed context, capped — exactly 1 once decoding."""
-        return min(budget, len(self.seq) - self.n_fed)
-
-    def next_chunk(self, budget: int) -> tuple[list[int], int]:
-        """(tokens to feed this step, position of the first one)."""
-        return self.seq[self.n_fed : self.n_fed + self.n_feed(budget)], self.n_fed
+__all__ = ["Request", "Scheduler"]  # Request lives in lifecycle; re-exported
 
 
 class Scheduler:
@@ -114,7 +69,9 @@ class Scheduler:
         self.waiting: deque[Request] = deque()
         self.active: dict[int, Request] = {}
         self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
+        self._quarantined: dict[int, float] = {}  # slot -> release tick
         self.n_preemptions = 0
+        self.n_quarantines = 0
 
     # -- queue -------------------------------------------------------------
 
@@ -222,9 +179,64 @@ class Scheduler:
         self._free_slots.append(req.slot)
         req.slot = -1
 
+    def remove_waiting(self, req: Request) -> None:
+        """Pull a request out of the waiting queue (cancellation / load
+        shedding); the caller finalizes its terminal status."""
+        self.waiting.remove(req)
+
+    # -- slot quarantine ---------------------------------------------------
+
+    def quarantine_slot(self, slot: int, until_tick: float) -> None:
+        """Withhold a *free* slot from admission until ``until_tick``
+        (engine loop ticks).  Called right after preempting a faulting
+        request, so a slot that just produced poisoned logits or a step
+        fault sits out instead of immediately re-hosting work."""
+        self._free_slots.remove(slot)
+        self._quarantined[slot] = until_tick
+        self.n_quarantines += 1
+
+    def release_quarantined(self, tick: float | None = None) -> list[int]:
+        """Return expired quarantined slots to the free list (all of them
+        when ``tick`` is None — the end-of-run drain)."""
+        released = [
+            s for s, until in self._quarantined.items()
+            if tick is None or tick >= until
+        ]
+        for s in released:
+            del self._quarantined[s]
+            self._free_slots.append(s)
+        return released
+
+    @property
+    def n_quarantined_slots(self) -> int:
+        return len(self._quarantined)
+
     @property
     def n_free_slots(self) -> int:
         return len(self._free_slots)
 
     def all_done(self) -> bool:
         return not self.waiting and not self.active
+
+    # -- accounting invariants ---------------------------------------------
+
+    def assert_all_reclaimed(self) -> None:
+        """Raise AssertionError unless every slot is accounted for as free
+        (or parked in quarantine) and the block table is fully cleared —
+        the slot-side twin of :meth:`PageAllocator.assert_no_leaks`."""
+        if self.active:
+            raise AssertionError(
+                f"slot leak: {len(self.active)} slot(s) still active: "
+                f"{sorted(self.active)}"
+            )
+        accounted = len(self._free_slots) + len(self._quarantined)
+        if accounted != self.n_slots:
+            raise AssertionError(
+                f"slot leak: {self.n_slots - accounted} of {self.n_slots} "
+                "slot(s) neither free nor quarantined"
+            )
+        stale = int(np.count_nonzero(self.block_table.as_array()))
+        if stale:
+            raise AssertionError(
+                f"block-table leak: {stale} page entr(ies) not cleared"
+            )

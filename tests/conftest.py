@@ -1,4 +1,5 @@
-"""Test bootstrap: provide a `hypothesis` fallback when it isn't installed.
+"""Test bootstrap: provide a `hypothesis` fallback when it isn't installed,
+and bound in-process XLA executable accumulation across the suite.
 
 The seed image lacks `hypothesis`; rather than skip the property tests we
 register tests/_hypothesis_fallback.py as the `hypothesis` module (a
@@ -10,6 +11,26 @@ from __future__ import annotations
 import importlib.util
 import pathlib
 import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _bound_xla_jit_memory():
+    """Drop jit/pjit caches after every test module.
+
+    The suite compiles hundreds of distinct XLA programs (one fused
+    engine step per arch x slot-geometry, plus every kernel variant);
+    on the CPU backend the LLVM JIT keeps them all resident, and late
+    modules have been observed to segfault inside backend_compile once
+    enough executables pile up in one process.  Per-module clearing
+    costs some recompilation but keeps the live-executable count
+    bounded by the largest single module.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
 
 if importlib.util.find_spec("hypothesis") is None:
     _path = pathlib.Path(__file__).with_name("_hypothesis_fallback.py")

@@ -29,6 +29,28 @@ def _lp_row(arm, rate, *, tps=100.0, gen=300, ttft99=0.5):
     }
 
 
+def _chaos_row(arch, family):
+    return {
+        "arch": arch, "family": family, "fault_rate": 0.2, "n_requests": 8,
+        "statuses": {"ok": 8}, "n_token_mismatch": 0,
+        "leaked_pages": 0, "leaked_slots": 0,
+        "injected": {"step": 5, "alloc": 4, "nan": 6},
+    }
+
+
+def _deadline_block():
+    return {
+        "n_requests": 6,
+        "statuses": {"ok": 4, "shed": 2},
+        "classes": [
+            {"slo": "interactive", "n": 3, "n_ok": 1, "n_shed": 2,
+             "deadline_violations_ok": 0},
+            {"slo": "batch", "n": 3, "n_ok": 3, "n_shed": 0,
+             "deadline_violations_ok": 0},
+        ],
+    }
+
+
 @pytest.fixture
 def serving_fixture():
     return {
@@ -44,6 +66,12 @@ def serving_fixture():
                 _lp_row("chunked-on-demand", 128.0, tps=150.0, ttft99=0.2),
             ],
         },
+        "chaos": {
+            "fault_rate": 0.2,
+            "results": [_chaos_row("llama3.2-3b", "attn"),
+                        _chaos_row("mamba2-130m", "ssm")],
+        },
+        "deadlines": _deadline_block(),
     }
 
 
@@ -96,6 +124,125 @@ def test_serving_tolerance_absorbs_noise(serving_fixture):
             r["tokens_per_s"] = 450.0  # 0.9x static: within tolerance
     assert ci.check_serving(d, tolerance=0.85) == []
     assert ci.check_serving(d, tolerance=0.95) != []
+
+
+# ---------------------------------------------------------------------------
+# chaos / lifecycle gates (PR 6): each one must fail on a doctored fixture
+# ---------------------------------------------------------------------------
+
+
+def _chaos_only_fixture():
+    return {
+        "smoke": True,
+        "chaos_only": True,
+        "chaos": {"fault_rate": 0.2,
+                  "results": [_chaos_row("llama3.2-3b", "attn"),
+                              _chaos_row("mamba2-130m", "ssm")]},
+        "deadlines": _deadline_block(),
+        "skipped": ["policy_sweep (chaos-only artifact)"],
+    }
+
+
+def test_chaos_only_fixture_passes():
+    assert ci.check_serving(_chaos_only_fixture()) == []
+
+
+def test_chaos_page_or_slot_leak_fails():
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["leaked_pages"] = 2
+    assert any("leaked page" in e for e in ci.check_serving(d))
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][1]["leaked_slots"] = 1
+    assert any("leaked slot" in e for e in ci.check_serving(d))
+
+
+def test_chaos_token_divergence_fails():
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["n_token_mismatch"] = 1
+    assert any("token-identical" in e for e in ci.check_serving(d))
+
+
+def test_chaos_missing_terminal_status_fails():
+    # a request vanished without a terminal status: counts don't add up
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["statuses"] = {"ok": 7}  # n_requests == 8
+    assert any("terminal status" in e for e in ci.check_serving(d))
+    # unknown status value
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["statuses"] = {"ok": 7, "vanished": 1}
+    assert any("unknown terminal status" in e for e in ci.check_serving(d))
+    # statuses key missing entirely
+    d = _chaos_only_fixture()
+    del d["chaos"]["results"][0]["statuses"]
+    assert any("statuses missing" in e for e in ci.check_serving(d))
+
+
+def test_chaos_failed_requests_fail_gate():
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["statuses"] = {"ok": 7, "failed": 1}
+    assert any("'failed'" in e for e in ci.check_serving(d))
+
+
+def test_chaos_underpowered_fault_rate_fails():
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["fault_rate"] = 0.05
+    assert any("< 0.2" in e for e in ci.check_serving(d))
+    d = _chaos_only_fixture()
+    d["chaos"]["results"][0]["injected"]["nan"] = 0  # family never fired
+    assert any("zero nan faults" in e for e in ci.check_serving(d))
+
+
+def test_chaos_must_cover_both_families():
+    d = _chaos_only_fixture()
+    d["chaos"]["results"] = [r for r in d["chaos"]["results"]
+                             if r["family"] == "attn"]
+    assert any("attn and ssm" in e for e in ci.check_serving(d))
+
+
+def test_deadline_gates():
+    d = _chaos_only_fixture()
+    d["deadlines"]["classes"][0]["deadline_violations_ok"] = 1
+    assert any("past their deadline" in e for e in ci.check_serving(d))
+    d = _chaos_only_fixture()
+    d["deadlines"]["statuses"] = {"ok": 6}
+    assert any("nothing shed" in e for e in ci.check_serving(d))
+
+
+def test_full_run_requires_lifecycle_sweeps(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    del d["chaos"]
+    assert any("missing the chaos sweep" in e for e in ci.check_serving(d))
+    d = copy.deepcopy(serving_fixture)
+    del d["deadlines"]
+    assert any("missing the deadlines sweep" in e for e in ci.check_serving(d))
+
+
+def test_smoke_run_must_declare_skipped_sweeps(serving_fixture):
+    d = copy.deepcopy(serving_fixture)
+    d["smoke"] = True
+    del d["chaos"], d["deadlines"]
+    errs = ci.check_serving(d)  # skipped silently: both sections flagged
+    assert sum("vanish silently" in e for e in errs) == 2
+    d["skipped"] = ["chaos_sweep (covered by --smoke --chaos)",
+                    "deadline_sweep (covered by --smoke --chaos)"]
+    assert ci.check_serving(d) == []
+
+
+def test_nan_literal_in_artifact_rejected(tmp_path):
+    """json.dumps happily writes NaN; the gate must reject it for every
+    artifact kind, not just serving."""
+    d = {"smoke": True, "results": [], "latency_p50": float("nan")}
+    p = tmp_path / "BENCH_serving_smoke.json"
+    p.write_text(json.dumps(d))  # emits the invalid `NaN` literal
+    errs = ci.run(str(p))
+    assert len(errs) == 1 and "NaN" in errs[0] and "null" in errs[0]
+    k = tmp_path / "BENCH_kernels_smoke.json"
+    k.write_text(json.dumps({"prepack": [{"us": float("inf")}]}))
+    assert any("Infinity" in e for e in ci.run(str(k)))
+
+
+def test_chaos_artifact_kind_inferred():
+    assert ci.infer_kind(pathlib.Path("BENCH_serving_chaos_smoke.json")) == "serving"
 
 
 def test_plan_gate():
@@ -161,7 +308,9 @@ def test_kind_inference_and_cli(tmp_path, serving_fixture):
 def test_real_committed_artifacts_pass():
     """The trajectory files committed at the repo root must satisfy the
     very gate CI applies to their smoke twins."""
-    for name in ("BENCH_serving.json", "artifacts/packing_efficiency.json"):
+    for name in ("BENCH_serving.json", "BENCH_serving_smoke.json",
+                 "BENCH_serving_chaos_smoke.json",
+                 "artifacts/packing_efficiency.json"):
         path = ROOT / name
         assert path.exists(), name
         assert ci.run(str(path)) == [], name

@@ -1,0 +1,75 @@
+"""Unit tests for runtime/fault_tolerance.py edge cases the integration
+test (tests/test_substrates.py) does not pin down: recovery when no
+checkpoint exists yet, retry-budget exhaustion, and the straggler EWMA
+policy in isolation.  The engine's serving-side fault layer
+(tests/test_chaos.py) mirrors these semantics; keeping the training-side
+runner honest keeps the two recovery stories aligned."""
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault_tolerance import FaultTolerantRunner, RunnerConfig
+
+
+def _counting_step(state, batch):
+    state = {"x": state["x"] + 1}
+    return jnp.asarray(state["x"], jnp.float32), state
+
+
+def test_failure_before_first_checkpoint_resumes_from_initial_state(tmp_path):
+    """A step that dies before ANY checkpoint was committed must retry
+    from the in-memory (initial) state rather than crash on a missing
+    checkpoint — and must not double-apply the failed step."""
+    ckpt = CheckpointManager(str(tmp_path))
+    fails = {"left": 2}
+
+    def injector(step):
+        if step == 0 and fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("host died before the first checkpoint")
+
+    runner = FaultTolerantRunner(_counting_step, ckpt, RunnerConfig(ckpt_every=100))
+    state, stats = runner.run(
+        {"x": jnp.asarray(0, jnp.int32)}, lambda i: i, 5, failure_injector=injector
+    )
+    assert stats.restarts == 2
+    assert stats.steps == 5
+    # every step applied exactly once despite the two retries of step 0
+    assert int(state["x"]) == 5
+
+
+def test_max_retries_exhaustion_reraises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+
+    def always_dies(step):
+        raise RuntimeError("persistent failure")
+
+    runner = FaultTolerantRunner(
+        _counting_step, ckpt, RunnerConfig(ckpt_every=100, max_retries=2)
+    )
+    with pytest.raises(RuntimeError, match="persistent failure"):
+        runner.run({"x": jnp.asarray(0, jnp.int32)}, lambda i: i, 5,
+                   failure_injector=always_dies)
+    # max_retries consecutive restores were attempted before giving up
+    assert runner.stats.restarts == 3  # the raising attempt counts too
+    assert runner.stats.steps == 0
+
+
+def test_straggler_ewma_fires_callback(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    seen: list[tuple[int, float]] = []
+    runner = FaultTolerantRunner(
+        _counting_step, ckpt,
+        RunnerConfig(straggler_factor=3.0, ewma_alpha=0.2),
+        on_straggler=lambda step, dt: seen.append((step, dt)),
+    )
+    runner._straggler_check(0, 1.0)  # seeds the EWMA, can never fire
+    assert runner.stats.stragglers == 0 and runner._ewma == 1.0
+    runner._straggler_check(1, 2.0)  # 2.0 < 3.0x EWMA: not a straggler
+    assert runner.stats.stragglers == 0
+    ewma = runner._ewma
+    runner._straggler_check(2, 10.0)  # >> factor x EWMA: fires
+    assert runner.stats.stragglers == 1
+    assert seen == [(2, 10.0)]
+    # the slow step still folds into the EWMA afterwards
+    assert runner._ewma == pytest.approx(0.8 * ewma + 0.2 * 10.0)

@@ -123,9 +123,9 @@ def test_engine_completes_and_leaks_nothing(arch):
     for r in reqs:
         assert len(r.out_tokens) == r.max_new_tokens
         assert r.t_finish is not None and r.pages == [] and r.slot == -1
+        assert r.status == "ok"
     # no page leaks, no slot leaks after all requests finish
-    assert eng.allocator.n_free == eng.allocator.n_usable
-    assert eng.scheduler.n_free_slots == eng.ecfg.n_slots
+    eng.assert_no_leaks()
     assert eng.scheduler.all_done()
 
 
@@ -152,7 +152,7 @@ def test_pool_exhaustion_waits_never_crashes():
     m = eng.run(realtime=False)
     assert m["n_requests"] == 3
     assert max_active == 1  # admission waited on the page budget
-    assert eng.allocator.n_free == eng.allocator.n_usable
+    eng.assert_no_leaks()
 
 
 def test_infeasible_request_rejected_up_front():
@@ -243,8 +243,7 @@ def test_forced_preemption_resumes_token_identical(arch):
         assert req.out_tokens == diffcheck.greedy_decode_reference(
             params, cfg, None, prompt, max_new
         ), f"rid {req.rid} diverged after {req.n_preempted} preemption(s)"
-    assert eng.allocator.n_free == eng.allocator.n_usable
-    assert eng.scheduler.n_free_slots == eng.ecfg.n_slots
+    eng.assert_no_leaks()
 
 
 def test_chunked_prefill_needs_fewer_steps():
@@ -351,7 +350,7 @@ def test_pool_sized_for_exactly_one_request():
     m = eng.run(realtime=False)
     assert m["n_requests"] == 3
     assert seen == 1
-    assert eng.allocator.n_free == eng.allocator.n_usable
+    eng.assert_no_leaks()
     assert eng.scheduler.all_done()
 
 
@@ -465,7 +464,143 @@ def test_engine_serves_overpacked_stack_bitexact_vs_unpaged():
         assert req.out_tokens == diffcheck.greedy_decode_reference(
             applied, cfg, head, prompt, max_new
         )
-    assert eng.allocator.n_free == eng.allocator.n_usable
+    eng.assert_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle: deadlines, cancellation, load shedding, watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_slo_resolves_absolute_deadlines():
+    from repro.serving import SLO
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, page_size=4, max_len=16))
+    slo = SLO("interactive", ttft_budget=3.0, total_budget=9.0)
+    req = eng.submit([1, 2, 3], max_new_tokens=2, arrival=2.0, slo=slo)
+    assert req.ttft_deadline == 5.0 and req.deadline == 11.0
+    assert req.slo == "interactive"
+    # explicit deadlines beat the SLO's resolved ones
+    req2 = eng.submit([1, 2], max_new_tokens=2, arrival=2.0, slo=slo, deadline=4.0)
+    assert req2.deadline == 4.0 and req2.ttft_deadline == 5.0
+
+
+def test_deadline_expiry_sheds_waiting_request():
+    """One slot, a long occupant, and a waiting request whose total
+    deadline passes while it queues: the engine sheds it deterministically
+    and finishes the rest — every request ends with a terminal status."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, page_size=4, max_len=32))
+    p1, p2 = _prompts(jax.random.PRNGKey(2), 2, [3, 3], cfg.vocab)
+    r1 = eng.submit(p1, max_new_tokens=12)  # occupies the slot ~14 steps
+    r2 = eng.submit(p2, max_new_tokens=2, deadline=5.0)
+    m = eng.run(realtime=False)
+    assert r1.status == "ok" and len(r1.out_tokens) == 12
+    assert r2.status == "shed" and r2.shed_reason in ("deadline", "infeasible")
+    assert r2.out_tokens == [] and r2.t_finish is not None
+    assert m["statuses"] == {"ok": 1, "shed": 1}
+    assert m["n_requests"] == 2 and m["n_ok"] == 1
+    eng.assert_no_leaks()
+
+
+def test_ttft_deadline_sheds_before_first_token():
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, page_size=4, max_len=32))
+    p1, p2 = _prompts(jax.random.PRNGKey(3), 2, [3, 3], cfg.vocab)
+    r1 = eng.submit(p1, max_new_tokens=10)
+    r2 = eng.submit(p2, max_new_tokens=8, ttft_deadline=4.0)  # slot busy till ~12
+    eng.run(realtime=False)
+    assert r1.status == "ok"
+    assert r2.status == "shed" and r2.shed_reason in ("ttft", "infeasible")
+    assert r2.t_first_token is None
+    eng.assert_no_leaks()
+
+
+def test_cancel_waiting_and_mid_decode():
+    """Cancellation is cooperative: a waiting request is finalized with no
+    output, an active one mid-decode keeps its partial tokens; cancelling
+    an already-terminal request is a no-op returning False."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, page_size=4, max_len=32))
+    p1, p2 = _prompts(jax.random.PRNGKey(5), 2, [3, 3], cfg.vocab)
+    r1 = eng.submit(p1, max_new_tokens=10)
+    r2 = eng.submit(p2, max_new_tokens=4)
+    assert eng.cancel(r2) is True  # still pending: cancelled at first policing
+    orig = eng._step_once
+
+    def cancel_mid_decode(now_fn):
+        if len(r1.out_tokens) == 3:  # mid-generation
+            eng.cancel(r1)
+        orig(now_fn)
+
+    eng._step_once = cancel_mid_decode
+    m = eng.run(realtime=False)
+    assert r2.status == "cancelled" and r2.out_tokens == []
+    assert r1.status == "cancelled" and 0 < len(r1.out_tokens) < 10
+    assert m["statuses"] == {"cancelled": 2}
+    assert eng.cancel(r1) is False  # already terminal
+    eng.assert_no_leaks()
+
+
+def test_bounded_queue_sheds_least_slack():
+    """max_waiting=1 with two queued requests: the one with the tighter
+    (finite) deadline has less slack and is shed as queue overflow; the
+    unbounded one survives to completion."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(n_slots=1, page_size=4, max_len=32, max_waiting=1),
+    )
+    p = _prompts(jax.random.PRNGKey(6), 3, [3, 3, 3], cfg.vocab)
+    r1 = eng.submit(p[0], max_new_tokens=6)
+    r2 = eng.submit(p[1], max_new_tokens=2)  # no deadline: infinite slack
+    r3 = eng.submit(p[2], max_new_tokens=2, deadline=100.0)  # feasible, finite
+    m = eng.run(realtime=False)
+    assert r1.status == "ok" and r2.status == "ok"
+    assert r3.status == "shed" and r3.shed_reason == "queue-overflow"
+    assert m["statuses"] == {"ok": 2, "shed": 1}
+    eng.assert_no_leaks()
+
+
+def test_watchdog_sheds_instead_of_crashing():
+    """A permanently failing allocator used to stall run() into a
+    RuntimeError; now the watchdog sheds the unplaceable head after
+    watchdog_ticks idle iterations and run() returns cleanly."""
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(n_slots=1, page_size=4, max_len=16, watchdog_ticks=5),
+    )
+    req = eng.submit([1, 2, 3], max_new_tokens=2)
+    eng.allocator.alloc = lambda n: None  # pool permanently "exhausted"
+    m = eng.run(realtime=False)  # must not raise
+    assert req.status == "shed" and req.shed_reason == "watchdog"
+    assert m["statuses"] == {"shed": 1}
+    eng.assert_no_leaks()
+
+
+def test_metrics_percentiles_none_not_nan():
+    """Empty percentile inputs must surface as None (JSON null), never
+    float('nan') — json.dumps(..., allow_nan=False) must round-trip."""
+    import json
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, EngineConfig(n_slots=1, page_size=4, max_len=16))
+    req = eng.submit([1, 2], max_new_tokens=2, deadline=0.0)  # expired at birth
+    m = eng.run(realtime=False)
+    assert req.status == "shed"
+    assert m["latency_p50"] is None and m["latency_p99"] is None
+    assert m["ttft_p50"] is None and m["ttft_p99"] is None
+    text = json.dumps(m, allow_nan=False)  # raises on any NaN/Infinity
+    assert "NaN" not in text
 
 
 def test_moe_forward_packed_experts_finite():
