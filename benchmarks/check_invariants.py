@@ -270,6 +270,154 @@ def check_kernels(d: dict) -> list[str]:
     return errs
 
 
+def check_trace(d: dict) -> list[str]:
+    """Chrome trace gate: the exported event stream must reconcile with
+    the engine's own accounting (carried in the ``repro`` metadata block).
+
+    * every request owns exactly one terminal (async-end) span, and the
+      per-status counts match the engine's ``statuses``;
+    * sync ``B``/``E`` spans nest per thread and never dangle, async
+      ``b``/``e`` spans balance per (id, name) and never dangle;
+    * the count of ``X`` step spans equals ``metrics()["steps"]``;
+    * chaos traces carry exactly one ``inject_*`` instant per counted
+      injected fault, per family;
+    * the bounded ring buffer never dropped events (a gated trace must
+      be complete — size the capacity up, don't gate a partial trace).
+    """
+    errs: list[str] = []
+    evs = d.get("traceEvents")
+    meta = d.get("repro")
+    if not isinstance(evs, list) or not evs:
+        return ["trace: traceEvents missing/empty"]
+    if not isinstance(meta, dict):
+        return ["trace: repro metadata block missing — nothing to gate against"]
+    if meta.get("dropped", 0):
+        errs.append(
+            f"trace: ring buffer dropped {meta['dropped']} event(s) — a "
+            "gated trace must be complete (raise the recorder capacity)"
+        )
+    # -- sync span nesting (B/E per tid; X is self-contained) --------------
+    stacks: dict = {}
+    for e in evs:
+        ph = e.get("ph")
+        if ph == "B":
+            stacks.setdefault(e.get("tid", 0), []).append(e.get("name"))
+        elif ph == "E":
+            stack = stacks.setdefault(e.get("tid", 0), [])
+            if not stack:
+                errs.append(f"trace: E {e.get('name')!r} with no open B span")
+            elif stack[-1] != e.get("name"):
+                errs.append(
+                    f"trace: span crossing — E {e.get('name')!r} closes "
+                    f"innermost B {stack[-1]!r}"
+                )
+                stack.pop()
+            else:
+                stack.pop()
+    for tid, stack in stacks.items():
+        if stack:
+            errs.append(f"trace: dangling B span(s) {stack} on tid {tid}")
+    # -- async request spans (b/e per id+name) -----------------------------
+    open_async: dict = {}
+    terminal: dict = {}
+    for e in evs:
+        ph = e.get("ph")
+        if ph not in ("b", "e"):
+            continue
+        key = (e.get("id"), e.get("name"))
+        if ph == "b":
+            open_async[key] = open_async.get(key, 0) + 1
+        else:
+            if open_async.get(key, 0) < 1:
+                errs.append(f"trace: async e {key} with no open b span")
+            else:
+                open_async[key] -= 1
+            if e.get("name") == "request":
+                rid = e.get("id")
+                if rid in terminal:
+                    errs.append(
+                        f"trace: request {rid} has more than one terminal span"
+                    )
+                terminal[rid] = ((e.get("args") or {}).get("status"))
+    dangling = [k for k, n in open_async.items() if n]
+    if dangling:
+        errs.append(f"trace: dangling async span(s) {sorted(dangling)[:8]}")
+    n_requests = meta.get("n_requests")
+    if n_requests is not None and len(terminal) != n_requests:
+        errs.append(
+            f"trace: {len(terminal)} terminal request span(s) for "
+            f"{n_requests} finished request(s) — every request must own "
+            "exactly one"
+        )
+    statuses = meta.get("statuses")
+    if isinstance(statuses, dict):
+        from collections import Counter
+
+        got = dict(Counter(s for s in terminal.values() if s is not None))
+        if got != statuses:
+            errs.append(
+                f"trace: terminal-span statuses {got} != engine statuses "
+                f"{statuses}"
+            )
+    # -- step accounting ---------------------------------------------------
+    n_steps = sum(1 for e in evs if e.get("ph") == "X" and e.get("name") == "step")
+    if meta.get("steps") is not None and n_steps != meta["steps"]:
+        errs.append(
+            f"trace: {n_steps} step span(s) vs engine steps={meta['steps']}"
+        )
+    # -- chaos injection accounting ----------------------------------------
+    injected = meta.get("injected")
+    if isinstance(injected, dict):
+        for fam, want in injected.items():
+            got = sum(1 for e in evs if e.get("name") == f"inject_{fam}")
+            if got != want:
+                errs.append(
+                    f"trace: {got} inject_{fam} event(s) vs {want} counted "
+                    "injected fault(s) — injections must be traced 1:1"
+                )
+    return errs
+
+
+def check_drift(d: dict) -> list[str]:
+    """Plan-drift report: the predict-vs-measure loop must stay closed.
+
+    The artifact must cover a genuinely mixed plan (>= 3 distinct bit
+    pairs), carry a positive measured time and predicted cost per layer,
+    and have per-layer shares on both sides that sum to ~1 (a share that
+    doesn't is a normalization bug, not a measurement)."""
+    errs: list[str] = []
+    layers = d.get("layers") or []
+    if not layers:
+        return ["drift: no per-layer rows"]
+    if d.get("n_distinct_bit_pairs", 0) < 3:
+        errs.append(
+            f"drift: {d.get('n_distinct_bit_pairs')} distinct bit pair(s) — "
+            "the drift report must cover a >= 3-pair mixed plan"
+        )
+    for share_key in ("predicted_share", "measured_share"):
+        total = sum(l.get(share_key) or 0.0 for l in layers)
+        if abs(total - 1.0) > 1e-6:
+            errs.append(f"drift: {share_key} sums to {total}, not 1")
+    for l in layers:
+        tag = f"drift[{l.get('name', '?')}]"
+        if (l.get("measured_us") or 0) <= 0:
+            errs.append(f"{tag}: non-positive measured_us {l.get('measured_us')}")
+        if (l.get("predicted_dsp_ops") or 0) <= 0:
+            errs.append(
+                f"{tag}: non-positive predicted cost {l.get('predicted_dsp_ops')}"
+            )
+        if (l.get("drift") or 0) <= 0:
+            errs.append(f"{tag}: non-positive drift ratio {l.get('drift')}")
+    n_inv = d.get("rank_inversions")
+    pairs = d.get("inverted_layer_pairs")
+    if isinstance(pairs, list) and n_inv != len(pairs):
+        errs.append(
+            f"drift: rank_inversions={n_inv} but {len(pairs)} inverted pair(s) "
+            "listed"
+        )
+    return errs
+
+
 def check_deploy_plan(d: dict) -> list[str]:
     layers = d.get("layers") or []
     if not layers:
@@ -289,6 +437,8 @@ CHECKS = {
     "packing": check_packing,
     "kernels": check_kernels,
     "deploy-plan": check_deploy_plan,
+    "trace": check_trace,
+    "drift": check_drift,
 }
 
 
@@ -296,7 +446,9 @@ def infer_kind(path: pathlib.Path) -> str | None:
     name = path.name.lower()
     if "plans" in [p.lower() for p in path.parts[:-1]]:
         return "deploy-plan"
-    for kind in ("serving", "plan", "packing", "kernels"):
+    # order matters: "trace_serving_attn.json" is a trace, not a serving
+    # bench, and "plan_drift.json" is a drift report, not a plan bench
+    for kind in ("trace", "drift", "serving", "plan", "packing", "kernels"):
         if kind in name:
             return kind
     return None

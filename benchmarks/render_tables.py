@@ -1,17 +1,58 @@
-"""Render the EXPERIMENTS.md tables from dry-run artifacts."""
+"""Render the EXPERIMENTS.md tables from dry-run / bench artifacts.
+
+Every table renders between paired markers (``<!-- NAME -->`` ...
+``<!-- /NAME -->``) so re-rendering is idempotent: the previous table is
+replaced, not appended after a consumed placeholder.  Legacy single
+markers are upgraded to the paired form on first render.
+
+Missing inputs are never fatal — a table over absent artifacts renders
+as an explicit "(no artifacts)" stub, and a missing EXPERIMENTS.md is
+seeded from the built-in skeleton.  CI therefore runs this on any
+artifact subset.
+"""
 from __future__ import annotations
 
 import json
 import pathlib
+import re
 
 from benchmarks import roofline
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
+SKELETON = """\
+# Experiments
+
+Rendered by `python -m benchmarks.render_tables` from `artifacts/`.
+
+## Dry-run footprint
+
+<!-- DRYRUN_TABLE -->
+
+## Roofline
+
+<!-- ROOFLINE_TABLE -->
+
+## Sharding sweep deltas
+
+<!-- SWEEP_DELTA_TABLE -->
+
+## Plan drift (predicted vs measured)
+
+<!-- PLAN_DRIFT_TABLE -->
+"""
+
+_EMPTY = "_(no artifacts)_"
+
+
+def _table(header: list[str], rows: list[str]) -> str:
+    if not rows:
+        return _EMPTY
+    return "\n".join(header + rows)
+
 
 def dryrun_table() -> str:
-    rows = ["| arch | shape | mesh | chips | mem GB/dev | jaxpr FLOPs | coll B/chip | compile s |",
-            "|---|---|---|---|---|---|---|---|"]
+    rows = []
     for path in sorted((ROOT / "artifacts" / "dryrun").glob("*.json")):
         rec = json.loads(path.read_text())
         if rec.get("serve_int8") or rec.get("overrides"):
@@ -22,26 +63,32 @@ def dryrun_table() -> str:
             f"| {rec.get('jaxpr_cost', {}).get('flops', 0):.3e} "
             f"| {rec['collectives']['total_bytes']:.3e} | {rec['compile_s']} |"
         )
-    return "\n".join(rows)
+    return _table(
+        ["| arch | shape | mesh | chips | mem GB/dev | jaxpr FLOPs | coll B/chip | compile s |",
+         "|---|---|---|---|---|---|---|---|"],
+        rows,
+    )
 
 
 def roofline_table() -> str:
-    rows = ["| arch | shape | compute s | memory s | collective s | dominant | useful | roofline frac | mem GB/dev |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    rows = []
     for r in roofline.load_all("single"):
         rows.append(
             f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
             f"| {r['collective_s']:.3e} | {r['dominant']} | {r['useful_ratio']:.2f} "
             f"| {r['roofline_fraction']:.3f} | {r['mem_gb_per_dev']} |"
         )
-    return "\n".join(rows)
+    return _table(
+        ["| arch | shape | compute s | memory s | collective s | dominant | useful | roofline frac | mem GB/dev |",
+         "|---|---|---|---|---|---|---|---|---|"],
+        rows,
+    )
 
 
 def sweep_delta_table() -> str:
     base_dir = ROOT / "artifacts" / "dryrun_baseline"
     opt_dir = ROOT / "artifacts" / "dryrun"
-    rows = ["| cell | coll B/chip baseline | optimized | delta | mem GB baseline | optimized |",
-            "|---|---|---|---|---|---|"]
+    rows = []
     for path in sorted(opt_dir.glob("*__single.json")):
         b_path = base_dir / path.name
         if not b_path.exists():
@@ -54,16 +101,73 @@ def sweep_delta_table() -> str:
         rows.append(
             f"| {opt['arch']}/{opt['shape']} | {cb:.2e} | {co:.2e} | {delta:+.0f}% | {mb} | {mo} |"
         )
-    return "\n".join(rows)
+    return _table(
+        ["| cell | coll B/chip baseline | optimized | delta | mem GB baseline | optimized |",
+         "|---|---|---|---|---|---|"],
+        rows,
+    )
+
+
+def plan_drift_table(report_path: pathlib.Path | None = None) -> str:
+    """Per-layer predicted-vs-measured cost shares from the drift report
+    (``python -m repro.obs.drift``), plus the rank-inversion summary that
+    says whether the plan compiler's DSP-op layer ranking survived
+    contact with the measured backend."""
+    path = report_path or ROOT / "artifacts" / "plan_drift.json"
+    if not path.exists():
+        return _EMPTY
+    rep = json.loads(path.read_text())
+    rows = []
+    for i, r in enumerate(rep.get("layers", [])):
+        if r.get("drift") is not None:
+            cells = (f"{r['predicted_share']:.3f} | {r['measured_share']:.3f} "
+                     f"| {r['drift']:.2f}x")
+        else:
+            cells = "— | — | —"
+        rows.append(f"| {i} | w{r['w_bits']}a{r['a_bits']} | {cells} |")
+    table = _table(
+        ["| layer | bits | predicted share | measured share | drift |",
+         "|---|---|---|---|---|"],
+        rows,
+    )
+    summary = (
+        f"`{rep.get('arch', '?')}` plan `{rep.get('plan_hash', '?')}` on the "
+        f"`{rep.get('backend', '?')}` backend, {rep.get('n_distinct_bit_pairs', 0)} "
+        f"distinct bit pairs: **{rep.get('rank_inversions', 0)} of "
+        f"{rep.get('n_layer_pairs', 0)}** layer-cost rank pairs inverted "
+        f"(pair-level: {rep.get('pair_rank_inversions', 0)})."
+    )
+    return f"{summary}\n\n{table}"
+
+
+TABLES = {
+    "DRYRUN_TABLE": dryrun_table,
+    "ROOFLINE_TABLE": roofline_table,
+    "SWEEP_DELTA_TABLE": sweep_delta_table,
+    "PLAN_DRIFT_TABLE": plan_drift_table,
+}
+
+
+def render(md: str) -> str:
+    """Substitute every known marker in ``md`` (idempotently)."""
+    for name, fn in TABLES.items():
+        begin, end = f"<!-- {name} -->", f"<!-- /{name} -->"
+        block = f"{begin}\n{fn()}\n{end}"
+        if begin in md and end in md:
+            md = re.sub(
+                re.escape(begin) + r".*?" + re.escape(end),
+                lambda _m: block, md, count=1, flags=re.S,
+            )
+        elif begin in md:
+            md = md.replace(begin, block, 1)
+    return md
 
 
 def main() -> None:
-    md = (ROOT / "EXPERIMENTS.md").read_text()
-    md = md.replace("<!-- DRYRUN_TABLE -->", dryrun_table())
-    md = md.replace("<!-- ROOFLINE_TABLE -->", roofline_table())
-    md = md.replace("<!-- SWEEP_DELTA_TABLE -->", sweep_delta_table())
-    (ROOT / "EXPERIMENTS.md").write_text(md)
-    print("tables rendered into EXPERIMENTS.md")
+    target = ROOT / "EXPERIMENTS.md"
+    md = target.read_text() if target.exists() else SKELETON
+    target.write_text(render(md))
+    print(f"tables rendered into {target}")
 
 
 if __name__ == "__main__":

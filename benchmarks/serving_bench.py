@@ -38,9 +38,15 @@ are *errors*, not silent no-ops, and every scenario a mode skips is
 logged explicitly (``skipped,...`` lines + the artifact's ``skipped``
 list) — a CI smoke run measures exactly what it claims.
 
+``--trace`` additionally exports Chrome trace JSON (Perfetto-loadable)
+under ``artifacts/traces/``: a traced lifecycle run per engine family
+(and, with ``--chaos``, the chaos arm's trace, whose injection events
+the trace gate reconciles against the injected-fault counters).
+
   python benchmarks/serving_bench.py                 # full sweep (3 rates)
   python benchmarks/serving_bench.py --rates 8,64    # custom full sweep
   python benchmarks/serving_bench.py --smoke         # CI artifact
+  python benchmarks/serving_bench.py --smoke --trace # CI trace artifact
   python benchmarks/serving_bench.py --smoke --chaos # CI chaos artifact
 """
 from __future__ import annotations
@@ -60,6 +66,7 @@ for _p in (str(_ROOT), str(_ROOT / "src")):  # support `python benchmarks/servin
 BENCH_JSON = _ROOT / "BENCH_serving.json"
 BENCH_JSON_SMOKE = _ROOT / "BENCH_serving_smoke.json"  # never the committed file
 BENCH_JSON_CHAOS_SMOKE = _ROOT / "BENCH_serving_chaos_smoke.json"  # chaos CI gate
+TRACES_DIR = _ROOT / "artifacts" / "traces"  # --trace output (CI-gated, not committed)
 
 # the long-prompt admit sweep's chunk budget (on-demand arm)
 CHUNK_TOKENS = 8
@@ -233,6 +240,48 @@ def _lifecycle_engine(arch: str, *, chaos=None, **ecfg_kw):
     return Engine(cfg, params, EngineConfig(**ecfg_kw), chaos=chaos)
 
 
+def trace_sweep(args, smoke: bool) -> dict:
+    """Traced end-to-end run on BOTH engine families (the trace-smoke gate).
+
+    The chaos sweep's tight on-demand geometry (without chaos) guarantees
+    the trace exercises preemption/requeue alongside the ordinary
+    queued → prefill-chunk → decode → ok lifecycle; the exported Chrome
+    traces land under ``artifacts/traces/`` and must pass every
+    ``check_invariants.py --kind trace`` gate (terminal-span uniqueness,
+    span nesting, step-count == metrics, injection accounting).
+    """
+    from repro.configs import get_config
+
+    n_requests = 8 if smoke else 16
+    shape = dict(n_slots=4, page_size=8, max_len=32, n_pages=9,
+                 admit="on-demand", chunk_tokens=4)
+    out = {}
+    for arch, family in CHAOS_ARCHS:
+        vocab = get_config(arch, smoke=True).vocab
+        # long-ish sequences: worst case 4 pages/slot vs 8 usable pages, so
+        # the pool oversubscribes and the trace records organic
+        # preemption/requeue alongside the ordinary lifecycle
+        wl = make_workload(n_requests, 2.0, seed=args.seed + 5, vocab=vocab,
+                           prompt_range=(8, 17), gen_range=(8, 16))
+        eng = _lifecycle_engine(arch, **shape)
+        for w in wl:
+            eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
+        eng.warmup()
+        path = TRACES_DIR / f"trace_serving_{family}.json"
+        m = eng.run(realtime=False, trace=str(path))
+        out[family] = {
+            "path": str(path.relative_to(_ROOT)),
+            "steps": m["steps"],
+            "statuses": m["statuses"],
+            "preemptions": m["preemptions"],
+        }
+        print(
+            f"trace_{family},0.0,steps={m['steps']};"
+            f"preemptions={m['preemptions']};path={out[family]['path']}"
+        )
+    return out
+
+
 def chaos_sweep(args, smoke: bool) -> list[dict]:
     """All three fault families at ``CHAOS_RATE`` on attn + ssm archs.
 
@@ -260,12 +309,12 @@ def chaos_sweep(args, smoke: bool) -> list[dict]:
         wl = make_workload(n_requests, 2.0, seed=args.seed + 2, vocab=vocab,
                            prompt_range=(4, 13), gen_range=(4, 11))
 
-        def run_one(chaos):
+        def run_one(chaos, trace=None):
             eng = _lifecycle_engine(arch, chaos=chaos, **shape)
             for w in wl:
                 eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
             eng.warmup()
-            m = eng.run(realtime=False)
+            m = eng.run(realtime=False, trace=trace)
             return eng, m
 
         ref_eng, ref_m = run_one(None)
@@ -275,7 +324,10 @@ def chaos_sweep(args, smoke: bool) -> list[dict]:
         ref_out = {r.rid: list(r.out_tokens) for r in ref_eng.finished}
         chaos = ChaosConfig(seed=args.seed + 3, step_fault_rate=CHAOS_RATE,
                             alloc_fault_rate=CHAOS_RATE, nan_rate=CHAOS_RATE)
-        eng, m = run_one(chaos)
+        # the chaos arm is the traced one: its trace must carry exactly one
+        # injection event per counted injected fault (the chaos trace gate)
+        trace_path = TRACES_DIR / f"trace_chaos_{family}.json" if args.trace else None
+        eng, m = run_one(chaos, trace=str(trace_path) if trace_path else None)
         mismatch = sum(
             1 for r in eng.finished
             if r.status == "ok" and r.out_tokens != ref_out[r.rid]
@@ -296,6 +348,8 @@ def chaos_sweep(args, smoke: bool) -> list[dict]:
             "ref_steps": ref_m["steps"],
             "generated_tokens_ok": m["generated_tokens_ok"],
         }
+        if trace_path is not None:
+            row["trace"] = str(trace_path.relative_to(_ROOT))
         rows.append(row)
         print(
             f"chaos_{family},0.0,"
@@ -321,6 +375,7 @@ def deadline_sweep(args, smoke: bool) -> dict:
     from collections import Counter
 
     from repro.configs import get_config
+    from repro.obs.metrics import percentile
     from repro.serving import SLO
 
     vocab = get_config(args.arch, smoke=True).vocab
@@ -364,7 +419,7 @@ def deadline_sweep(args, smoke: bool) -> dict:
                 1 for r in ok
                 if r.deadline is not None and r.t_finish > r.deadline
             ),
-            "ttft_p50": float(np.percentile(ttfts, 50)) if ttfts else None,
+            "ttft_p50": percentile(ttfts, 50),  # None-never-NaN contract
         })
         print(
             f"deadline_{slo.name},0.0,"
@@ -397,6 +452,10 @@ def main(argv=None) -> None:
     ap.add_argument("--max-len", type=int, default=96)
     ap.add_argument("--requests", type=int, default=0, help="0 = per-mode default")
     ap.add_argument("--packed-head", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="export Chrome traces under artifacts/traces/: a "
+                    "traced lifecycle run per engine family (plus, with "
+                    "--chaos, the chaos arm's injection trace)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -427,6 +486,10 @@ def main(argv=None) -> None:
             "deadlines": deadline_sweep(args, smoke=True),
             "skipped": skipped,
         }
+        if args.trace:
+            payload["traces"] = {
+                r["family"]: r["trace"] for r in payload["chaos"]["results"]
+            }
         target = BENCH_JSON_CHAOS_SMOKE
     else:
         # low rate = arrival-bound (throughput parity, latency still wins);
@@ -470,6 +533,8 @@ def main(argv=None) -> None:
                 "on_demand_over_reserve_p99_ttft": ttft_ratio,
             },
         }
+        if args.trace:
+            payload["traces"] = trace_sweep(args, args.smoke)
         if args.smoke:
             # the chaos artifact is a separate CI job so a fault-injection
             # regression can't hide behind a green perf smoke (and vice versa)

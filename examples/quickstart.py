@@ -9,6 +9,7 @@
 7. 1-bit overpacking: denser placements, bits recovered in-kernel (§IV-B-1)
 8. Chunked prefill + on-demand admission with preemption/requeue
 9. Fault-hardened serving: deadlines, cancellation, shedding, chaos
+10. Observability: request/step tracing (Perfetto), live metrics, plan drift
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -216,4 +217,57 @@ print(f"  zero leaked pages after chaos: "
 # CI runs this harness as a gated job:
 #   python benchmarks/serving_bench.py --smoke --chaos
 #   python benchmarks/check_invariants.py BENCH_serving_chaos_smoke.json
+
+# -- 10. observability --------------------------------------------------------
+print("== Tracing, live metrics, and plan drift ==")
+# run(trace=...) opens one async span per request (queued -> prefill ->
+# decode, surviving preemption/requeue) and one X span per fused step
+# split into dispatch vs device_wait; the saved JSON loads directly in
+# Perfetto (https://ui.perfetto.dev) or chrome://tracing.  Disabled
+# tracing costs the hot path one `is not None` check.
+import tempfile
+
+from repro.obs.trace import TraceRecorder
+
+eng = Engine(cfg, params, EngineConfig(n_slots=2, page_size=4, max_len=32,
+                                       chunk_tokens=4))
+for n in (9, 6, 11):
+    eng.submit(rng.integers(1, cfg.vocab, size=n).tolist(), 5)
+# live metrics mid-run: run a few steps, peek, resume — metrics() needs
+# no wall argument any more (the engine tracks its own run clock)
+eng.warmup()
+eng.run(realtime=False, max_steps=4)
+live = eng.live_metrics()
+print(f"  mid-run: {live['active_slots']} active slots, "
+      f"{live['tokens_per_s_window']:.1f} tok/s over the last "
+      f"{live['window']:.0f} step window")
+tr = TraceRecorder()
+m = eng.run(realtime=False, trace=tr)       # resume, traced to the end
+trace_path = tr.save(tempfile.mkdtemp() + "/quickstart_trace.json")
+steps_traced = sum(1 for e in tr.events if e.get("name") == "step")
+print(f"  traced {steps_traced} fused steps, "
+      f"{len([e for e in tr.events if e['ph'] == 'e' and e['name'] == 'request'])} "
+      f"request terminals -> {trace_path} (open in Perfetto)")
+# Prometheus text exposition — scrape-ready counters/gauges/histograms
+# (serve --metrics-out FILE writes the same thing)
+expo = eng.prometheus_text()
+print("  exposition sample: " +
+      next(l for l in expo.splitlines() if l.startswith("repro_requests_total")))
+# plan drift: re-measure a mixed plan's per-layer kernel cost and compare
+# against the compiler's DSP-op prediction — rank inversions mean the
+# plan was optimized against a cost model the backend disagrees with
+from repro.obs.drift import build_report
+from repro.plan.search import plan_from_bits
+
+cfg_d = get_config("gemma3-1b", smoke=True)  # 3 layers, one pair each
+dplan = plan_from_bits(cfg_d, arch="gemma3-1b", bits=[(5, 4), (8, 4), (2, 2)],
+                       n_slots=2)
+rep = build_report(dplan, cfg_d, n_slots=2, reps=1)
+print(f"  drift over {rep['n_layers']} layers ({rep['n_distinct_bit_pairs']} "
+      f"bit pairs): {rep['rank_inversions']}/{rep['n_layer_pairs']} rank "
+      f"inversions, max drift {rep['max_drift']:.2f}x")
+# full reports land in artifacts/plan_drift.json (gated + rendered into
+# EXPERIMENTS.md):
+#   python -m repro.obs.drift --plan artifacts/plans/drift-mixed.json
+#   python benchmarks/serving_bench.py --smoke --trace   # CI trace-smoke job
 print("quickstart complete.")

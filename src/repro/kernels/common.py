@@ -14,7 +14,9 @@ per-backend values.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +51,62 @@ def resolve_block_k(
     if block_k is not None:
         return block_k
     return default_block_k(k_dim, interpret, compiled_default=compiled_default)
+
+
+# -- kernel timing hooks -----------------------------------------------------
+#
+# One timing discipline for every consumer that claims to have *measured*
+# a kernel: dispatch, then ``jax.block_until_ready`` on the result, and
+# charge the whole interval (async dispatch alone measures nothing).
+# ``plan/autotune.py`` (block_k winners, pair-time tables) and
+# ``obs/drift.py`` (measured-vs-predicted per-layer time) both time
+# through here, so their numbers are comparable by construction.
+
+_ACTIVE_TIMER: "KernelTimer | None" = None
+
+
+class KernelTimer:
+    """Collects labelled kernel timings while installed via
+    :func:`kernel_timing`: ``records[label]`` holds seconds per call."""
+
+    def __init__(self):
+        self.records: dict[str, list[float]] = {}
+
+    def record(self, label: str, seconds: float) -> None:
+        self.records.setdefault(label, []).append(seconds)
+
+    def best(self, label: str) -> float:
+        """Minimum over the label's calls — beats the mean against the
+        noise floor on shared machines."""
+        return min(self.records[label])
+
+    def total_best(self) -> float:
+        return sum(min(v) for v in self.records.values())
+
+
+@contextlib.contextmanager
+def kernel_timing(timer: KernelTimer):
+    """Install ``timer`` as the active sink for :func:`timed` labels."""
+    global _ACTIVE_TIMER
+    prev, _ACTIVE_TIMER = _ACTIVE_TIMER, timer
+    try:
+        yield timer
+    finally:
+        _ACTIVE_TIMER = prev
+
+
+def timed(fn, *args, label: str | None = None):
+    """Run ``fn(*args)`` to device completion; returns ``(result, seconds)``.
+
+    When a :class:`KernelTimer` is installed and ``label`` is given, the
+    measurement is also recorded there.
+    """
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(fn(*args))
+    dt = time.perf_counter() - t0
+    if label is not None and _ACTIVE_TIMER is not None:
+        _ACTIVE_TIMER.record(label, dt)
+    return out, dt
 
 
 def pad_to(x: jax.Array, *target: int) -> jax.Array:

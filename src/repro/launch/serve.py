@@ -31,7 +31,10 @@ Lifecycle/fault flags (continuous engine only): ``--deadline`` /
 ``--max-waiting`` bounds the queue with least-slack shedding, and
 ``--chaos-step-rate`` / ``--chaos-alloc-rate`` / ``--chaos-nan-rate``
 (+ ``--chaos-seed``) arm the deterministic fault injector — the run
-ends with a per-status summary instead of crashing.
+ends with a per-status summary instead of crashing.  ``--trace out.json``
+records the full request lifecycle and per-step dispatch/device-wait
+timeline as Chrome trace JSON (open at https://ui.perfetto.dev), and
+``--metrics-out FILE`` dumps the engine's Prometheus text exposition.
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 64
   PYTHONPATH=src python -m repro.launch.serve --packed --wbits 4 --abits 4
@@ -168,8 +171,17 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
             deadline=args.deadline, ttft_deadline=args.ttft_deadline,
         )
     eng.warmup()  # compile outside the timed run, like the static loop
-    m = eng.run(realtime=True)
+    m = eng.run(realtime=True, trace=args.trace)
     m["latency_ms_per_step"] = m["wall"] / max(1, m["steps"]) * 1e3
+    if args.trace:
+        print(f"trace written to {args.trace} (load at https://ui.perfetto.dev)")
+    if args.metrics_out:
+        import pathlib
+
+        p = pathlib.Path(args.metrics_out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(eng.prometheus_text())
+        print(f"metrics exposition written to {p}")
     return m
 
 
@@ -230,6 +242,12 @@ def main(argv=None) -> dict:
                     help="chaos: P(sampling logits NaN-poisoned) per slot/step")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="chaos: fault-injection RNG seed")
+    ap.add_argument("--trace", metavar="JSON", default=None,
+                    help="continuous engine: write a Perfetto-loadable Chrome "
+                    "trace (request spans + step/dispatch/device-wait timing)")
+    ap.add_argument("--metrics-out", metavar="FILE", default=None,
+                    help="continuous engine: write Prometheus text exposition "
+                    "of the engine metrics registry after the run")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
@@ -278,6 +296,12 @@ def main(argv=None) -> dict:
             "--deadline/--ttft-deadline/--max-waiting/--chaos-* drive the "
             "continuous engine's request lifecycle; they have no effect on "
             "--engine static — drop them or switch engines"
+        )
+    if engine != "continuous" and (args.trace or args.metrics_out):
+        raise SystemExit(
+            "--trace/--metrics-out record the continuous engine's request "
+            "lifecycle and step timeline; they have no effect on --engine "
+            "static — drop them or switch engines"
         )
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     head = None

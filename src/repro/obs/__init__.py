@@ -1,0 +1,43 @@
+"""Observability: tracing, live metrics, and plan-drift reporting.
+
+Three small, dependency-light modules thread telemetry through the
+serving engine, the kernels, and the benches:
+
+* :mod:`repro.obs.trace` — a bounded ring-buffer :class:`TraceRecorder`
+  with a span/event API.  The engine opens one span per request
+  lifecycle (queued → admitted → prefill chunks → decode → terminal
+  status, with preemption/retry/chaos events attached) and one span per
+  fused step (host dispatch vs device wait split out); exports are
+  Chrome trace-event JSON loadable in Perfetto.
+* :mod:`repro.obs.metrics` — counter/gauge/histogram registry with
+  Prometheus text exposition, the shared None-never-NaN
+  :func:`percentile` helper, and :class:`WindowedSeries` for live
+  windowed rates (``Engine.live_metrics()``).
+* :mod:`repro.obs.drift` — per-layer *measured* kernel time (the
+  block_until_ready timing discipline from ``kernels/common.py``)
+  against the served plan's *predicted* ``T_mul``/cost fields (paper
+  Eq. 6 ``Op / T_mul``), reported as ``artifacts/plan_drift.json`` so
+  interpret-vs-TPU ranking inversions are a committed artifact.
+
+Tracing is opt-in and a true no-op when disabled: every hot-path hook
+is one ``is not None`` predicate, no allocation.
+"""
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    WindowedSeries,
+    percentile,
+)
+from repro.obs.trace import TraceRecorder  # noqa: F401
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "TraceRecorder",
+    "WindowedSeries",
+    "percentile",
+]

@@ -1,0 +1,243 @@
+"""Plan drift: predicted per-layer cost vs *measured* per-layer kernel time.
+
+The plan compiler ranks per-layer bit choices by the packing LUT's
+``T_mul`` (paper Eq. 6: predicted layer time ∝ ``Op / T_mul``) — the
+right model for the paper's DSP fabric and the TPU MXU, but blind to
+per-backend kernel overheads: in interpret mode the LSB-recovery peel
+scales with ``ceil(K / acc_chunk)``, so a placement with a tiny
+accumulation chunk can lose badly despite a high ``T_mul``, inverting
+LUT rankings (the ROADMAP's TPU-validation footnote).  This module
+closes the predict-vs-measure loop FINN-R-style: every layer of a served
+plan is re-timed through the *real serving entry point* (prepacked
+weights, the plan's ``block_k``, the shared ``block_until_ready`` timing
+discipline from ``kernels/common.py``) and compared against the plan's
+predicted ``T_mul``/cost fields.
+
+The report normalizes both sides to per-layer *shares* of total step
+time — shares survive the absolute-timing noise of shared CI boxes —
+and counts ranking inversions (discordant layer pairs between the
+predicted and measured orderings, i.e. Kendall disagreement).  Output is
+``artifacts/plan_drift.json`` plus a ``render_tables.py`` section, so
+interpret-vs-TPU inversions are a committed artifact instead of a
+footnote.
+
+  PYTHONPATH=src python -m repro.obs.drift --plan artifacts/plans/ci-plan.json
+  PYTHONPATH=src python -m repro.obs.drift --plan p.json --out artifacts/plan_drift.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import KernelTimer, kernel_timing, resolve_interpret, timed
+from repro.obs.metrics import percentile  # noqa: F401  (re-export convenience)
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_OUT = _REPO_ROOT / "artifacts" / "plan_drift.json"
+
+
+def measure_layer_times(
+    plan,
+    cfg,
+    *,
+    n_slots: int | None = None,
+    reps: int = 3,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> list[dict]:
+    """Measured decode-step kernel seconds per plan layer.
+
+    Each projection matmul is prepacked at the layer's ``(w_bits,
+    a_bits)`` and timed through :func:`repro.kernels.common.timed` with
+    the plan's autotuned ``block_k`` — exactly the code path the serving
+    engine dispatches.  Minimum-of-``reps`` per projection; a layer's
+    time is the count-weighted sum of its projections (a layer's step
+    time is the sum of all its matmuls, not just the largest one).
+    """
+    from repro.kernels.packed_matmul.ops import packed_dense, prepack_dense
+    from repro.plan.search import layer_matmul_shapes
+
+    n_slots = n_slots or int(plan.budget.get("n_slots", 8))
+    interp = resolve_interpret(interpret)
+    shapes = layer_matmul_shapes(cfg, n_slots)
+    if len(shapes) != len(plan.layers):
+        raise ValueError(
+            f"plan has {len(plan.layers)} layers but config yields {len(shapes)}"
+        )
+    # identical (shape, bits, block_k) projections share one measurement
+    cache: dict[tuple, float] = {}
+    rows = []
+    for lp, projs in zip(plan.layers, shapes):
+        timer = KernelTimer()
+        per_proj = {}
+        for p in projs:
+            key = (p.m, p.k, p.n, lp.w_bits, lp.a_bits, lp.block_k)
+            if key not in cache:
+                kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+                x = jax.random.uniform(kx, (p.m, p.k), jnp.float32)
+                w = jax.random.normal(kw, (p.k, p.n), jnp.float32)
+                pre = prepack_dense(w, w_bits=lp.w_bits, a_bits=lp.a_bits)
+
+                def run(x, pre=pre):
+                    return packed_dense(x, pre, block_k=lp.block_k, interpret=interp)
+
+                timed(run, x)  # compile / warm the jit cache
+                with kernel_timing(timer):
+                    for _ in range(reps):
+                        timed(run, x, label=p.name)
+                cache[key] = timer.best(p.name)
+            per_proj[p.name] = cache[key] * 1e6 * p.count
+        measured_us = sum(per_proj.values())
+        rows.append(
+            {
+                "index": lp.index,
+                "name": lp.name,
+                "w_bits": lp.w_bits,
+                "a_bits": lp.a_bits,
+                "block_k": lp.block_k,
+                "t_mul": lp.t_mul,
+                "measured_us": measured_us,
+                "per_proj_us": per_proj,
+            }
+        )
+    return rows
+
+
+def _predicted_dsp_ops(lp, projs) -> float:
+    """The plan's predicted cost (Eq. 6 ``Op / T_mul``), falling back to
+    a recompute from the layer's matmul shapes when an older plan lacks
+    the ``cost`` block."""
+    if lp.cost.get("dsp_ops"):
+        return float(lp.cost["dsp_ops"])
+    mul_ops = sum(p.mul_ops for p in projs)
+    return mul_ops / max(lp.t_mul, 1e-9)
+
+
+def _discordant_pairs(pred: list[float], meas: list[float]) -> list[tuple[int, int]]:
+    """Layer-index pairs where predicted and measured orderings disagree
+    (one says i is cheaper, the other says j is) — the ranking
+    inversions that flip plan-search decisions."""
+    out = []
+    n = len(pred)
+    for i in range(n):
+        for j in range(i + 1, n):
+            dp, dm = pred[i] - pred[j], meas[i] - meas[j]
+            if dp * dm < 0:
+                out.append((i, j))
+    return out
+
+
+def build_report(
+    plan,
+    cfg,
+    *,
+    n_slots: int | None = None,
+    reps: int = 3,
+    interpret: bool | None = None,
+    seed: int = 0,
+) -> dict:
+    """Full drift report for one plan on the current backend."""
+    from repro.plan.search import layer_matmul_shapes
+
+    interp = resolve_interpret(interpret)
+    n_slots = n_slots or int(plan.budget.get("n_slots", 8))
+    shapes = layer_matmul_shapes(cfg, n_slots)
+    rows = measure_layer_times(
+        plan, cfg, n_slots=n_slots, reps=reps, interpret=interp, seed=seed
+    )
+    pred = [_predicted_dsp_ops(lp, projs) for lp, projs in zip(plan.layers, shapes)]
+    meas = [r["measured_us"] for r in rows]
+    pred_total, meas_total = sum(pred), sum(meas)
+    for r, p, m in zip(rows, pred, meas):
+        r["predicted_dsp_ops"] = p
+        r["predicted_share"] = p / pred_total if pred_total else None
+        r["measured_share"] = m / meas_total if meas_total else None
+        # drift > 1: the layer is more expensive in reality than the plan
+        # compiler believed (relative to its siblings); < 1: cheaper
+        r["drift"] = (
+            r["measured_share"] / r["predicted_share"]
+            if r["predicted_share"] else None
+        )
+    inversions = _discordant_pairs(pred, meas)
+    n = len(rows)
+    n_pairs = n * (n - 1) // 2
+
+    # per-bit-pair aggregation: does the LUT's *pair* ranking survive?
+    by_pair: dict[tuple[int, int], dict] = {}
+    for r, p in zip(rows, pred):
+        key = (r["w_bits"], r["a_bits"])
+        agg = by_pair.setdefault(
+            key, {"w_bits": key[0], "a_bits": key[1], "n_layers": 0,
+                  "predicted_dsp_ops": 0.0, "measured_us": 0.0}
+        )
+        agg["n_layers"] += 1
+        agg["predicted_dsp_ops"] += p
+        agg["measured_us"] += r["measured_us"]
+    pairs = [by_pair[k] for k in sorted(by_pair)]
+    pair_inversions = _discordant_pairs(
+        [p["predicted_dsp_ops"] / p["n_layers"] for p in pairs],
+        [p["measured_us"] / p["n_layers"] for p in pairs],
+    )
+
+    drifts = [r["drift"] for r in rows if r["drift"] is not None]
+    return {
+        "arch": plan.arch,
+        "plan_hash": plan.content_hash(),
+        "backend": "interpret" if interp else "compiled",
+        "n_slots": n_slots,
+        "reps": reps,
+        "n_layers": n,
+        "n_distinct_bit_pairs": plan.n_distinct_bit_pairs,
+        "layers": rows,
+        "pairs": pairs,
+        "rank_inversions": len(inversions),
+        "inverted_layer_pairs": inversions,
+        "n_layer_pairs": n_pairs,
+        "pair_rank_inversions": len(pair_inversions),
+        "max_drift": max(drifts) if drifts else None,
+        "min_drift": min(drifts) if drifts else None,
+    }
+
+
+def main(argv=None) -> pathlib.Path:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--plan", required=True,
+                    help="deployment-plan artifact (repro.plan.compile output)")
+    ap.add_argument("--out", default=str(DEFAULT_OUT),
+                    help="report path (default artifacts/plan_drift.json)")
+    ap.add_argument("--reps", type=int, default=3, help="timing repetitions")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="serving batch (default: the plan's budget)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_config
+    from repro.plan import DeployPlan
+
+    plan = DeployPlan.load(args.plan)
+    cfg = get_config(plan.arch, smoke=plan.smoke)
+    report = build_report(plan, cfg, n_slots=args.slots, reps=args.reps,
+                          seed=args.seed)
+    report["plan"] = str(args.plan)
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(report, indent=2) + "\n")
+    for r in report["layers"]:
+        print(
+            f"drift {r['name']} w{r['w_bits']}a{r['a_bits']}: "
+            f"predicted {r['predicted_share']:.3f} vs measured "
+            f"{r['measured_share']:.3f} of step time (drift {r['drift']:.2f}x)"
+        )
+    print(
+        f"rank inversions: {report['rank_inversions']}/{report['n_layer_pairs']} "
+        f"layer pairs on backend={report['backend']}; report -> {out}"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    main()

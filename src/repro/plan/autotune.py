@@ -15,12 +15,11 @@ by shape+bits+backend, so re-applying a tuned plan never re-times.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import resolve_interpret
+from repro.kernels.common import resolve_interpret, timed
 from repro.kernels.packed_matmul.ops import packed_dense, prepack_dense
 from repro.plan.plan import DeployPlan
 from repro.plan.search import layer_matmul_shapes
@@ -49,9 +48,9 @@ def candidate_block_ks(k_dim: int, interpret: bool) -> list[int]:
 
 
 def _time_once(fn, *args) -> float:
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args))
-    return time.perf_counter() - t0
+    # the shared kernel-timing discipline (dispatch + block_until_ready)
+    # lives in kernels/common so obs/drift measures the same way
+    return timed(fn, *args)[1]
 
 
 def measure_block_k(

@@ -87,17 +87,27 @@ class ChaosInjector:
         self.n_step_faults = 0
         self.n_alloc_faults = 0
         self.n_nan_poisoned = 0
+        # engine-attached TraceRecorder (or None): every counted injection
+        # emits exactly one instant event, so the trace gate can require
+        # event count == counters() per family
+        self.trace = None
+
+    def _trace_inject(self, family: str, n: int) -> None:
+        if self.trace is not None:
+            self.trace.instant(f"inject_{family}", n=n, seed=self.cfg.seed)
 
     def before_step(self) -> None:
         """Call immediately before the fused step: raises InjectedFault at
         ``step_fault_rate`` (state untouched, so the step is retryable)."""
         if self.cfg.step_fault_rate and self.rng.random() < self.cfg.step_fault_rate:
             self.n_step_faults += 1
+            self._trace_inject("step", self.n_step_faults)
             raise InjectedFault(f"injected step fault #{self.n_step_faults}")
 
     def roll_alloc_fault(self) -> bool:
         if self.cfg.alloc_fault_rate and self.rng.random() < self.cfg.alloc_fault_rate:
             self.n_alloc_faults += 1
+            self._trace_inject("alloc", self.n_alloc_faults)
             return True
         return False
 
@@ -110,6 +120,7 @@ class ChaosInjector:
                 if self.rng.random() < self.cfg.nan_rate:
                     logits[slot, :] = np.nan
                     self.n_nan_poisoned += 1
+                    self._trace_inject("nan", self.n_nan_poisoned)
                     victims.append(slot)
         return victims
 

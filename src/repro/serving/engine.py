@@ -58,6 +58,8 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.layers import prepack_lm_head
+from repro.obs.metrics import MetricsRegistry, WindowedSeries, percentile
+from repro.obs.trace import TraceRecorder
 from repro.parallel.sharding import ShardingRules, use_rules
 from repro.serving.chaos import ChaosConfig, ChaosInjector, InjectedFault
 from repro.serving.lifecycle import SLO, TERMINAL_STATUSES, Request
@@ -198,6 +200,19 @@ class Engine:
         self.hard_recoveries = 0  # state restores after non-injected step faults
         self.fault_log: list[str] = []  # one line per recovered hard fault
         self._step_time_ewma: float | None = None  # realtime deadline estimator
+        # -- observability ------------------------------------------------
+        # tracing is a single `is not None` predicate on every hot-path
+        # hook; holders stay None until run(trace=...) arms a recorder
+        self._trace: TraceRecorder | None = None
+        self._trace_path = None
+        self._t_wall0: float | None = None  # run() start (monotonic)
+        self._t_run_end: float | None = None  # frozen elapsed after run()
+        self._vclock = 0.0
+        self.registry = MetricsRegistry()
+        self._win_tokens = WindowedSeries()
+        self._win_steps = WindowedSeries()
+        self._win_sheds = WindowedSeries()
+        self._win_preempts = WindowedSeries()
 
     # -- request intake ----------------------------------------------------
 
@@ -237,6 +252,8 @@ class Engine:
         self._next_rid += 1
         self._pending.append(req)
         self._pending.sort(key=lambda r: r.arrival)
+        if self._trace is not None:
+            self._trace_attach(req)
         return req
 
     def cancel(self, req: Request) -> bool:
@@ -248,6 +265,54 @@ class Engine:
             return False
         req.cancel()
         return True
+
+    # -- tracing -----------------------------------------------------------
+
+    def _trace_attach(self, req: Request) -> None:
+        """Open the request's envelope + ``queued`` phase span (idempotent,
+        so arming a recorder after submissions double-begins nothing)."""
+        self._trace.req_begin(
+            req.rid, prompt_tokens=len(req.prompt),
+            max_new_tokens=req.max_new_tokens, arrival=req.arrival,
+            slo=req.slo,
+        )
+        if self._trace.phase(req.rid) is None:
+            self._trace.req_phase(req.rid, "queued")
+
+    def _arm_trace(self, trace) -> None:
+        """``trace`` is a TraceRecorder, or a path to save a fresh one to
+        at the end of ``run()``.  Already-submitted requests (pending,
+        waiting, or resident from an earlier run) are re-attached."""
+        if isinstance(trace, TraceRecorder):
+            self._trace, self._trace_path = trace, None
+        else:
+            self._trace, self._trace_path = TraceRecorder(), trace
+        for req in self._pending:
+            self._trace_attach(req)
+        for req in self.scheduler.waiting:
+            self._trace_attach(req)
+        for req in self.scheduler.active.values():
+            self._trace_attach(req)
+            self._trace.req_phase(req.rid, "prefill", slot=req.slot)
+        if self._chaos is not None:
+            self._chaos.trace = self._trace
+
+    def _seal_trace(self) -> None:
+        """Stamp run metadata into the recorder (the block the trace gates
+        cross-check against) and save it when run() owns the file."""
+        tr = self._trace
+        m = self.metrics()
+        tr.metadata.update(
+            arch=self.cfg.name, family=self.cfg.family,
+            policy=self.ecfg.policy, admit=self.ecfg.admit,
+            chunk_tokens=self.ecfg.chunk_tokens, realtime=self._realtime,
+            steps=self.n_steps, n_requests=len(self.finished),
+            statuses=m["statuses"], injected=m["injected"],
+            preemptions=m["preemptions"], step_retries=self.step_retries,
+            chaos_seed=self._chaos.cfg.seed if self._chaos is not None else None,
+        )
+        if self._trace_path is not None:
+            tr.save(self._trace_path)
 
     # -- step loop ---------------------------------------------------------
 
@@ -275,6 +340,9 @@ class Engine:
             # request rebuilds its state from position 0
             if self.cfg.family == "ssm":
                 self.state = self._reset(self.state, jnp.asarray(req.slot, jnp.int32))
+            if self._trace is not None:
+                self._trace.req_phase(req.rid, "prefill", slot=req.slot,
+                                      replayed=req.n_preempted > 0)
 
     # -- lifecycle policing ------------------------------------------------
 
@@ -291,6 +359,14 @@ class Engine:
         if reason is not None:
             req.shed_reason = reason
         self.finished.append(req)
+        self.registry.counter(
+            "repro_requests_total", "requests by terminal status"
+        ).inc(status=status)
+        if status == "shed":
+            self._win_sheds.add(now)
+        if self._trace is not None:
+            self._trace.req_end(req.rid, status, reason=reason,
+                                out_tokens=len(req.out_tokens))
 
     def _est_service_time(self, req: Request) -> float | None:
         """Optimistic remaining-service estimate on the engine clock, or
@@ -368,6 +444,12 @@ class Engine:
         req.n_faults += 1
         sched.preempt(req, now)
         sched.quarantine_slot(slot, self.ticks + self.ecfg.quarantine_ticks)
+        self._win_preempts.add(now)
+        if self._trace is not None:
+            self._trace.req_event(req.rid, "fault_strike", n_faults=req.n_faults)
+            self._trace.req_event(req.rid, "quarantine", slot=slot,
+                                  until_tick=self.ticks + self.ecfg.quarantine_ticks)
+            self._trace.req_phase(req.rid, "queued", reason="fault")
         if req.n_faults > self.ecfg.max_request_retries:
             sched.remove_waiting(req)
             self._finalize(req, "failed", now)
@@ -396,7 +478,7 @@ class Engine:
                 return state
         return template
 
-    def _fund_pages(self) -> None:
+    def _fund_pages(self, now: float) -> None:
         """On-demand mode: before the step, grow every active slot's page
         list to cover its chunk.  Slots are funded in descending-progress
         order; on pool exhaustion the lowest-progress slot is preempted
@@ -415,6 +497,10 @@ class Engine:
             while not sched.ensure_pages(req, last_pos):
                 victim = sched.pick_victim()
                 sched.preempt(victim)
+                self._win_preempts.add(now)
+                if self._trace is not None:
+                    self._trace.req_event(victim.rid, "preempt", reason="pages")
+                    self._trace.req_phase(victim.rid, "queued", reason="preempt")
                 if victim is req:
                     break
 
@@ -422,7 +508,7 @@ class Engine:
         sched = self.scheduler
         S, C = self.ecfg.n_slots, self.ecfg.chunk_tokens
         if self.ecfg.admit == "on-demand":
-            self._fund_pages()
+            self._fund_pages(now_fn())
             if not sched.active:
                 return  # everything preempted; admission retries next loop
         tokens = np.zeros((S, C), np.int32)
@@ -442,14 +528,27 @@ class Engine:
         ]
         if C > 1:
             args.append(jnp.asarray(lens))
+        tr = self._trace
+        if tr is not None:
+            for slot, req in sched.active.items():
+                if lens[slot] and tr.phase(req.rid) == "prefill":
+                    tr.req_event(req.rid, "prefill_chunk",
+                                 start=int(pos[slot]), n=int(lens[slot]))
+        t_span = [0.0, 0.0]  # dispatch start / return (tracing only)
         for attempt in range(self.ecfg.max_step_retries + 1):
             try:
                 if self._chaos is not None:
                     self._chaos.before_step()  # raises BEFORE state is touched
+                if tr is not None:
+                    t_span[0] = tr.now()
                 logits, self.state = self._step(*args)
+                if tr is not None:
+                    t_span[1] = tr.now()
                 break
             except InjectedFault:
                 self.step_retries += 1
+                if tr is not None:
+                    tr.instant("step_retry", attempt=attempt)
                 if attempt == self.ecfg.max_step_retries:
                     # transient fault outlasted the retry budget: treat it
                     # like an attributable slot fault — replay the lowest-
@@ -457,11 +556,22 @@ class Engine:
                     self._strike(sched.pick_victim(), now_fn())
                     return
             except Exception as exc:  # hard fault: donated state invalidated
+                if tr is not None:
+                    tr.instant("hard_fault", exc=type(exc).__name__)
                 self._recover_hard_fault(exc, now_fn())
                 return
         self.n_steps += 1
         self.slot_token_steps += len(sched.active)
         self.fed_tokens += int(lens.sum())
+        if tr is not None:
+            # split host dispatch from device wait: block explicitly, then
+            # the np.asarray below is a post-sync host copy
+            jax.block_until_ready(logits)
+            t_wait = tr.now()
+            tr.complete("dispatch", t_span[0], t_span[1], step=self.n_steps)
+            tr.complete("device_wait", t_span[1], t_wait, step=self.n_steps)
+            tr.complete("step", t_span[0], t_wait, step=self.n_steps,
+                        active=len(sched.active), fed=int(lens.sum()))
         logits_np = np.asarray(logits)  # device sync; [S, V]
         sampling = [s for s, r in sched.active.items() if r.n_fed + int(lens[s]) >= len(r.seq)]
         if self._chaos is not None:
@@ -470,10 +580,13 @@ class Engine:
         t = now_fn()
         if self._ckpt is not None and self.n_steps % self.ecfg.snapshot_every == 0:
             self._ckpt.save_async(self.n_steps, self.state)
+        n_new = 0
         for slot, req in list(sched.active.items()):
             req.n_fed += int(lens[slot])
             if req.n_fed < len(req.seq):
                 continue  # mid-prompt / mid-replay: logits not sampled
+            if tr is not None:
+                tr.req_phase(req.rid, "decode", slot=slot)
             row = logits_np[slot]
             if not np.isfinite(row).all():
                 # poisoned (or genuinely non-finite) logits about to be
@@ -485,25 +598,49 @@ class Engine:
             if not req.out_tokens:
                 req.t_first_token = t
             req.out_tokens.append(nxt)
+            n_new += 1
             if req.done:
                 self._finalize(req, "ok", t)
+        self._win_steps.add(t)
+        if n_new:
+            self._win_tokens.add(t, n_new)
+        reg = self.registry
+        reg.counter("repro_steps_total", "fused engine steps").inc()
+        reg.counter("repro_generated_tokens_total", "sampled tokens").inc(n_new)
+        reg.counter("repro_fed_tokens_total", "valid token lanes fed").inc(
+            float(lens.sum()))
 
-    def run(self, *, realtime: bool = True, max_steps: int | None = None) -> dict:
+    def run(
+        self,
+        *,
+        realtime: bool = True,
+        max_steps: int | None = None,
+        trace=None,
+    ) -> dict:
         """Drive the engine until every submitted request reaches a
         terminal status.
 
         ``realtime=False`` uses a deterministic virtual clock (1.0 per
         step — idle ticks also advance it; idle gaps jump straight to the
         next arrival) so tests and A/B comparisons are noise-free.
+
+        ``trace`` arms request/step span recording: pass a
+        :class:`~repro.obs.trace.TraceRecorder` to inspect events in
+        process, or a path to have the engine write Perfetto-loadable
+        Chrome trace JSON there when the run ends.  ``None`` (default)
+        keeps every tracing hook a single predicate check.
         """
         sched = self.scheduler
         self._realtime = realtime
-        t_wall0 = time.monotonic()
-        vclock = 0.0
+        if trace is not None:
+            self._arm_trace(trace)
+        t_wall0 = self._t_wall0 = time.monotonic()
+        self._t_run_end = None
+
         idle = 0
 
         def now() -> float:
-            return (time.monotonic() - t_wall0) if realtime else vclock
+            return (time.monotonic() - t_wall0) if realtime else self._vclock
 
         while self._pending or not sched.all_done():
             if max_steps is not None and self.n_steps >= max_steps:
@@ -519,7 +656,7 @@ class Engine:
                     if realtime:
                         time.sleep(min(max(nxt - now(), 0.0), 0.01))
                     else:
-                        vclock = max(vclock, nxt)
+                        self._vclock = max(self._vclock, nxt)
                     idle = 0
                     continue
                 if sched.all_done():
@@ -532,7 +669,7 @@ class Engine:
                 if realtime:
                     time.sleep(0.001)
                 else:
-                    vclock += 1.0
+                    self._vclock += 1.0
                 if idle > self.ecfg.watchdog_ticks:
                     victim = sched.waiting[0]
                     sched.remove_waiting(victim)
@@ -544,12 +681,15 @@ class Engine:
             self._step_once(now)
             if realtime:
                 dt = time.monotonic() - t_step0
+                self.registry.histogram(
+                    "repro_step_seconds", "fused step wall time"
+                ).observe(dt)
                 self._step_time_ewma = (
                     dt if self._step_time_ewma is None
                     else 0.8 * self._step_time_ewma + 0.2 * dt
                 )
             else:
-                vclock += 1.0
+                self._vclock += 1.0
         drained = not self._pending and sched.all_done()
         if drained:
             sched.release_quarantined(None)
@@ -557,7 +697,11 @@ class Engine:
                 self._ckpt.wait()
             if self.ecfg.check_invariants:
                 self.assert_no_leaks()
-        return self.metrics(time.monotonic() - t_wall0 if realtime else vclock)
+        self._t_run_end = time.monotonic() - t_wall0
+        out = self.metrics()
+        if self._trace is not None:
+            self._seal_trace()
+        return out
 
     _realtime = True  # set by run(); _est_service_time default
 
@@ -570,19 +714,31 @@ class Engine:
         self.allocator.assert_no_leaks()
         self.scheduler.assert_all_reclaimed()
 
-    def metrics(self, wall: float) -> dict:
+    def _elapsed(self) -> float:
+        """Engine-clock time since run() started: the virtual clock, or
+        wall time (frozen once the run returns).  0.0 before any run."""
+        if not self._realtime:
+            return self._vclock
+        if self._t_run_end is not None:
+            return self._t_run_end
+        if self._t_wall0 is None:
+            return 0.0
+        return time.monotonic() - self._t_wall0
+
+    def metrics(self, wall: float | None = None) -> dict:
+        """End-of-run (or so-far) summary.  ``wall`` defaults to the
+        engine's own clock, so this is callable mid-run and after
+        ``run()`` without the caller supplying elapsed time; passing an
+        explicit ``wall`` (the pre-PR-7 signature) still wins."""
+        if wall is None:
+            wall = self._elapsed()
         done = self.finished
         ok = [r for r in done if r.status == "ok"]
         statuses = Counter(r.status for r in done)
         lat = [r.t_finish - r.arrival for r in ok if r.t_finish is not None]
         ttft = [r.t_first_token - r.arrival for r in done if r.t_first_token is not None]
         gen = sum(len(r.out_tokens) for r in done)
-
-        def pct(xs: list, q: float) -> float | None:
-            # None (JSON null), never float("nan"): the NaN literal is not
-            # valid JSON and poisons downstream artifact parsing
-            return float(np.percentile(xs, q)) if xs else None
-
+        pct = percentile  # one shared None-never-NaN implementation
         return {
             "engine": self.ecfg.policy,
             "admit": self.ecfg.admit,
@@ -613,3 +769,42 @@ class Engine:
                 else 0.0
             ),
         }
+
+    def live_metrics(self, window: float | None = None) -> dict:
+        """Trailing-window snapshot, callable mid-run (e.g. between
+        ``run(max_steps=k)`` resumptions) — unlike :meth:`metrics`, the
+        rates here cover only the *last* ``window`` engine-clock units
+        (default 5 s wall / 32 virtual steps)."""
+        if window is None:
+            window = 5.0 if self._realtime else 32.0
+        now = self._elapsed()
+        sched = self.scheduler
+        statuses = Counter(r.status for r in self.finished)
+        return {
+            "now": now,
+            "window": window,
+            "tokens_per_s_window": self._win_tokens.rate(now, window),
+            "steps_per_s_window": self._win_steps.rate(now, window),
+            "shed_rate_window": self._win_sheds.rate(now, window),
+            "preemption_rate_window": self._win_preempts.rate(now, window),
+            "queue_depth": len(self._pending) + len(sched.waiting),
+            "active_slots": len(sched.active),
+            "slot_occupancy": len(sched.active) / self.ecfg.n_slots,
+            "free_pages": self.allocator.n_free,
+            "steps": self.n_steps,
+            "statuses": dict(statuses),
+        }
+
+    def prometheus_text(self) -> str:
+        """Prometheus text exposition of the engine registry, with the
+        point-in-time gauges refreshed at scrape time."""
+        reg, sched = self.registry, self.scheduler
+        reg.gauge("repro_queue_depth", "pending + waiting requests").set(
+            len(self._pending) + len(sched.waiting))
+        reg.gauge("repro_active_slots", "slots decoding/prefilling").set(
+            len(sched.active))
+        reg.gauge("repro_free_pages", "page-pool headroom").set(
+            self.allocator.n_free)
+        reg.gauge("repro_preemptions", "scheduler preemptions so far").set(
+            self.scheduler.n_preemptions)
+        return reg.prometheus_text()

@@ -288,12 +288,170 @@ def test_deploy_plan_gate():
     assert any("distinct bit pair" in e for e in ci.check_deploy_plan(uniform))
 
 
+# ---------------------------------------------------------------------------
+# trace gates (PR 7): built with the real recorder so the fixture format
+# can never drift from what the engine actually exports
+# ---------------------------------------------------------------------------
+
+
+def _trace_fixture():
+    from repro.obs.trace import TraceRecorder
+
+    tr = TraceRecorder()
+    for rid in (0, 1):
+        tr.req_begin(rid, prompt_tokens=4, max_new_tokens=4, arrival=0.0)
+        tr.req_phase(rid, "queued")
+        tr.req_phase(rid, "prefill", slot=rid)
+    for step in (1, 2, 3):
+        t0, t1, t2 = tr.now(), tr.now(), tr.now()
+        tr.complete("dispatch", t0, t1, step=step)
+        tr.complete("device_wait", t1, t2, step=step)
+        tr.complete("step", t0, t2, step=step, active=2, fed=2)
+    tr.req_event(0, "preempt", reason="pages")
+    tr.req_phase(0, "queued", reason="preempt")
+    tr.req_phase(0, "prefill", slot=1, replayed=True)
+    tr.req_phase(0, "decode", slot=1)
+    tr.instant("inject_step", n=1, seed=0)
+    tr.begin("host_work")
+    tr.end("host_work")
+    tr.req_end(0, "ok", out_tokens=4)
+    tr.req_end(1, "shed", reason="deadline", out_tokens=0)
+    tr.metadata.update(
+        steps=3, n_requests=2, statuses={"ok": 1, "shed": 1},
+        injected={"step": 1, "alloc": 0, "nan": 0},
+    )
+    return tr.to_chrome()
+
+
+def test_trace_good_fixture_passes():
+    assert ci.check_trace(_trace_fixture()) == []
+
+
+def test_trace_missing_terminal_span_fails():
+    d = _trace_fixture()
+    # request 1's terminal span vanishes: count mismatch AND a dangle
+    d["traceEvents"] = [
+        e for e in d["traceEvents"]
+        if not (e.get("ph") == "e" and e["name"] == "request" and e.get("id") == 1)
+    ]
+    errs = ci.check_trace(d)
+    assert any("exactly one" in e for e in errs)
+    assert any("dangling async" in e for e in errs)
+
+
+def test_trace_duplicate_terminal_span_fails():
+    d = _trace_fixture()
+    end = next(e for e in d["traceEvents"]
+               if e.get("ph") == "e" and e["name"] == "request")
+    d["traceEvents"].append(dict(end))
+    assert any("more than one terminal" in e for e in ci.check_trace(d))
+
+
+def test_trace_step_count_mismatch_fails():
+    d = _trace_fixture()
+    d["traceEvents"] = [
+        e for e in d["traceEvents"]
+        if not (e.get("ph") == "X" and e["name"] == "step"
+                and e["args"]["step"] == 3)
+    ]
+    assert any("step span" in e for e in ci.check_trace(d))
+
+
+def test_trace_status_mismatch_fails():
+    d = _trace_fixture()
+    d["repro"]["statuses"] = {"ok": 2}  # engine says ok twice; trace disagrees
+    assert any("statuses" in e for e in ci.check_trace(d))
+
+
+def test_trace_injection_accounting_fails():
+    # a counted fault with no trace event — and vice versa
+    d = _trace_fixture()
+    d["repro"]["injected"]["nan"] = 2
+    assert any("inject_nan" in e for e in ci.check_trace(d))
+    d = _trace_fixture()
+    d["repro"]["injected"]["step"] = 0
+    assert any("inject_step" in e for e in ci.check_trace(d))
+
+
+def test_trace_dangling_and_crossed_sync_spans_fail():
+    d = _trace_fixture()
+    d["traceEvents"].append({"name": "orphan", "ph": "B", "ts": 0.0,
+                             "pid": 0, "tid": 0, "args": {}})
+    assert any("dangling B" in e for e in ci.check_trace(d))
+    d = _trace_fixture()
+    evs = d["traceEvents"]
+    b = next(i for i, e in enumerate(evs) if e.get("ph") == "B")
+    evs[b + 1:b + 1] = [dict(evs[b], name="crossed")]  # B crossed; E never comes
+    errs = ci.check_trace(d)
+    assert any("span crossing" in e or "dangling B" in e for e in errs)
+
+
+def test_trace_dropped_events_fail():
+    d = _trace_fixture()
+    d["repro"]["dropped"] = 7
+    assert any("dropped" in e for e in ci.check_trace(d))
+
+
+def test_trace_requires_metadata():
+    d = _trace_fixture()
+    del d["repro"]
+    assert any("metadata" in e for e in ci.check_trace(d))
+    assert ci.check_trace({"traceEvents": []}) != []
+
+
+# ---------------------------------------------------------------------------
+# plan-drift gates (PR 7)
+# ---------------------------------------------------------------------------
+
+
+def _drift_fixture():
+    layers = []
+    for i, (w, a, p_share, m_share) in enumerate(
+        ((5, 4, 0.3, 0.45), (8, 4, 0.5, 0.2), (2, 2, 0.2, 0.35))
+    ):
+        layers.append({
+            "index": i, "name": f"layer_{i}", "w_bits": w, "a_bits": a,
+            "measured_us": m_share * 1000.0, "measured_share": m_share,
+            "predicted_dsp_ops": p_share * 1e5, "predicted_share": p_share,
+            "drift": m_share / p_share,
+        })
+    return {
+        "n_distinct_bit_pairs": 3,
+        "layers": layers,
+        "rank_inversions": 2,
+        "inverted_layer_pairs": [[0, 1], [1, 2]],
+    }
+
+
+def test_drift_good_fixture_passes():
+    assert ci.check_drift(_drift_fixture()) == []
+
+
+def test_drift_gates_fail_on_doctored_fixtures():
+    d = _drift_fixture()
+    d["n_distinct_bit_pairs"] = 2  # mixed plan degraded to near-uniform
+    assert any("3-pair" in e for e in ci.check_drift(d))
+    d = _drift_fixture()
+    d["layers"][0]["measured_us"] = 0.0  # a layer was never actually timed
+    assert any("measured_us" in e for e in ci.check_drift(d))
+    d = _drift_fixture()
+    d["layers"][0]["predicted_share"] = 0.9  # shares no longer normalize
+    assert any("sums to" in e for e in ci.check_drift(d))
+    d = _drift_fixture()
+    d["rank_inversions"] = 0  # headline contradicts the listed pairs
+    assert any("inverted pair" in e for e in ci.check_drift(d))
+    assert ci.check_drift({}) != []
+
+
 def test_kind_inference_and_cli(tmp_path, serving_fixture):
     assert ci.infer_kind(pathlib.Path("BENCH_serving_smoke.json")) == "serving"
     assert ci.infer_kind(pathlib.Path("BENCH_plan.json")) == "plan"
     assert ci.infer_kind(pathlib.Path("BENCH_kernels_smoke.json")) == "kernels"
     assert ci.infer_kind(pathlib.Path("artifacts/packing_efficiency.json")) == "packing"
     assert ci.infer_kind(pathlib.Path("artifacts/plans/ci-plan.json")) == "deploy-plan"
+    # trace/drift outrank the older kinds their filenames also contain
+    assert ci.infer_kind(pathlib.Path("artifacts/traces/trace_serving_attn.json")) == "trace"
+    assert ci.infer_kind(pathlib.Path("artifacts/plan_drift.json")) == "drift"
     good = tmp_path / "BENCH_serving.json"
     good.write_text(json.dumps(serving_fixture))
     assert ci.main([str(good)]) == 0
@@ -310,7 +468,8 @@ def test_real_committed_artifacts_pass():
     very gate CI applies to their smoke twins."""
     for name in ("BENCH_serving.json", "BENCH_serving_smoke.json",
                  "BENCH_serving_chaos_smoke.json",
-                 "artifacts/packing_efficiency.json"):
+                 "artifacts/packing_efficiency.json",
+                 "artifacts/plan_drift.json"):
         path = ROOT / name
         assert path.exists(), name
         assert ci.run(str(path)) == [], name

@@ -1,0 +1,266 @@
+"""Observability layer: trace recorder semantics, the metrics registry /
+windowed series, live engine metrics mid-run, traced engine runs passing
+the trace gate, and the plan-drift report."""
+import json
+import math
+import pathlib
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    WindowedSeries,
+    percentile,
+)
+from repro.obs.trace import TraceRecorder
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+import check_invariants as ci  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# trace recorder
+# ---------------------------------------------------------------------------
+
+
+def test_trace_ring_buffer_bounds_and_counts_drops():
+    tr = TraceRecorder(capacity=4)
+    for i in range(10):
+        tr.instant(f"e{i}")
+    assert len(tr) == 4
+    assert tr.n_dropped == 6
+    # oldest dropped, newest kept
+    assert [e["name"] for e in tr.events] == ["e6", "e7", "e8", "e9"]
+    assert tr.to_chrome()["repro"]["dropped"] == 6
+    with pytest.raises(ValueError):
+        TraceRecorder(capacity=0)
+
+
+def test_trace_request_phases_close_automatically():
+    tr = TraceRecorder()
+    tr.req_begin(7, prompt_tokens=3)
+    tr.req_begin(7)  # idempotent: re-attachment never double-begins
+    tr.req_phase(7, "queued")
+    tr.req_phase(7, "queued")  # same-phase transition is a no-op
+    tr.req_phase(7, "prefill", slot=0)
+    tr.req_phase(7, "decode", slot=0)
+    tr.req_end(7, "ok")
+    evs = tr.events
+    assert sum(1 for e in evs if e["ph"] == "b" and e["name"] == "request") == 1
+    begins = [e["name"] for e in evs if e["ph"] == "b"]
+    ends = [e["name"] for e in evs if e["ph"] == "e"]
+    assert begins == ["request", "queued", "prefill", "decode"]
+    # every phase closed in order, envelope last, nothing dangles
+    assert ends == ["queued", "prefill", "decode", "request"]
+    assert tr.phase(7) is None
+
+
+def test_trace_complete_span_and_chrome_shape(tmp_path):
+    tr = TraceRecorder()
+    t0 = tr.now()
+    t1 = tr.now()
+    tr.complete("step", t0, t1, step=1)
+    d = tr.to_chrome()
+    assert d["displayTimeUnit"] == "ms"
+    # metadata name events prepended for Perfetto track naming
+    assert [e["ph"] for e in d["traceEvents"][:2]] == ["M", "M"]
+    x = d["traceEvents"][-1]
+    assert x["ph"] == "X" and x["dur"] >= 0 and x["args"] == {"step": 1}
+    p = tr.save(tmp_path / "sub" / "t.json")
+    assert json.loads(p.read_text())["repro"]["n_events"] == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_percentile_none_never_nan():
+    assert percentile([], 99) is None
+    assert percentile([1.0, 2.0, 3.0], 50) == 2.0
+    assert not math.isnan(percentile([5.0], 99))
+
+
+def test_counter_gauge_labels_and_monotonicity():
+    c = Counter("c")
+    c.inc(status="ok")
+    c.inc(2, status="ok")
+    c.inc(status="shed")
+    assert c.value(status="ok") == 3 and c.value(status="shed") == 1
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge("g")
+    g.set(5)
+    g.inc(-2)  # gauges may go down
+    assert g.value() == 3
+
+
+def test_histogram_buckets_and_nan_guard():
+    h = Histogram("h", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 2.0, float("nan")):
+        h.observe(v)
+    assert h.count == 3  # NaN never enters sums/percentiles
+    assert not math.isnan(h.sum)
+    samples = dict((f"{n}{l}", v) for n, l, v in h.samples())
+    assert samples['h_bucket{le="0.1"}'] == 1
+    assert samples['h_bucket{le="1"}'] == 2  # cumulative
+    assert samples['h_bucket{le="+Inf"}'] == 3
+    assert h.pct(50) == 0.5
+
+
+def test_registry_exposition_and_kind_clash():
+    reg = MetricsRegistry()
+    reg.counter("requests", "total requests").inc(3)
+    reg.gauge("depth").set(2)
+    assert reg.counter("requests") is reg.counter("requests")
+    with pytest.raises(TypeError):
+        reg.gauge("requests")
+    text = reg.prometheus_text()
+    assert "# HELP requests total requests" in text
+    assert "# TYPE requests counter" in text
+    assert "requests 3" in text and "depth 2" in text
+    snap = reg.snapshot()
+    assert snap["requests"] == 3
+
+
+def test_windowed_series_prunes_and_rates():
+    w = WindowedSeries()
+    for t in range(10):
+        w.add(float(t), 2.0)
+    assert w.sum(now=9.0, window=3.0) == 8.0  # t in {6,7,8,9} survive
+    assert w.rate(now=9.0, window=4.0) == 2.0
+    assert w.rate(now=9.0, window=0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# engine integration: live metrics mid-run, traced runs pass the gate
+# ---------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving import Engine, EngineConfig
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(n_slots=2, page_size=8, max_len=32, chunk_tokens=4, **kw)
+    eng = Engine(cfg, params, ecfg)
+    rng = jax.random.PRNGKey(1)
+    for _ in range(3):
+        rng, k = jax.random.split(rng)
+        eng.submit(jax.random.randint(k, (6,), 1, cfg.vocab).tolist(), 5)
+    return eng
+
+
+def test_live_metrics_mid_run_and_metrics_without_wall():
+    eng = _engine()
+    eng.warmup()
+    eng.run(realtime=False, max_steps=3)
+    live = eng.live_metrics()
+    assert live["steps"] == 3
+    assert live["active_slots"] > 0  # genuinely mid-run
+    assert live["steps_per_s_window"] > 0
+    mid = eng.metrics()  # no wall argument: engine supplies its own clock
+    assert mid["steps"] == 3 and mid["wall"] > 0
+    m = eng.run(realtime=False)  # resume to completion
+    assert m["statuses"] == {"ok": 3}
+    assert eng.metrics()["wall"] == m["wall"]  # frozen after the run
+    assert eng.live_metrics()["active_slots"] == 0
+    text = eng.prometheus_text()
+    assert "repro_steps_total" in text and 'status="ok"' in text
+
+
+def test_traced_run_passes_trace_gate_and_is_perfetto_shaped(tmp_path):
+    eng = _engine()
+    tr = TraceRecorder()
+    m = eng.run(realtime=False, trace=tr)
+    d = tr.to_chrome()
+    assert ci.check_trace(d) == []
+    assert d["repro"]["steps"] == m["steps"]
+    assert d["repro"]["statuses"] == m["statuses"]
+    # request lifecycle actually recorded: one envelope per request, with
+    # queued -> prefill -> decode phases and prefill_chunk instants
+    names = {e["name"] for e in d["traceEvents"]}
+    assert {"request", "queued", "prefill", "decode", "prefill_chunk",
+            "step", "dispatch", "device_wait"} <= names
+    # path variant: run() writes the file itself
+    eng2 = _engine()
+    out = tmp_path / "trace.json"
+    eng2.run(realtime=False, trace=str(out))
+    assert ci.run(str(out), "trace") == []
+
+
+def test_traced_chaos_run_reconciles_injections():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving import ChaosConfig, Engine, EngineConfig
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(n_slots=2, page_size=8, max_len=32, chunk_tokens=4,
+                     n_pages=5, admit="on-demand", max_request_retries=64),
+        chaos=ChaosConfig(seed=5, step_fault_rate=0.2, alloc_fault_rate=0.2,
+                          nan_rate=0.2),
+    )
+    rng = jax.random.PRNGKey(1)
+    for _ in range(3):
+        rng, k = jax.random.split(rng)
+        eng.submit(jax.random.randint(k, (6,), 1, cfg.vocab).tolist(), 5)
+    tr = TraceRecorder()
+    m = eng.run(realtime=False, trace=tr)
+    assert sum(m["injected"].values()) > 0, "chaos never fired; raise rates"
+    assert ci.check_trace(tr.to_chrome()) == []
+
+
+# ---------------------------------------------------------------------------
+# plan drift
+# ---------------------------------------------------------------------------
+
+
+def test_drift_report_structure_and_gate():
+    from repro.configs import get_config
+    from repro.obs.drift import build_report
+    from repro.plan.search import plan_from_bits
+
+    cfg = get_config("gemma3-1b", smoke=True)
+    plan = plan_from_bits(cfg, arch="gemma3-1b",
+                          bits=[(5, 4), (8, 4), (2, 2)], n_slots=4)
+    report = build_report(plan, cfg, n_slots=4, reps=1)
+    assert ci.check_drift(report) == []
+    assert report["n_layers"] == len(plan.layers)
+    assert report["n_distinct_bit_pairs"] == 3
+    for row in report["layers"]:
+        assert row["measured_us"] > 0
+        assert row["per_proj_us"]
+    shares = sum(r["measured_share"] for r in report["layers"])
+    assert shares == pytest.approx(1.0)
+    assert 0 <= report["rank_inversions"] <= report["n_layer_pairs"]
+    # JSON-safe end to end (no NaN, no numpy scalars)
+    json.loads(json.dumps(report, allow_nan=False))
+
+
+def test_kernel_timer_records_and_bests():
+    from repro.kernels.common import KernelTimer, kernel_timing, timed
+
+    timer = KernelTimer()
+    with kernel_timing(timer):
+        out, dt = timed(lambda x: x * 2, np.ones(4), label="mul")
+        timed(lambda x: x * 2, np.ones(4), label="mul")
+    assert dt > 0 and (out == 2.0).all()
+    assert len(timer.records["mul"]) == 2
+    assert timer.best("mul") == min(timer.records["mul"])
+    assert timer.total_best() == timer.best("mul")
+    # outside the context, labels go nowhere (timer detached, no crash)
+    timed(lambda x: x, np.ones(2), label="mul")
+    assert len(timer.records["mul"]) == 2

@@ -1,0 +1,112 @@
+"""EXPERIMENTS.md table rendering: golden table output from synthetic
+artifacts, tolerance of missing artifacts/EXPERIMENTS.md, idempotent
+re-rendering, and the plan-drift section."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from benchmarks import render_tables as rt  # noqa: E402
+from benchmarks import roofline  # noqa: E402
+
+DRYRUN_REC = {
+    "arch": "toy-1b", "shape": "s128", "mesh": "single", "chips": 1,
+    "memory": {"per_device_total_gb": 0.5},
+    "jaxpr_cost": {"flops": 1.5e9},
+    "collectives": {"total_bytes": 2.0e6},
+    "compile_s": 1.2,
+    # roofline.analyze_record inputs
+    "hbm_gbps": 100.0, "flops_per_s": 1e12, "ici_gbps": 10.0,
+}
+
+DRIFT_REP = {
+    "arch": "toy-1b", "plan_hash": "cafe0123", "backend": "interpret",
+    "n_distinct_bit_pairs": 3, "rank_inversions": 1, "n_layer_pairs": 3,
+    "pair_rank_inversions": 0,
+    "layers": [
+        {"w_bits": 5, "a_bits": 4, "predicted_share": 0.5,
+         "measured_share": 0.25, "drift": 0.5},
+        {"w_bits": 8, "a_bits": 4, "predicted_share": 0.3,
+         "measured_share": 0.6, "drift": 2.0},
+        {"w_bits": 2, "a_bits": 2, "predicted_share": 0.2,
+         "measured_share": 0.15, "drift": None},
+    ],
+}
+
+
+@pytest.fixture
+def fake_root(tmp_path, monkeypatch):
+    """Point both modules' artifact roots at an empty tmp tree."""
+    monkeypatch.setattr(rt, "ROOT", tmp_path)
+    monkeypatch.setattr(roofline, "ART", tmp_path / "artifacts" / "dryrun")
+    return tmp_path
+
+
+def test_all_tables_tolerate_missing_artifacts(fake_root):
+    assert rt.dryrun_table() == rt._EMPTY
+    assert rt.roofline_table() == rt._EMPTY
+    assert rt.sweep_delta_table() == rt._EMPTY
+    assert rt.plan_drift_table() == rt._EMPTY
+
+
+def test_main_seeds_skeleton_when_experiments_missing(fake_root, capsys):
+    rt.main()
+    md = (fake_root / "EXPERIMENTS.md").read_text()
+    assert "## Plan drift" in md
+    assert "<!-- PLAN_DRIFT_TABLE -->" in md and "<!-- /PLAN_DRIFT_TABLE -->" in md
+    assert md.count(rt._EMPTY) == 4
+    assert "rendered" in capsys.readouterr().out
+
+
+def test_dryrun_golden_row(fake_root):
+    d = fake_root / "artifacts" / "dryrun"
+    d.mkdir(parents=True)
+    (d / "toy__single.json").write_text(json.dumps(DRYRUN_REC))
+    # baseline records (serve_int8 / overrides) stay out of the main table
+    (d / "toy__int8.json").write_text(
+        json.dumps({**DRYRUN_REC, "serve_int8": True}))
+    table = rt.dryrun_table()
+    assert table.splitlines()[2] == (
+        "| toy-1b | s128 | single | 1 | 0.5 | 1.500e+09 | 2.000e+06 | 1.2 |"
+    )
+    assert len(table.splitlines()) == 3
+
+
+def test_plan_drift_golden(fake_root):
+    art = fake_root / "artifacts"
+    art.mkdir(parents=True)
+    (art / "plan_drift.json").write_text(json.dumps(DRIFT_REP))
+    out = rt.plan_drift_table()
+    assert "**1 of 3** layer-cost rank pairs inverted" in out
+    assert "`toy-1b` plan `cafe0123` on the `interpret` backend" in out
+    lines = out.splitlines()
+    assert "| 0 | w5a4 | 0.500 | 0.250 | 0.50x |" in lines
+    assert "| 1 | w8a4 | 0.300 | 0.600 | 2.00x |" in lines
+    assert "| 2 | w2a2 | — | — | — |" in lines  # null drift renders, not crashes
+
+
+def test_render_is_idempotent_and_upgrades_legacy_markers(fake_root):
+    art = fake_root / "artifacts"
+    art.mkdir(parents=True)
+    (art / "plan_drift.json").write_text(json.dumps(DRIFT_REP))
+    legacy = "intro\n<!-- PLAN_DRIFT_TABLE -->\nepilogue\n"
+    once = rt.render(legacy)
+    assert "<!-- /PLAN_DRIFT_TABLE -->" in once  # upgraded to paired form
+    assert "0.50x" in once and once.endswith("epilogue\n")
+    # re-render with changed artifact replaces the table, never appends
+    DRIFT_REP2 = {**DRIFT_REP, "plan_hash": "beef4567"}
+    (art / "plan_drift.json").write_text(json.dumps(DRIFT_REP2))
+    twice = rt.render(once)
+    assert "beef4567" in twice and "cafe0123" not in twice
+    assert twice.count("<!-- PLAN_DRIFT_TABLE -->") == 1
+    assert rt.render(twice) == twice
+
+
+def test_real_repo_render_runs_end_to_end():
+    # against whatever artifacts the repo actually has — must never raise
+    md = rt.render(rt.SKELETON)
+    assert "## Roofline" in md
