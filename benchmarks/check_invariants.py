@@ -378,28 +378,19 @@ def check_trace(d: dict) -> list[str]:
     return errs
 
 
-def check_drift(d: dict) -> list[str]:
-    """Plan-drift report: the predict-vs-measure loop must stay closed.
-
-    The artifact must cover a genuinely mixed plan (>= 3 distinct bit
-    pairs), carry a positive measured time and predicted cost per layer,
-    and have per-layer shares on both sides that sum to ~1 (a share that
-    doesn't is a normalization bug, not a measurement)."""
+def _check_drift_block(d: dict, where: str) -> list[str]:
+    """Shared per-measurement-discipline checks (standalone top level and
+    the ``in_situ`` block carry the same share/ranking structure)."""
     errs: list[str] = []
     layers = d.get("layers") or []
     if not layers:
-        return ["drift: no per-layer rows"]
-    if d.get("n_distinct_bit_pairs", 0) < 3:
-        errs.append(
-            f"drift: {d.get('n_distinct_bit_pairs')} distinct bit pair(s) — "
-            "the drift report must cover a >= 3-pair mixed plan"
-        )
+        return [f"{where}: no per-layer rows"]
     for share_key in ("predicted_share", "measured_share"):
         total = sum(l.get(share_key) or 0.0 for l in layers)
         if abs(total - 1.0) > 1e-6:
-            errs.append(f"drift: {share_key} sums to {total}, not 1")
+            errs.append(f"{where}: {share_key} sums to {total}, not 1")
     for l in layers:
-        tag = f"drift[{l.get('name', '?')}]"
+        tag = f"{where}[{l.get('name', '?')}]"
         if (l.get("measured_us") or 0) <= 0:
             errs.append(f"{tag}: non-positive measured_us {l.get('measured_us')}")
         if (l.get("predicted_dsp_ops") or 0) <= 0:
@@ -412,9 +403,147 @@ def check_drift(d: dict) -> list[str]:
     pairs = d.get("inverted_layer_pairs")
     if isinstance(pairs, list) and n_inv != len(pairs):
         errs.append(
-            f"drift: rank_inversions={n_inv} but {len(pairs)} inverted pair(s) "
-            "listed"
+            f"{where}: rank_inversions={n_inv} but {len(pairs)} inverted "
+            "pair(s) listed"
         )
+    return errs
+
+
+def check_drift(d: dict) -> list[str]:
+    """Plan-drift report: the predict-vs-measure loop must stay closed.
+
+    The artifact must cover a genuinely mixed plan (>= 3 distinct bit
+    pairs), carry a positive measured time and predicted cost per layer,
+    and have per-layer shares on both sides that sum to ~1 (a share that
+    doesn't is a normalization bug, not a measurement).  The same holds
+    for the ``in_situ`` block when present (``--mode in-situ``/``both``),
+    which must additionally record at least one attribution sample."""
+    errs: list[str] = []
+    in_situ = d.get("in_situ")
+    if not d.get("layers") and not in_situ:
+        return ["drift: neither standalone layers nor an in_situ block"]
+    if d.get("n_distinct_bit_pairs", 0) < 3:
+        errs.append(
+            f"drift: {d.get('n_distinct_bit_pairs')} distinct bit pair(s) — "
+            "the drift report must cover a >= 3-pair mixed plan"
+        )
+    if d.get("layers"):
+        errs += _check_drift_block(d, "drift")
+    if in_situ is not None:
+        errs += _check_drift_block(in_situ, "drift.in_situ")
+        if (in_situ.get("n_samples") or 0) < 1:
+            errs.append(
+                f"drift.in_situ: n_samples={in_situ.get('n_samples')} — the "
+                "in-situ block must come from >= 1 attribution sample"
+            )
+    return errs
+
+
+MONOTONE_COUNTER_TRACKS = ("preemptions_total", "shed_total")
+REQUIRED_COUNTER_TRACKS = (
+    "pages", "slots", "tokens_per_s_window", "preemptions_total", "shed_total",
+)
+
+
+def check_attrib(d: dict) -> list[str]:
+    """In-situ attribution + telemetry artifact (``--smoke --attrib``).
+
+    Both engine families must be covered, and per family: at least one
+    attribution sample whose count equals both the registry's attrib
+    counter and ``steps // attrib_every`` (sampling actually fired on
+    schedule), every sample attributing every served layer with positive
+    seconds and shares summing to ~1, every required Perfetto counter
+    track emitted each step (the monotone ones non-decreasing), and the
+    mid-run telemetry scrape clean: >= 1 scrape, zero conformance
+    violations, zero transport errors, well-formed ``/livez``."""
+    rows = d.get("attrib") or []
+    if not rows:
+        return ["attrib: no per-family rows"]
+    errs: list[str] = []
+    families = {r.get("family") for r in rows}
+    if not {"attn", "ssm"} <= families:
+        errs.append(
+            f"attrib: families {sorted(families)} — attribution must cover "
+            "both an attention and an SSM arch"
+        )
+    for r in rows:
+        tag = f"attrib[{r.get('family', '?')}]"
+        every = r.get("attrib_every") or 0
+        if every < 1:
+            errs.append(f"{tag}: attrib_every={every} — sampling was off")
+            continue
+        n_samples = r.get("n_samples") or 0
+        samples = r.get("samples") or []
+        if n_samples < 1:
+            errs.append(f"{tag}: no attribution samples")
+        if n_samples != len(samples):
+            errs.append(
+                f"{tag}: n_samples={n_samples} but {len(samples)} sample(s) "
+                "recorded"
+            )
+        if n_samples != r.get("attrib_steps"):
+            errs.append(
+                f"{tag}: n_samples={n_samples} != attrib counter "
+                f"{r.get('attrib_steps')} — samples and the registry counter "
+                "must move in lockstep"
+            )
+        expected = (r.get("steps") or 0) // every
+        if n_samples != expected:
+            errs.append(
+                f"{tag}: {n_samples} sample(s) over {r.get('steps')} steps "
+                f"at every={every} — expected {expected} (sampling skipped "
+                "or double-fired)"
+            )
+        n_layers = r.get("n_layers") or 0
+        for s in samples:
+            where = f"{tag} step {s.get('step')}"
+            layers = s.get("layers") or []
+            idx = {l.get("index") for l in layers}
+            if idx != set(range(n_layers)):
+                errs.append(
+                    f"{where}: attributed layer indices {sorted(idx)} != "
+                    f"served layers 0..{n_layers - 1}"
+                )
+            total = sum(l.get("share") or 0.0 for l in layers)
+            if abs(total - 1.0) > 1e-6:
+                errs.append(f"{where}: shares sum to {total}, not 1")
+            for l in layers:
+                if (l.get("seconds") or 0) <= 0:
+                    errs.append(
+                        f"{where}: layer {l.get('index')} non-positive "
+                        f"seconds {l.get('seconds')}"
+                    )
+        tracks = r.get("counter_tracks") or {}
+        for name in REQUIRED_COUNTER_TRACKS:
+            series = tracks.get(name) or []
+            if len(series) != (r.get("steps") or 0):
+                errs.append(
+                    f"{tag}: counter track {name!r} has {len(series)} "
+                    f"sample(s) over {r.get('steps')} steps — counters must "
+                    "be emitted every traced step"
+                )
+        for name in MONOTONE_COUNTER_TRACKS:
+            vals = [v for args in (tracks.get(name) or []) for v in args.values()]
+            if any(b < a for a, b in zip(vals, vals[1:])):
+                errs.append(
+                    f"{tag}: counter track {name!r} decreases — totals must "
+                    "be monotone"
+                )
+        tel = r.get("telemetry") or {}
+        if (tel.get("n_scrapes") or 0) < 1:
+            errs.append(f"{tag}: telemetry endpoint was never scraped")
+        if tel.get("parse_errors"):
+            errs.append(
+                f"{tag}: {len(tel['parse_errors'])} exposition conformance "
+                f"violation(s), e.g. {tel['parse_errors'][0]!r}"
+            )
+        if tel.get("scrape_errors"):
+            errs.append(
+                f"{tag}: {len(tel['scrape_errors'])} scrape transport "
+                f"error(s), e.g. {tel['scrape_errors'][0]!r}"
+            )
+        if not tel.get("livez_ok", False):
+            errs.append(f"{tag}: /livez returned a malformed payload")
     return errs
 
 
@@ -439,6 +568,7 @@ CHECKS = {
     "deploy-plan": check_deploy_plan,
     "trace": check_trace,
     "drift": check_drift,
+    "attrib": check_attrib,
 }
 
 
@@ -447,8 +577,10 @@ def infer_kind(path: pathlib.Path) -> str | None:
     if "plans" in [p.lower() for p in path.parts[:-1]]:
         return "deploy-plan"
     # order matters: "trace_serving_attn.json" is a trace, not a serving
-    # bench, and "plan_drift.json" is a drift report, not a plan bench
-    for kind in ("trace", "drift", "serving", "plan", "packing", "kernels"):
+    # bench, "plan_drift.json" is a drift report, not a plan bench, and
+    # "BENCH_serving_attrib_smoke.json" is an attrib artifact, not a
+    # serving bench ("trace_attrib_*.json" still gates as a trace)
+    for kind in ("trace", "drift", "attrib", "serving", "plan", "packing", "kernels"):
         if kind in name:
             return kind
     return None

@@ -40,6 +40,10 @@ Rendered by `python -m benchmarks.render_tables` from `artifacts/`.
 ## Plan drift (predicted vs measured)
 
 <!-- PLAN_DRIFT_TABLE -->
+
+## In-situ attribution (inside the fused serving step)
+
+<!-- IN_SITU_ATTRIB_TABLE -->
 """
 
 _EMPTY = "_(no artifacts)_"
@@ -140,11 +144,51 @@ def plan_drift_table(report_path: pathlib.Path | None = None) -> str:
     return f"{summary}\n\n{table}"
 
 
+def in_situ_attrib_table(report_path: pathlib.Path | None = None) -> str:
+    """Per-layer cost shares measured *inside* the fused serving step
+    (the engine's sampled LayerAttributor) next to the standalone
+    microbenchmark shares — whether the standalone drift story survives
+    the paged-KV / continuous-batching context the plan actually runs
+    in.  Sourced from the ``in_situ`` block of the drift report."""
+    path = report_path or ROOT / "artifacts" / "plan_drift.json"
+    if not path.exists():
+        return _EMPTY
+    rep = json.loads(path.read_text())
+    blk = rep.get("in_situ")
+    if not blk:
+        return _EMPTY
+    standalone = {i: r.get("measured_share")
+                  for i, r in enumerate(rep.get("layers", []))}
+    rows = []
+    for i, r in enumerate(blk.get("layers", [])):
+        sa = standalone.get(i)
+        sa_cell = f"{sa:.3f}" if sa is not None else "—"
+        drift_cell = f"{r['drift']:.2f}x" if r.get("drift") is not None else "—"
+        rows.append(
+            f"| {i} | w{r['w_bits']}a{r['a_bits']} | {r['predicted_share']:.3f} "
+            f"| {sa_cell} | {r['measured_share']:.3f} | {drift_cell} |"
+        )
+    table = _table(
+        ["| layer | bits | predicted share | standalone share | in-situ share | in-situ drift |",
+         "|---|---|---|---|---|---|"],
+        rows,
+    )
+    summary = (
+        f"**{blk.get('n_samples', 0)}** sampled steps (every "
+        f"{blk.get('attrib_every', '?')} of {blk.get('steps', '?')}) inside "
+        f"the fused step: **{blk.get('rank_inversions', 0)} of "
+        f"{blk.get('n_layer_pairs', 0)}** layer-cost rank pairs inverted "
+        f"in-situ (standalone: {rep.get('rank_inversions', 0)})."
+    )
+    return f"{summary}\n\n{table}"
+
+
 TABLES = {
     "DRYRUN_TABLE": dryrun_table,
     "ROOFLINE_TABLE": roofline_table,
     "SWEEP_DELTA_TABLE": sweep_delta_table,
     "PLAN_DRIFT_TABLE": plan_drift_table,
+    "IN_SITU_ATTRIB_TABLE": in_situ_attrib_table,
 }
 
 

@@ -43,11 +43,18 @@ under ``artifacts/traces/``: a traced lifecycle run per engine family
 (and, with ``--chaos``, the chaos arm's trace, whose injection events
 the trace gate reconciles against the injected-fault counters).
 
+``--smoke --attrib`` runs ONLY the in-situ attribution + live-telemetry
+sweep: both engine families with per-layer attribution sampling armed
+and a telemetry endpoint scraped mid-run (every scrape parsed by the
+``repro.obs.promcheck`` conformance checker), writing
+``BENCH_serving_attrib_smoke.json`` for the ``--kind attrib`` gate.
+
   python benchmarks/serving_bench.py                 # full sweep (3 rates)
   python benchmarks/serving_bench.py --rates 8,64    # custom full sweep
   python benchmarks/serving_bench.py --smoke         # CI artifact
   python benchmarks/serving_bench.py --smoke --trace # CI trace artifact
   python benchmarks/serving_bench.py --smoke --chaos # CI chaos artifact
+  python benchmarks/serving_bench.py --smoke --attrib # CI obs artifact
 """
 from __future__ import annotations
 
@@ -66,6 +73,7 @@ for _p in (str(_ROOT), str(_ROOT / "src")):  # support `python benchmarks/servin
 BENCH_JSON = _ROOT / "BENCH_serving.json"
 BENCH_JSON_SMOKE = _ROOT / "BENCH_serving_smoke.json"  # never the committed file
 BENCH_JSON_CHAOS_SMOKE = _ROOT / "BENCH_serving_chaos_smoke.json"  # chaos CI gate
+BENCH_JSON_ATTRIB_SMOKE = _ROOT / "BENCH_serving_attrib_smoke.json"  # obs CI gate
 TRACES_DIR = _ROOT / "artifacts" / "traces"  # --trace output (CI-gated, not committed)
 
 # the long-prompt admit sweep's chunk budget (on-demand arm)
@@ -75,6 +83,9 @@ CHUNK_TOKENS = 8
 # requires >= 0.2), on one attention and one SSM arch
 CHAOS_RATE = 0.2
 CHAOS_ARCHS = (("llama3.2-3b", "attn"), ("mamba2-130m", "ssm"))
+
+# attrib sweep: in-situ attribution sampling period (engine steps)
+ATTRIB_EVERY = 2
 
 
 def make_workload(
@@ -360,6 +371,117 @@ def chaos_sweep(args, smoke: bool) -> list[dict]:
     return rows
 
 
+def _scrape_loop(url: str, stop, out: dict) -> None:
+    """Background scraper: poll /metrics + /livez until told to stop,
+    recording scrape counts, conformance violations, and livez shape."""
+    import urllib.request
+
+    from repro.obs.promcheck import check_exposition
+
+    while True:
+        try:
+            text = urllib.request.urlopen(url + "/metrics", timeout=5).read().decode()
+            errs = check_exposition(text)
+            out["n_scrapes"] += 1
+            if errs:
+                out["parse_errors"].extend(errs[:5])
+            live = json.loads(
+                urllib.request.urlopen(url + "/livez", timeout=5).read().decode()
+            )
+            if not isinstance(live.get("steps"), int):
+                out["livez_ok"] = False
+        except Exception as exc:  # noqa: BLE001 — recorded, gated on
+            out["scrape_errors"].append(f"{type(exc).__name__}: {exc}")
+        if stop.is_set():
+            return  # final post-run scrape already done
+        stop.wait(0.002)
+
+
+def attrib_sweep(args, smoke: bool) -> list[dict]:
+    """In-situ attribution + live telemetry on BOTH engine families.
+
+    Each family runs the trace sweep's tight on-demand geometry with
+    attribution sampling every ``ATTRIB_EVERY`` steps and a
+    :class:`repro.obs.server.TelemetryServer` attached; a scraper thread
+    polls ``/metrics`` and ``/livez`` *mid-run*, validating every scrape
+    under the :mod:`repro.obs.promcheck` conformance parser.  The
+    artifact records the raw attribution samples (per-layer seconds +
+    shares), the attribution counters, the Perfetto counter-track
+    series, and the scrape results — everything the
+    ``check_invariants.py --kind attrib`` gate needs: shares sum to 1
+    per sampled step, sampled-step count equals the attrib counter,
+    every served layer attributed, monotone counter tracks, clean
+    scrapes.
+    """
+    from repro.configs import get_config
+    from repro.obs.server import TelemetryServer
+
+    n_requests = 8 if smoke else 16
+    shape = dict(n_slots=4, page_size=8, max_len=32, n_pages=9,
+                 admit="on-demand", chunk_tokens=4,
+                 attrib_every=ATTRIB_EVERY)
+    rows = []
+    for arch, family in CHAOS_ARCHS:
+        cfg = get_config(arch, smoke=True)
+        wl = make_workload(n_requests, 2.0, seed=args.seed + 6, vocab=cfg.vocab,
+                           prompt_range=(8, 17), gen_range=(8, 16))
+        eng = _lifecycle_engine(arch, **shape)
+        for w in wl:
+            eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
+        eng.warmup()
+        path = TRACES_DIR / f"trace_attrib_{family}.json"
+
+        def trace_segment(since, eng=eng):
+            tr = eng._trace
+            return tr.segment(since) if tr is not None else ([], since, 0)
+
+        import threading
+
+        scrape = {"n_scrapes": 0, "parse_errors": [], "scrape_errors": [],
+                  "livez_ok": True}
+        stop = threading.Event()
+        with TelemetryServer(metrics_fn=eng.prometheus_text,
+                             livez_fn=eng.live_metrics,
+                             trace_fn=trace_segment) as srv:
+            t = threading.Thread(target=_scrape_loop,
+                                 args=(srv.url, stop, scrape), daemon=True)
+            t.start()
+            m = eng.run(realtime=False, trace=str(path))
+            stop.set()  # loop does one final post-run scrape, then exits
+            t.join(timeout=10.0)
+        # counter-track series, in emission order, straight from the
+        # sealed trace file (what Perfetto will actually plot)
+        trace_doc = json.loads(path.read_text())
+        counters: dict[str, list[dict]] = {}
+        for e in trace_doc["traceEvents"]:
+            if e.get("ph") == "C":
+                counters.setdefault(e["name"], []).append(e["args"])
+        at = eng._attrib
+        row = {
+            "arch": arch,
+            "family": family,
+            "attrib_every": ATTRIB_EVERY,
+            "n_layers": cfg.n_layers,
+            "steps": m["steps"],
+            "statuses": m["statuses"],
+            "preemptions": m["preemptions"],
+            "attrib_steps": eng.registry.counter("repro_attrib_steps_total").value(),
+            "n_samples": len(at.samples),
+            "samples": at.samples,
+            "summary": at.summary(),
+            "counter_tracks": counters,
+            "telemetry": scrape,
+            "trace": str(path.relative_to(_ROOT)),
+        }
+        rows.append(row)
+        print(
+            f"attrib_{family},0.0,steps={m['steps']};"
+            f"samples={len(at.samples)};scrapes={scrape['n_scrapes']};"
+            f"parse_errors={len(scrape['parse_errors'])};path={row['trace']}"
+        )
+    return rows
+
+
 def deadline_sweep(args, smoke: bool) -> dict:
     """Mixed-SLO workload over a bounded queue under backlog.
 
@@ -443,6 +565,10 @@ def main(argv=None) -> None:
                     help="with --smoke: run ONLY the chaos + deadline sweeps "
                     "and write BENCH_serving_chaos_smoke.json (the CI chaos "
                     "gate); full runs always include those sweeps")
+    ap.add_argument("--attrib", action="store_true",
+                    help="with --smoke: run ONLY the in-situ attribution + "
+                    "live-telemetry sweep and write "
+                    "BENCH_serving_attrib_smoke.json (the CI obs gate)")
     ap.add_argument("--rates", default=None,
                     help="comma-separated arrival rates for the full sweep "
                     "(incompatible with --smoke, which fixes its rate)")
@@ -468,11 +594,34 @@ def main(argv=None) -> None:
         # exists only to carve out the focused CI smoke artifact
         ap.error("--chaos selects the chaos-only smoke artifact; add --smoke "
                  "(full runs include the chaos sweep unconditionally)")
+    if args.attrib and not args.smoke:
+        ap.error("--attrib selects the attribution-only smoke artifact; add "
+                 "--smoke")
+    if args.attrib and args.chaos:
+        ap.error("--attrib and --chaos write different CI artifacts; pick one")
+    if args.attrib and args.trace:
+        ap.error("--attrib always writes its own traces (trace_attrib_*.json); "
+                 "drop --trace")
 
     skipped: list[str] = []  # every scenario a mode drops, logged explicitly
     print("name,tokens_per_s,derived")
 
-    if args.chaos:
+    if args.attrib:
+        skipped += [
+            "policy_sweep (attrib-only artifact; run --smoke without --attrib)",
+            "long_prompt_sweep (attrib-only artifact)",
+            "chaos_sweep (covered by `serving_bench.py --smoke --chaos`)",
+            "deadline_sweep (covered by `serving_bench.py --smoke --chaos`)",
+        ]
+        payload = {
+            "arch": args.arch,
+            "smoke": True,
+            "attrib_only": True,
+            "attrib": attrib_sweep(args, smoke=True),
+            "skipped": skipped,
+        }
+        target = BENCH_JSON_ATTRIB_SMOKE
+    elif args.chaos:
         skipped += [
             "policy_sweep (chaos-only artifact; run --smoke without --chaos)",
             "long_prompt_sweep (chaos-only artifact; run --smoke without --chaos)",

@@ -10,6 +10,7 @@
 8. Chunked prefill + on-demand admission with preemption/requeue
 9. Fault-hardened serving: deadlines, cancellation, shedding, chaos
 10. Observability: request/step tracing (Perfetto), live metrics, plan drift
+11. In-situ per-layer attribution + live telemetry endpoint (/metrics)
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -270,4 +271,51 @@ print(f"  drift over {rep['n_layers']} layers ({rep['n_distinct_bit_pairs']} "
 # EXPERIMENTS.md):
 #   python -m repro.obs.drift --plan artifacts/plans/drift-mixed.json
 #   python benchmarks/serving_bench.py --smoke --trace   # CI trace-smoke job
+
+# -- 11. in-situ attribution + live telemetry ---------------------------------
+print("== In-situ per-layer attribution + live telemetry endpoint ==")
+# attrib_every=N re-runs every Nth step segmented per layer on a copy of
+# the pre-step state (the fused step donates its input, so the copy is
+# what keeps re-execution safe) and attributes device time to each layer
+# and its (w_bits, a_bits) pair — inside the serving engine, not a
+# standalone microbenchmark.  Attribution rides the trace as child spans
+# under device_wait on the "layer-attribution" track, and every traced
+# step also emits Perfetto counter tracks (free pages, active/waiting
+# slots, windowed tok/s, preemption + shed totals).
+import json as _json
+import urllib.request
+
+from repro.obs import TelemetryServer
+
+d_params, d_head = apply_plan(T.init_params(jax.random.PRNGKey(0), cfg_d),
+                              cfg_d, dplan)
+eng = Engine(cfg_d, d_params,
+             EngineConfig(n_slots=2, page_size=4, max_len=32, chunk_tokens=4,
+                          attrib_every=2),
+             head=d_head)
+for n in (9, 6, 11):
+    eng.submit(rng.integers(1, cfg_d.vocab, size=n).tolist(), 5)
+# the telemetry endpoint is engine-agnostic: hand it callables and scrape
+# /metrics (Prometheus 0.0.4), /livez (windowed JSON), /trace (segments)
+with TelemetryServer(metrics_fn=eng.prometheus_text,
+                     livez_fn=eng.live_metrics) as srv:
+    m = eng.run(realtime=False)
+    scraped = urllib.request.urlopen(srv.url + "/metrics").read().decode()
+    live = _json.loads(urllib.request.urlopen(srv.url + "/livez").read())
+summ = eng._attrib.summary()
+print(f"  {summ['n_samples']} sampled steps over {m['steps']} "
+      f"(every 2): per-pair mean shares " + ", ".join(
+          f"{p['pair']}={p['mean_share']:.1%}" for p in summ["pairs"]))
+print("  scraped mid-serve: " +
+      next(l for l in scraped.splitlines()
+           if l.startswith("repro_attrib_pair_seconds_total")))
+print(f"  /livez: steps={live['steps']} active={live['active_slots']}")
+# the same wiring from the shell — serve with a live endpoint, then
+# curl http://127.0.0.1:9100/metrics while it runs; --trace writes the
+# counter tracks + attribution spans for Perfetto, checkpointed mid-run:
+#   PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+#       --telemetry-port 9100 --attrib-every 8 \
+#       --trace artifacts/traces/serve.json --trace-checkpoint-every 64
+# CI gates this end to end (benchmarks/serving_bench.py --smoke --attrib
+# scrapes both engine families mid-run, then check_invariants --kind attrib)
 print("quickstart complete.")

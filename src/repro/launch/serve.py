@@ -36,6 +36,16 @@ records the full request lifecycle and per-step dispatch/device-wait
 timeline as Chrome trace JSON (open at https://ui.perfetto.dev), and
 ``--metrics-out FILE`` dumps the engine's Prometheus text exposition.
 
+Live telemetry (continuous engine only): ``--telemetry-port P`` serves
+``/metrics`` (Prometheus text), ``/livez`` (windowed live rates JSON)
+and ``/trace?since=N`` (incremental trace flush) on a background thread
+while the run is in flight; ``--attrib-every N`` samples in-situ
+per-layer attribution every N steps (per-layer/bit-pair time shares in
+``/metrics`` and as Perfetto child spans under ``device_wait``, summary
+printed after the run); ``--trace-checkpoint-every N`` rewrites the
+``--trace`` file every N steps so a crashed run still leaves a
+loadable trace.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m --tokens 64
   PYTHONPATH=src python -m repro.launch.serve --packed --wbits 4 --abits 4
   PYTHONPATH=src python -m repro.launch.serve --engine static --int8
@@ -158,6 +168,9 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
             packed_head=args.packed_head,
             head_bits=(args.wbits, args.abits) if args.packed else (8, 8),
             max_waiting=args.max_waiting,
+            attrib_every=args.attrib_every,
+            attrib_reps=args.attrib_reps,
+            trace_checkpoint_every=args.trace_checkpoint_every,
         ),
         head=head,
         chaos=chaos if chaos.enabled else None,
@@ -171,8 +184,35 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
             deadline=args.deadline, ttft_deadline=args.ttft_deadline,
         )
     eng.warmup()  # compile outside the timed run, like the static loop
-    m = eng.run(realtime=True, trace=args.trace)
+    server = None
+    if args.telemetry_port is not None:
+        from repro.obs.server import TelemetryServer
+
+        def trace_segment(since):
+            tr = eng._trace  # armed by run(trace=...); None until then
+            return tr.segment(since) if tr is not None else ([], since, 0)
+
+        server = TelemetryServer(
+            metrics_fn=eng.prometheus_text,
+            livez_fn=eng.live_metrics,
+            trace_fn=trace_segment,
+            port=args.telemetry_port,
+        )
+        print(f"telemetry at {server.url} (/metrics /livez /trace)")
+    try:
+        m = eng.run(realtime=True, trace=args.trace)
+    finally:
+        if server is not None:
+            server.close()
     m["latency_ms_per_step"] = m["wall"] / max(1, m["steps"]) * 1e3
+    if eng._attrib is not None:
+        summ = eng._attrib.summary()
+        m["attrib"] = summ
+        pairs = ", ".join(
+            f"{p['pair']}: {p['mean_share']:.1%} ({p['n_layers']} layers)"
+            for p in summ["pairs"]
+        )
+        print(f"attribution ({summ['n_samples']} sampled steps): {pairs}")
     if args.trace:
         print(f"trace written to {args.trace} (load at https://ui.perfetto.dev)")
     if args.metrics_out:
@@ -248,6 +288,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--metrics-out", metavar="FILE", default=None,
                     help="continuous engine: write Prometheus text exposition "
                     "of the engine metrics registry after the run")
+    ap.add_argument("--telemetry-port", type=int, default=None,
+                    help="continuous engine: serve /metrics, /livez and "
+                    "/trace on this port (0 = ephemeral) for the duration "
+                    "of the run")
+    ap.add_argument("--attrib-every", type=int, default=0,
+                    help="continuous engine: every N steps, re-execute the "
+                    "step segmented per layer and attribute device time to "
+                    "each layer / bit pair (0 = off)")
+    ap.add_argument("--attrib-reps", type=int, default=1,
+                    help="timing repetitions per attribution segment "
+                    "(min-of-reps)")
+    ap.add_argument("--trace-checkpoint-every", type=int, default=0,
+                    help="with --trace: rewrite the partial trace to disk "
+                    "every N steps (crash-durable traces; 0 = only at end)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
@@ -302,6 +356,20 @@ def main(argv=None) -> dict:
             "--trace/--metrics-out record the continuous engine's request "
             "lifecycle and step timeline; they have no effect on --engine "
             "static — drop them or switch engines"
+        )
+    if engine != "continuous" and (
+        args.telemetry_port is not None or args.attrib_every
+        or args.trace_checkpoint_every
+    ):
+        raise SystemExit(
+            "--telemetry-port/--attrib-every/--trace-checkpoint-every drive "
+            "the continuous engine's observability; they have no effect on "
+            "--engine static — drop them or switch engines"
+        )
+    if args.trace_checkpoint_every and not args.trace:
+        raise SystemExit(
+            "--trace-checkpoint-every rewrites the --trace file mid-run; "
+            "add --trace PATH or drop it"
         )
     params = T.init_params(jax.random.PRNGKey(0), cfg)
     head = None

@@ -656,6 +656,103 @@ def reset_paged_slot(cfg: ModelConfig, state: dict, slot: jax.Array) -> dict:
     )
 
 
+def embed_paged(params: dict, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    """Token embedding + batch sharding for the paged decode step — the
+    entry segment of :func:`forward_decode_paged`, exposed so the in-situ
+    attributor (:mod:`repro.obs.attrib`) re-executes the exact op."""
+    x = params["embed"].astype(cfg.dtype)[tokens]  # [S, C, d]
+    return shard(x, "batch", None, None)
+
+
+def decode_paged_layer(
+    p,
+    cfg: ModelConfig,
+    layer_state: dict,
+    block_table: jax.Array,
+    h: jax.Array,  # [S, C, d] hidden states entering this layer
+    pos: jax.Array,
+    *,
+    window: jax.Array | int = -1,
+    lens: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """One layer of the paged decode/prefill step.
+
+    ``layer_state`` holds this layer's slice of the paged state
+    (``k``/``v`` [+ ``k_scale``/``v_scale`` for int8 pools] for attention
+    families; ``ssm``/``conv`` for SSM).  Returns the layer's output
+    hidden states and its updated state slice.
+
+    This is the single per-layer body: :func:`forward_decode_paged` scans
+    (or unrolls) it over the stack, and the in-situ attributor
+    (:mod:`repro.obs.attrib`) times it segment by segment — identical
+    math by construction, so segmented re-execution attributes the real
+    fused step, not a lookalike.
+    """
+    if cfg.family == "attn":
+        aspec = cfg.attn_spec()
+        kv_int8 = layer_state["k"].dtype == jnp.int8
+        if kv_int8:
+            h, nk, nv, nks, nvs = L.attention_decode_paged(
+                p["attn"], aspec, h, layer_state["k"], layer_state["v"],
+                block_table, pos, window=window, quant=cfg.quant,
+                pool_k_scale=layer_state["k_scale"],
+                pool_v_scale=layer_state["v_scale"], lens=lens,
+            )
+        else:
+            h, nk, nv = L.attention_decode_paged(
+                p["attn"], aspec, h, layer_state["k"], layer_state["v"],
+                block_table, pos, window=window, quant=cfg.quant, lens=lens,
+            )
+            nks = nvs = None
+        if cfg.is_moe:
+            h = _moe_block(p["moe"], cfg, h)
+        else:
+            h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
+        new_state = {"k": nk, "v": nv}
+        if kv_int8:
+            new_state.update(k_scale=nks, v_scale=nvs)
+        return h, new_state
+    if cfg.family == "ssm":
+        sspec = cfg.ssm_spec()
+        if h.shape[1] > 1 or lens is not None:
+            # recurrent over the lane axis; invalid lanes leave state alone
+            h, ns, nc = M.mamba_decode_chunk(
+                p, sspec, h, layer_state["ssm"], layer_state["conv"],
+                lens=lens, quant=cfg.quant,
+            )
+        else:
+            h, ns, nc = M.mamba_decode(
+                p, sspec, h, layer_state["ssm"], layer_state["conv"],
+                quant=cfg.quant,
+            )
+        return h, {"ssm": ns, "conv": nc}
+    raise NotImplementedError(
+        f"continuous-batching serving supports attn/ssm families, not {cfg.family!r}"
+    )
+
+
+def head_paged(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # [S, C, d] final hidden states
+    lens: jax.Array | None = None,
+    head: Any = None,
+) -> jax.Array:
+    """Final norm + last-valid-lane gather + LM head — the exit segment
+    of :func:`forward_decode_paged`, shared with the in-situ attributor."""
+    x = L.rmsnorm(params["final_ln"], x)
+    if lens is not None:
+        # only each slot's last valid lane is ever sampled; gather it before
+        # the (wide) LM-head matmul so the logits buffer stays [S, V]
+        last = jnp.maximum(lens - 1, 0)[:, None, None]
+        x_last = jnp.take_along_axis(x, last, axis=1)[:, 0]
+    else:
+        # lens=None: every lane valid, so the newest token is the last lane
+        # (identical to lane 0 on the legacy C == 1 call sites)
+        x_last = x[:, -1, :]
+    return L.lm_head(x_last, params["embed"], cfg.dtype, packed=head)
+
+
 def forward_decode_paged(
     params: dict,
     cfg: ModelConfig,
@@ -688,32 +785,20 @@ def forward_decode_paged(
     static metadata differs per layer, so they cannot ride one scan and
     are unrolled instead — same math, layer by layer.
     """
-    x = params["embed"].astype(cfg.dtype)[tokens]  # [S, C, d]
-    x = shard(x, "batch", None, None)
+    x = embed_paged(params, cfg, tokens)
     per_layer = isinstance(params["layers"], (list, tuple))
     if cfg.family == "attn":
-        aspec = cfg.attn_spec()
         windows = cfg.windows()
         kv_int8 = state["k"].dtype == jnp.int8
 
         def one_layer(h, p, pk, pv, pks, pvs, win):
+            st = {"k": pk, "v": pv}
             if kv_int8:
-                h, npk, npv, npks, npvs = L.attention_decode_paged(
-                    p["attn"], aspec, h, pk, pv, block_table, pos,
-                    window=win, quant=cfg.quant,
-                    pool_k_scale=pks, pool_v_scale=pvs, lens=lens,
-                )
-            else:
-                h, npk, npv = L.attention_decode_paged(
-                    p["attn"], aspec, h, pk, pv, block_table, pos,
-                    window=win, quant=cfg.quant, lens=lens,
-                )
-                npks = npvs = None
-            if cfg.is_moe:
-                h = _moe_block(p["moe"], cfg, h)
-            else:
-                h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
-            return h, npk, npv, npks, npvs
+                st.update(k_scale=pks, v_scale=pvs)
+            h, nst = decode_paged_layer(
+                p, cfg, st, block_table, h, pos, window=win, lens=lens
+            )
+            return h, nst["k"], nst["v"], nst.get("k_scale"), nst.get("v_scale")
 
         if per_layer:
             nk, nv, nks, nvs = [], [], [], []
@@ -756,14 +841,12 @@ def forward_decode_paged(
             )
             new_state = dict(state, k=nk, v=nv)
     elif cfg.family == "ssm":
-        chunked = tokens.shape[1] > 1 or lens is not None
-        sspec = cfg.ssm_spec()
 
         def ssm_step(h, p, st, cv):
-            if chunked:
-                # recurrent over the lane axis; invalid lanes leave state alone
-                return M.mamba_decode_chunk(p, sspec, h, st, cv, lens=lens, quant=cfg.quant)
-            return M.mamba_decode(p, sspec, h, st, cv, quant=cfg.quant)
+            h, nst = decode_paged_layer(
+                p, cfg, {"ssm": st, "conv": cv}, block_table, h, pos, lens=lens
+            )
+            return h, nst["ssm"], nst["conv"]
 
         if per_layer:
             ns_l, nc_l = [], []
@@ -786,17 +869,7 @@ def forward_decode_paged(
             f"continuous-batching serving supports attn/ssm families, not {cfg.family!r}"
         )
 
-    x = L.rmsnorm(params["final_ln"], x)
-    if lens is not None:
-        # only each slot's last valid lane is ever sampled; gather it before
-        # the (wide) LM-head matmul so the logits buffer stays [S, V]
-        last = jnp.maximum(lens - 1, 0)[:, None, None]
-        x_last = jnp.take_along_axis(x, last, axis=1)[:, 0]
-    else:
-        # lens=None: every lane valid, so the newest token is the last lane
-        # (identical to lane 0 on the legacy C == 1 call sites)
-        x_last = x[:, -1, :]
-    logits = L.lm_head(x_last, params["embed"], cfg.dtype, packed=head)
+    logits = head_paged(params, cfg, x, lens=lens, head=head)
     return logits, new_state
 
 

@@ -21,8 +21,21 @@ predicted and measured orderings, i.e. Kendall disagreement).  Output is
 interpret-vs-TPU inversions are a committed artifact instead of a
 footnote.
 
+Two measurement modes, selected by ``--mode`` (default ``both``):
+
+* **standalone** — each projection timed in isolation through the real
+  packed-matmul entry point (the original report);
+* **in-situ** — the plan is actually *served*: a continuous-batching
+  engine runs a synthetic workload with attribution sampling on
+  (:mod:`repro.obs.attrib`), and per-layer time comes from segmented
+  re-execution of the fused step — embedding/attention/normalization
+  overheads included, measured in the serving configuration the plan
+  targets.  Rank inversions are reported for both, side by side; a
+  layer pair that inverts in situ but not standalone is overhead-driven
+  drift the isolated timing can't see.
+
   PYTHONPATH=src python -m repro.obs.drift --plan artifacts/plans/ci-plan.json
-  PYTHONPATH=src python -m repro.obs.drift --plan p.json --out artifacts/plan_drift.json
+  PYTHONPATH=src python -m repro.obs.drift --plan p.json --mode in-situ --attrib-every 2
 """
 from __future__ import annotations
 
@@ -107,6 +120,79 @@ def measure_layer_times(
     return rows
 
 
+def measure_layer_times_in_situ(
+    plan,
+    cfg,
+    *,
+    n_slots: int | None = None,
+    attrib_every: int = 2,
+    reps: int = 1,
+    seed: int = 0,
+) -> tuple[list[dict], dict]:
+    """Per-layer microseconds measured *inside* the fused serving step.
+
+    Serves the plan for real: builds a continuous-batching engine over
+    the plan-applied params (per-layer mixed precision + prepacked head),
+    runs a synthetic workload on the virtual clock with attribution
+    sampling armed, and averages the :class:`repro.obs.attrib`
+    per-layer seconds across all sampled steps.  Unlike
+    :func:`measure_layer_times`, a layer's time here includes its
+    attention/SSM mixing, norms, and dispatch overheads — the costs the
+    plan compiler's matmul-only model never sees.
+
+    Returns ``(rows, meta)``: one row per layer with ``measured_us``,
+    and sampling metadata (``n_samples``, ``attrib_every``, ``steps``).
+    """
+    from repro.models import transformer as T
+    from repro.plan.apply import apply_plan
+    from repro.serving import Engine, EngineConfig
+
+    n_slots = n_slots or int(plan.budget.get("n_slots", 8))
+    params = T.init_params(jax.random.PRNGKey(seed), cfg)
+    params, head = apply_plan(params, cfg, plan)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(
+            n_slots=n_slots, page_size=8, max_len=32, chunk_tokens=4,
+            admit="reserve", attrib_every=attrib_every, attrib_reps=reps,
+        ),
+        head=head,
+    )
+    rng = jax.random.PRNGKey(seed + 1)
+    for _ in range(2 * n_slots):
+        rng, k = jax.random.split(rng)
+        eng.submit(jax.random.randint(k, (6,), 1, cfg.vocab).tolist(), 5)
+    eng.run(realtime=False)
+    samples = eng._attrib.samples
+    if not samples:
+        raise RuntimeError(
+            f"attribution produced no samples over {eng.n_steps} steps "
+            f"(attrib_every={attrib_every})"
+        )
+    n_layers = cfg.n_layers
+    sec = [0.0] * n_layers
+    for s in samples:
+        for r in s["layers"]:
+            sec[r["index"]] += r["seconds"]
+    rows = [
+        {
+            "index": i,
+            "name": lp.name,
+            "w_bits": lp.w_bits,
+            "a_bits": lp.a_bits,
+            "measured_us": sec[i] / len(samples) * 1e6,
+        }
+        for i, lp in enumerate(plan.layers)
+    ]
+    meta = {
+        "n_samples": len(samples),
+        "attrib_every": attrib_every,
+        "reps": reps,
+        "steps": eng.n_steps,
+    }
+    return rows, meta
+
+
 def _predicted_dsp_ops(lp, projs) -> float:
     """The plan's predicted cost (Eq. 6 ``Op / T_mul``), falling back to
     a recompute from the layer's matmul shapes when an older plan lacks
@@ -131,25 +217,9 @@ def _discordant_pairs(pred: list[float], meas: list[float]) -> list[tuple[int, i
     return out
 
 
-def build_report(
-    plan,
-    cfg,
-    *,
-    n_slots: int | None = None,
-    reps: int = 3,
-    interpret: bool | None = None,
-    seed: int = 0,
-) -> dict:
-    """Full drift report for one plan on the current backend."""
-    from repro.plan.search import layer_matmul_shapes
-
-    interp = resolve_interpret(interpret)
-    n_slots = n_slots or int(plan.budget.get("n_slots", 8))
-    shapes = layer_matmul_shapes(cfg, n_slots)
-    rows = measure_layer_times(
-        plan, cfg, n_slots=n_slots, reps=reps, interpret=interp, seed=seed
-    )
-    pred = [_predicted_dsp_ops(lp, projs) for lp, projs in zip(plan.layers, shapes)]
+def _annotate_and_rank(rows: list[dict], pred: list[float]) -> dict:
+    """Shared share/drift annotation + inversion counting over one set of
+    per-layer measurements (standalone or in-situ)."""
     meas = [r["measured_us"] for r in rows]
     pred_total, meas_total = sum(pred), sum(meas)
     for r, p, m in zip(rows, pred, meas):
@@ -164,7 +234,6 @@ def build_report(
         )
     inversions = _discordant_pairs(pred, meas)
     n = len(rows)
-    n_pairs = n * (n - 1) // 2
 
     # per-bit-pair aggregation: does the LUT's *pair* ranking survive?
     by_pair: dict[tuple[int, int], dict] = {}
@@ -182,25 +251,76 @@ def build_report(
         [p["predicted_dsp_ops"] / p["n_layers"] for p in pairs],
         [p["measured_us"] / p["n_layers"] for p in pairs],
     )
-
     drifts = [r["drift"] for r in rows if r["drift"] is not None]
     return {
-        "arch": plan.arch,
-        "plan_hash": plan.content_hash(),
-        "backend": "interpret" if interp else "compiled",
-        "n_slots": n_slots,
-        "reps": reps,
-        "n_layers": n,
-        "n_distinct_bit_pairs": plan.n_distinct_bit_pairs,
         "layers": rows,
         "pairs": pairs,
         "rank_inversions": len(inversions),
         "inverted_layer_pairs": inversions,
-        "n_layer_pairs": n_pairs,
+        "n_layer_pairs": n * (n - 1) // 2,
         "pair_rank_inversions": len(pair_inversions),
         "max_drift": max(drifts) if drifts else None,
         "min_drift": min(drifts) if drifts else None,
     }
+
+
+MODES = ("standalone", "in-situ", "both")
+
+
+def build_report(
+    plan,
+    cfg,
+    *,
+    n_slots: int | None = None,
+    reps: int = 3,
+    interpret: bool | None = None,
+    seed: int = 0,
+    mode: str = "both",
+    attrib_every: int = 2,
+) -> dict:
+    """Full drift report for one plan on the current backend.
+
+    ``mode="standalone"`` times each projection in isolation (the
+    original report); ``"in-situ"`` serves the plan through the engine
+    with attribution sampling and measures inside the fused step;
+    ``"both"`` (default) emits the standalone report with an ``in_situ``
+    block alongside, so inversions from the two disciplines sit next to
+    each other in one artifact.
+    """
+    from repro.plan.search import layer_matmul_shapes
+
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, not {mode!r}")
+    interp = resolve_interpret(interpret)
+    n_slots = n_slots or int(plan.budget.get("n_slots", 8))
+    shapes = layer_matmul_shapes(cfg, n_slots)
+    pred = [_predicted_dsp_ops(lp, projs) for lp, projs in zip(plan.layers, shapes)]
+    report = {
+        "arch": plan.arch,
+        "plan_hash": plan.content_hash(),
+        "backend": "interpret" if interp else "compiled",
+        "mode": mode,
+        "n_slots": n_slots,
+        "reps": reps,
+        "n_layers": len(plan.layers),
+        "n_distinct_bit_pairs": plan.n_distinct_bit_pairs,
+    }
+    if mode in ("standalone", "both"):
+        rows = measure_layer_times(
+            plan, cfg, n_slots=n_slots, reps=reps, interpret=interp, seed=seed
+        )
+        report.update(_annotate_and_rank(rows, pred))
+    if mode in ("in-situ", "both"):
+        # noise control in situ comes from averaging many sampled steps,
+        # not from repeating each segment — keep reps=1 so sampling stays
+        # cheap relative to the steps it rides on
+        in_rows, in_meta = measure_layer_times_in_situ(
+            plan, cfg, n_slots=n_slots, attrib_every=attrib_every, seed=seed,
+        )
+        block = _annotate_and_rank(in_rows, pred)
+        block.update(in_meta)
+        report["in_situ"] = block
+    return report
 
 
 def main(argv=None) -> pathlib.Path:
@@ -212,6 +332,11 @@ def main(argv=None) -> pathlib.Path:
     ap.add_argument("--reps", type=int, default=3, help="timing repetitions")
     ap.add_argument("--slots", type=int, default=None,
                     help="serving batch (default: the plan's budget)")
+    ap.add_argument("--mode", choices=MODES, default="both",
+                    help="standalone projection timing, in-situ serving "
+                    "attribution, or both (default)")
+    ap.add_argument("--attrib-every", type=int, default=2,
+                    help="in-situ: attribution sampling period (engine steps)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -221,21 +346,32 @@ def main(argv=None) -> pathlib.Path:
     plan = DeployPlan.load(args.plan)
     cfg = get_config(plan.arch, smoke=plan.smoke)
     report = build_report(plan, cfg, n_slots=args.slots, reps=args.reps,
-                          seed=args.seed)
+                          seed=args.seed, mode=args.mode,
+                          attrib_every=args.attrib_every)
     report["plan"] = str(args.plan)
     out = pathlib.Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(report, indent=2) + "\n")
-    for r in report["layers"]:
+    for r in report.get("layers", []):
         print(
             f"drift {r['name']} w{r['w_bits']}a{r['a_bits']}: "
             f"predicted {r['predicted_share']:.3f} vs measured "
             f"{r['measured_share']:.3f} of step time (drift {r['drift']:.2f}x)"
         )
-    print(
-        f"rank inversions: {report['rank_inversions']}/{report['n_layer_pairs']} "
-        f"layer pairs on backend={report['backend']}; report -> {out}"
-    )
+    if "layers" in report:
+        print(
+            f"rank inversions: {report['rank_inversions']}/"
+            f"{report['n_layer_pairs']} layer pairs on "
+            f"backend={report['backend']} (standalone)"
+        )
+    if "in_situ" in report:
+        blk = report["in_situ"]
+        print(
+            f"rank inversions: {blk['rank_inversions']}/{blk['n_layer_pairs']} "
+            f"layer pairs in situ ({blk['n_samples']} sampled steps, every "
+            f"{blk['attrib_every']})"
+        )
+    print(f"report -> {out}")
     return out
 
 

@@ -45,10 +45,21 @@ def _label_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))
 
 
+def _escape_label(v) -> str:
+    """Prometheus label-value escaping: backslash, double-quote, newline
+    (exposition-format spec) — unescaped values break any real scraper."""
+    return str(v).replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(h: str) -> str:
+    """HELP text escaping: backslash and newline (quotes are legal there)."""
+    return h.replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _label_str(key: tuple) -> str:
     if not key:
         return ""
-    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+    return "{" + ",".join(f'{k}="{_escape_label(v)}"' for k, v in key) + "}"
 
 
 class Counter:
@@ -62,8 +73,10 @@ class Counter:
         self._values: dict[tuple, float] = {}
 
     def inc(self, n: float = 1.0, **labels) -> None:
-        if n < 0:
+        if not (n >= 0):  # rejects negatives AND NaN (NaN compares false)
             raise ValueError("counters only go up")
+        if math.isinf(n):
+            raise ValueError("counters must stay finite")
         key = _label_key(labels)
         self._values[key] = self._values.get(key, 0.0) + n
 
@@ -83,9 +96,14 @@ class Gauge(Counter):
     kind = "gauge"
 
     def set(self, v: float, **labels) -> None:
-        self._values[_label_key(labels)] = float(v)
+        v = float(v)
+        if not math.isfinite(v):
+            raise ValueError("gauges must stay finite (exposition has no NaN)")
+        self._values[_label_key(labels)] = v
 
     def inc(self, n: float = 1.0, **labels) -> None:
+        if not math.isfinite(n):
+            raise ValueError("gauges must stay finite (exposition has no NaN)")
         key = _label_key(labels)
         self._values[key] = self._values.get(key, 0.0) + n
 
@@ -109,8 +127,8 @@ class Histogram:
 
     def observe(self, v: float) -> None:
         v = float(v)
-        if math.isnan(v):
-            return  # never let NaN into sums/percentiles
+        if not math.isfinite(v):
+            return  # never let NaN/Inf into sums/percentiles/exposition
         self.count += 1
         self.sum += v
         self._reservoir.append(v)
@@ -175,7 +193,7 @@ class MetricsRegistry:
         lines = []
         for name, m in self._metrics.items():
             if m.help:
-                lines.append(f"# HELP {name} {m.help}")
+                lines.append(f"# HELP {name} {_escape_help(m.help)}")
             lines.append(f"# TYPE {name} {m.kind}")
             for sample, labels, v in m.samples():
                 val = f"{v:g}"

@@ -9,12 +9,23 @@ and ``chrome://tracing`` load directly:
 
 * synchronous ``B``/``E`` duration spans and ``X`` complete spans live
   on ``(pid, tid)`` tracks — the engine puts its fused-step timeline
-  (``step`` with ``dispatch`` / ``device_wait`` children) on tid 0;
+  (``step`` with ``dispatch`` / ``device_wait`` children, and sampled
+  per-layer attribution spans inside ``device_wait``) on pid 0;
 * asynchronous ``b``/``e`` spans keyed by ``id`` model one track per
-  *request*: a ``request`` envelope span plus nested phase spans
-  (``queued`` / ``prefill`` / ``decode``) that follow the request
-  through preemption and requeue, with instant (``n``) events attached
-  for preemption, retry, quarantine, shed, and chaos injections.
+  *request* on a separate process (``REQUEST_PID``): a ``request``
+  envelope span plus nested phase spans (``queued`` / ``prefill`` /
+  ``decode``) that follow the request through preemption and requeue,
+  with instant (``n``) events attached for preemption, retry,
+  quarantine, shed, and chaos injections;
+* ``C`` counter events (:meth:`counter`) render as Perfetto counter
+  tracks — the engine samples free pages, active/waiting slots,
+  windowed tokens/s, and preemption/shed totals each traced step so
+  resource timelines sit beside the spans.
+
+Every track is *named*: :meth:`to_chrome` prepends ``M`` metadata
+events (``process_name`` / ``thread_name``) for each (pid, tid) the
+event stream actually uses, so Perfetto shows "repro-engine /
+fused-step" instead of bare numbers.
 
 Timestamps come from ``time.perf_counter()`` relative to recorder
 construction, in microseconds (the unit the trace format mandates) —
@@ -29,6 +40,12 @@ nest and never dangle, the step-span count must equal the engine's
 ``metrics()["steps"]``, and chaos traces must contain one injection
 event per counted injected fault.
 
+Live consumers poll :meth:`segment`: an incremental drain keyed by a
+monotonically increasing global event cursor, so the telemetry
+endpoint's ``/trace`` route can stream the event log mid-run without
+rewinding or double-reading (events that fell off the ring before a
+reader caught up are reported, not silently skipped).
+
 Disabled tracing costs the engine one ``is not None`` predicate per
 hook — callers hold ``None`` instead of a recorder; there is no "off"
 mode inside the recorder itself.
@@ -42,6 +59,20 @@ from collections import deque
 
 # async request spans share one category so Perfetto groups them by id
 REQUEST_CAT = "request"
+# request tracks live on their own process so the per-request async rows
+# don't interleave with the engine's fused-step timeline
+ENGINE_PID = 0
+REQUEST_PID = 1
+# engine-process thread ids with stable Perfetto names
+STEP_TID = 0
+ATTRIB_TID = 1
+
+_PROCESS_NAMES = {ENGINE_PID: "repro-engine", REQUEST_PID: "repro-requests"}
+_THREAD_NAMES = {
+    (ENGINE_PID, STEP_TID): "fused-step",
+    (ENGINE_PID, ATTRIB_TID): "layer-attribution",
+    (REQUEST_PID, 0): "requests",
+}
 
 
 class TraceRecorder:
@@ -77,9 +108,9 @@ class TraceRecorder:
             self.n_dropped += 1
         self._events.append(ev)
 
-    def _emit(self, name: str, ph: str, *, tid: int = 0, t: float | None = None,
-              **extra) -> None:
-        ev = {"name": name, "ph": ph, "ts": self._ts(t), "pid": 0, "tid": tid}
+    def _emit(self, name: str, ph: str, *, pid: int = ENGINE_PID, tid: int = 0,
+              t: float | None = None, **extra) -> None:
+        ev = {"name": name, "ph": ph, "ts": self._ts(t), "pid": pid, "tid": tid}
         ev.update(extra)
         self._push(ev)
 
@@ -102,6 +133,12 @@ class TraceRecorder:
     def instant(self, name: str, *, tid: int = 0, **args) -> None:
         self._emit(name, "i", tid=tid, s="t", args=args)
 
+    def counter(self, name: str, *, t: float | None = None, **values) -> None:
+        """One sample on a Perfetto **counter track** (``C`` event): each
+        keyword is a series on the track named ``name``.  Values must be
+        numeric — Perfetto plots them as a stacked timeline."""
+        self._emit(name, "C", t=t, args={k: float(v) for k, v in values.items()})
+
     # -- per-request async spans -------------------------------------------
 
     def req_begin(self, rid: int, **args) -> None:
@@ -110,7 +147,8 @@ class TraceRecorder:
         if rid in self._seen:
             return
         self._seen.add(rid)
-        self._emit("request", "b", id=rid, cat=REQUEST_CAT, args=args)
+        self._emit("request", "b", pid=REQUEST_PID, id=rid, cat=REQUEST_CAT,
+                   args=args)
 
     def req_phase(self, rid: int, phase: str, **args) -> None:
         """Transition a request to ``phase``, closing the previous phase
@@ -119,9 +157,11 @@ class TraceRecorder:
         if prev == phase:
             return
         if prev is not None:
-            self._emit(prev, "e", id=rid, cat=REQUEST_CAT, args={})
+            self._emit(prev, "e", pid=REQUEST_PID, id=rid, cat=REQUEST_CAT,
+                       args={})
         self._phase[rid] = phase
-        self._emit(phase, "b", id=rid, cat=REQUEST_CAT, args=args)
+        self._emit(phase, "b", pid=REQUEST_PID, id=rid, cat=REQUEST_CAT,
+                   args=args)
 
     def phase(self, rid: int) -> str | None:
         """The request's currently-open phase span name (or None)."""
@@ -129,15 +169,17 @@ class TraceRecorder:
 
     def req_event(self, rid: int, name: str, **args) -> None:
         """Instant event on a request's track (preempt, retry, shed, ...)."""
-        self._emit(name, "n", id=rid, cat=REQUEST_CAT, args=args)
+        self._emit(name, "n", pid=REQUEST_PID, id=rid, cat=REQUEST_CAT,
+                   args=args)
 
     def req_end(self, rid: int, status: str, **args) -> None:
         """Close the current phase and the envelope span — the request's
         exactly-one **terminal span**, carrying its terminal status."""
         prev = self._phase.pop(rid, None)
         if prev is not None:
-            self._emit(prev, "e", id=rid, cat=REQUEST_CAT, args={})
-        self._emit("request", "e", id=rid, cat=REQUEST_CAT,
+            self._emit(prev, "e", pid=REQUEST_PID, id=rid, cat=REQUEST_CAT,
+                       args={})
+        self._emit("request", "e", pid=REQUEST_PID, id=rid, cat=REQUEST_CAT,
                    args={"status": status, **args})
 
     # -- export ------------------------------------------------------------
@@ -149,17 +191,56 @@ class TraceRecorder:
     def events(self) -> list[dict]:
         return list(self._events)
 
+    @property
+    def cursor(self) -> int:
+        """Global index one past the newest recorded event (monotonic —
+        drops advance the window's *start*, never this end)."""
+        return self.n_dropped + len(self._events)
+
+    def segment(self, since: int = 0) -> tuple[list[dict], int, int]:
+        """Incremental drain: events with global index >= ``since``.
+
+        Returns ``(events, next_cursor, missed)`` — pass ``next_cursor``
+        back as the next ``since`` to stream the log without rewinding.
+        ``missed`` counts events that fell off the bounded ring before
+        this reader caught up (0 for a reader polling faster than the
+        buffer turns over)."""
+        if since < 0:
+            raise ValueError("since must be >= 0")
+        evs = list(self._events)  # snapshot: readers may sit on a thread
+        start = self.n_dropped
+        missed = max(0, start - since)  # asked-for events already dropped
+        lo = max(since - start, 0)
+        return evs[lo:], start + len(evs), missed
+
+    def name_metadata(self) -> list[dict]:
+        """``M`` metadata events naming every (pid, tid) the recorded
+        stream uses, so Perfetto labels the tracks instead of showing
+        bare numbers.  Deterministic order: processes, then threads."""
+        pids, tids = {ENGINE_PID}, {(ENGINE_PID, STEP_TID)}
+        for e in self._events:
+            pid = e.get("pid", ENGINE_PID)
+            pids.add(pid)
+            if e.get("ph") in ("B", "E", "X", "i", "C", "b", "e", "n"):
+                tids.add((pid, e.get("tid", 0)))
+        out = []
+        for pid in sorted(pids):
+            out.append({
+                "name": "process_name", "ph": "M", "pid": pid, "tid": 0,
+                "args": {"name": _PROCESS_NAMES.get(pid, f"pid-{pid}")},
+            })
+        for pid, tid in sorted(tids):
+            out.append({
+                "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                "args": {"name": _THREAD_NAMES.get((pid, tid), f"tid-{tid}")},
+            })
+        return out
+
     def to_chrome(self) -> dict:
         """Chrome trace-event JSON payload (Perfetto-loadable) with the
         ``repro`` metadata block the trace gates check against."""
-        name_meta = [
-            {"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
-             "args": {"name": "repro-engine"}},
-            {"name": "thread_name", "ph": "M", "pid": 0, "tid": 0,
-             "args": {"name": "fused-step"}},
-        ]
         return {
-            "traceEvents": name_meta + self.events,
+            "traceEvents": self.name_metadata() + self.events,
             "displayTimeUnit": "ms",
             "repro": {**self.metadata, "dropped": self.n_dropped,
                       "n_events": len(self._events)},

@@ -14,6 +14,13 @@ The runner wraps a (train_step, state) loop with:
   * elastic rescale: ``rescale(new_mesh_rules)`` re-applies target
     shardings to the restored state — mesh-shape-independent because
     checkpoints store full arrays (see checkpoint/manager.py).
+
+Pass a shared :class:`repro.obs.metrics.MetricsRegistry` and the runner
+routes its counters (``repro_train_steps_total``,
+``repro_train_restarts_total``, ``repro_train_stragglers_total``) and
+the per-step wall-time histogram through the same registry the serving
+engine exposes — one Prometheus exposition path for training and
+serving, scrapeable by the same telemetry endpoint.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ from typing import Any, Callable
 import jax
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.obs.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -51,6 +59,7 @@ class FaultTolerantRunner:
         cfg: RunnerConfig = RunnerConfig(),
         *,
         on_straggler: Callable[[int, float], None] | None = None,
+        registry: MetricsRegistry | None = None,
     ):
         self.train_step = train_step
         self.ckpt = ckpt
@@ -58,6 +67,19 @@ class FaultTolerantRunner:
         self.stats = RunnerStats()
         self.on_straggler = on_straggler
         self._ewma: float | None = None
+        # stats always accumulate; a caller-supplied registry additionally
+        # mirrors them as Prometheus metrics (shared with the serving
+        # engine's exposition when the same registry is passed)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._m_steps = self.registry.counter(
+            "repro_train_steps_total", "completed training steps")
+        self._m_restarts = self.registry.counter(
+            "repro_train_restarts_total", "step retries after a raised fault")
+        self._m_stragglers = self.registry.counter(
+            "repro_train_stragglers_total",
+            "steps slower than straggler_factor x the EWMA")
+        self._m_step_time = self.registry.histogram(
+            "repro_train_step_seconds", "training step wall time")
 
     def resume_or_init(self, init_state: Any, shardings: Any = None) -> tuple[int, Any]:
         latest = self.ckpt.latest_step()
@@ -86,6 +108,7 @@ class FaultTolerantRunner:
             except Exception:
                 retries += 1
                 self.stats.restarts += 1
+                self._m_restarts.inc()
                 if retries > self.cfg.max_retries:
                     raise
                 self.ckpt.wait()
@@ -100,6 +123,8 @@ class FaultTolerantRunner:
             self.stats.steps += 1
             self.stats.last_loss = float(loss)
             self.stats.step_times.append(dt)
+            self._m_steps.inc()
+            self._m_step_time.observe(dt)
             if step % self.cfg.ckpt_every == 0:
                 self.ckpt.save_async(step, state)
             step += 1
@@ -112,6 +137,7 @@ class FaultTolerantRunner:
             return
         if dt > self.cfg.straggler_factor * self._ewma:
             self.stats.stragglers += 1
+            self._m_stragglers.inc()
             if self.on_straggler is not None:
                 self.on_straggler(step, dt)
         a = self.cfg.ewma_alpha

@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.layers import prepack_lm_head
+from repro.obs.attrib import LayerAttributor
 from repro.obs.metrics import MetricsRegistry, WindowedSeries, percentile
 from repro.obs.trace import TraceRecorder
 from repro.parallel.sharding import ShardingRules, use_rules
@@ -103,6 +104,16 @@ class EngineConfig:
     # steps (restored on hard step faults; mirrors FaultTolerantRunner)
     snapshot_every: int = 0
     snapshot_dir: str | None = None
+    # -- observability ---------------------------------------------------
+    # > 0: every N steps, re-execute the step segmented per layer on a
+    # donation-safe state copy and attribute device time to each layer /
+    # bit pair (repro.obs.attrib).  0 (off) costs one predicate per step.
+    attrib_every: int = 0
+    # timing repetitions per attribution segment (min-of-reps)
+    attrib_reps: int = 1
+    # > 0 with run(trace=<path>): rewrite the partial trace to disk every
+    # N steps, so a crashed run still leaves a loadable trace behind
+    trace_checkpoint_every: int = 0
 
     @property
     def blocks_per_slot(self) -> int:
@@ -138,6 +149,10 @@ class Engine:
             raise ValueError("chunk_tokens must be >= 1")
         if ecfg.max_step_retries < 0 or ecfg.max_request_retries < 0:
             raise ValueError("retry budgets must be >= 0")
+        if ecfg.attrib_every < 0 or ecfg.trace_checkpoint_every < 0:
+            raise ValueError("attrib_every/trace_checkpoint_every must be >= 0")
+        if ecfg.attrib_reps < 1:
+            raise ValueError("attrib_reps must be >= 1")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -166,6 +181,7 @@ class Engine:
             head = prepack_lm_head(
                 params["embed"], w_bits=ecfg.head_bits[0], a_bits=ecfg.head_bits[1]
             )
+        self._head = head  # kept for segmented re-execution (attribution)
 
         # C == 1 keeps the legacy single-token step signature (and XLA
         # graph) byte-identical; C > 1 threads the valid-length vector
@@ -213,6 +229,14 @@ class Engine:
         self._win_steps = WindowedSeries()
         self._win_sheds = WindowedSeries()
         self._win_preempts = WindowedSeries()
+        # in-situ attribution: same off-mode discipline as tracing — the
+        # hot path pays one `is not None` predicate when disabled
+        self._attrib: LayerAttributor | None = None
+        if ecfg.attrib_every > 0:
+            self._attrib = LayerAttributor(
+                cfg, params, head=head, rules=self.rules,
+                reps=ecfg.attrib_reps, registry=self.registry,
+            )
 
     # -- request intake ----------------------------------------------------
 
@@ -504,6 +528,39 @@ class Engine:
                 if victim is req:
                     break
 
+    def _emit_attrib_spans(self, sample: dict, t0: float, t1: float) -> None:
+        """Perfetto child spans under ``device_wait``: subdivide the fused
+        step's actual device interval proportionally to the measured
+        per-layer shares, on the dedicated attribution thread track."""
+        from repro.obs.trace import ATTRIB_TID
+
+        tr = self._trace
+        span = max(t1 - t0, 0.0)
+        acc = t0
+        for row in sample["layers"]:
+            frac = row["share"] or 0.0
+            dt = span * frac
+            tr.complete(
+                f"layer{row['index']:02d} {row['pair']}", acc, acc + dt,
+                tid=ATTRIB_TID, step=sample["step"], share=frac,
+                seconds=row["seconds"],
+            )
+            acc += dt
+
+    def _emit_counter_tracks(self, tr: TraceRecorder) -> None:
+        """Per-step Perfetto counter-track samples: pool pressure, slot
+        occupancy, windowed throughput, and the monotone fault counters."""
+        sched = self.scheduler
+        window = 5.0 if self._realtime else 32.0
+        tps = self._win_tokens.rate(self._elapsed(), window)
+        tr.counter("pages", free=self.allocator.n_free)
+        tr.counter("slots", active=len(sched.active),
+                   waiting=len(sched.waiting) + len(self._pending))
+        tr.counter("tokens_per_s_window", tokens_per_s=tps or 0.0)
+        tr.counter("preemptions_total", preemptions=self.scheduler.n_preemptions)
+        tr.counter("shed_total", shed=self.registry.counter(
+            "repro_requests_total").value(status="shed"))
+
     def _step_once(self, now_fn: Callable[[], float]) -> None:
         sched = self.scheduler
         S, C = self.ecfg.n_slots, self.ecfg.chunk_tokens
@@ -534,6 +591,13 @@ class Engine:
                 if lens[slot] and tr.phase(req.rid) == "prefill":
                     tr.req_event(req.rid, "prefill_chunk",
                                  start=int(pos[slot]), n=int(lens[slot]))
+        attrib_state = None
+        if self._attrib is not None and (self.n_steps + 1) % self.ecfg.attrib_every == 0:
+            # the fused step donates self.state — copy BEFORE dispatch so the
+            # segmented re-execution sees the same pre-step state.  Injected
+            # faults raise before state is touched, so the copy stays valid
+            # across retries; hard-fault paths return early and drop it.
+            attrib_state = jax.tree.map(jnp.copy, self.state)
         t_span = [0.0, 0.0]  # dispatch start / return (tracing only)
         for attempt in range(self.ecfg.max_step_retries + 1):
             try:
@@ -563,6 +627,7 @@ class Engine:
         self.n_steps += 1
         self.slot_token_steps += len(sched.active)
         self.fed_tokens += int(lens.sum())
+        t_wait = None
         if tr is not None:
             # split host dispatch from device wait: block explicitly, then
             # the np.asarray below is a post-sync host copy
@@ -572,6 +637,22 @@ class Engine:
             tr.complete("device_wait", t_span[1], t_wait, step=self.n_steps)
             tr.complete("step", t_span[0], t_wait, step=self.n_steps,
                         active=len(sched.active), fed=int(lens.sum()))
+        if attrib_state is not None:
+            sample = self._attrib.sample(
+                attrib_state, args[2], args[3], args[4],
+                args[5] if C > 1 else None, step=self.n_steps,
+            )
+            if tr is not None:
+                self._emit_attrib_spans(sample, t_span[1], t_wait)
+        if tr is not None:
+            self._emit_counter_tracks(tr)
+            if (
+                self._trace_path is not None
+                and self.ecfg.trace_checkpoint_every > 0
+                and self.n_steps % self.ecfg.trace_checkpoint_every == 0
+            ):
+                # crash-durable partial trace; the final seal overwrites it
+                tr.save(self._trace_path)
         logits_np = np.asarray(logits)  # device sync; [S, V]
         sampling = [s for s, r in sched.active.items() if r.n_fed + int(lens[s]) >= len(r.seq)]
         if self._chaos is not None:

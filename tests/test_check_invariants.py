@@ -468,8 +468,138 @@ def test_real_committed_artifacts_pass():
     very gate CI applies to their smoke twins."""
     for name in ("BENCH_serving.json", "BENCH_serving_smoke.json",
                  "BENCH_serving_chaos_smoke.json",
+                 "BENCH_serving_attrib_smoke.json",
                  "artifacts/packing_efficiency.json",
                  "artifacts/plan_drift.json"):
         path = ROOT / name
         assert path.exists(), name
         assert ci.run(str(path)) == [], name
+
+
+def test_drift_in_situ_block_gates():
+    # a report carrying only the in-situ block still gates
+    d = {"n_distinct_bit_pairs": 3, "in_situ": dict(
+        _drift_fixture(), n_samples=6, attrib_every=2, steps=12)}
+    del d["in_situ"]["n_distinct_bit_pairs"]
+    assert ci.check_drift(d) == []
+    bad = copy.deepcopy(d)
+    bad["in_situ"]["n_samples"] = 0  # block exists but nothing was sampled
+    assert any("n_samples" in e for e in ci.check_drift(bad))
+    bad = copy.deepcopy(d)
+    bad["in_situ"]["layers"][0]["measured_share"] = 0.9  # shares denormalize
+    assert any("in_situ" in e and "sums to" in e for e in ci.check_drift(bad))
+    # neither block at all: the report measured nothing
+    assert any("layers" in e
+               for e in ci.check_drift({"n_distinct_bit_pairs": 3}))
+
+
+# ---------------------------------------------------------------------------
+# attrib gates (PR 8): every clause must fail on a doctored fixture
+# ---------------------------------------------------------------------------
+
+
+def _attrib_sample(step, n_layers=2):
+    share = 1.0 / n_layers
+    return {"step": step, "n_layers": n_layers,
+            "layers": [{"index": i, "pair": "w5a4", "share": share,
+                        "seconds": 1e-4} for i in range(n_layers)]}
+
+
+def _attrib_row(family, arch):
+    steps = 6
+    return {
+        "arch": arch, "family": family, "attrib_every": 2, "n_layers": 2,
+        "steps": steps, "attrib_steps": 3, "n_samples": 3,
+        "samples": [_attrib_sample(s) for s in (2, 4, 6)],
+        "counter_tracks": {
+            "pages": [{"free": 5.0}] * steps,
+            "slots": [{"active": 2.0, "waiting": 0.0}] * steps,
+            "tokens_per_s_window": [{"tokens_per_s": 9.0}] * steps,
+            "preemptions_total": [{"preemptions": float(i // 3)}
+                                  for i in range(steps)],
+            "shed_total": [{"shed": 0.0}] * steps,
+        },
+        "telemetry": {"n_scrapes": 12, "parse_errors": [],
+                      "scrape_errors": [], "livez_ok": True},
+    }
+
+
+def _attrib_fixture():
+    return {"smoke": True,
+            "attrib": [_attrib_row("attn", "llama3.2-3b"),
+                       _attrib_row("ssm", "mamba2-130m")]}
+
+
+def test_attrib_good_fixture_passes():
+    assert ci.check_attrib(_attrib_fixture()) == []
+
+
+def test_attrib_requires_both_families():
+    d = _attrib_fixture()
+    d["attrib"] = [r for r in d["attrib"] if r["family"] == "attn"]
+    assert any("attention and an SSM" in e for e in ci.check_attrib(d))
+    assert ci.check_attrib({"attrib": []}) == ["attrib: no per-family rows"]
+
+
+def test_attrib_sampling_cadence_gates():
+    d = _attrib_fixture()
+    d["attrib"][0]["attrib_every"] = 0  # sampling silently disabled
+    assert any("sampling was off" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][0]["samples"] = []  # counter says 3, list says 0
+    d["attrib"][0]["n_samples"] = 0
+    assert any("no attribution samples" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][0]["n_samples"] = 2  # registry counter out of lockstep
+    assert any("lockstep" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][0]["steps"] = 10  # 3 samples over 10 steps at every=2
+    assert any("skipped or double-fired" in e for e in ci.check_attrib(d))
+
+
+def test_attrib_per_sample_gates():
+    d = _attrib_fixture()
+    d["attrib"][0]["samples"][0]["layers"].pop()  # a layer went missing
+    assert any("served layers" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][1]["samples"][2]["layers"][0]["share"] = 0.9
+    assert any("shares sum to" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][0]["samples"][1]["layers"][1]["seconds"] = 0.0
+    assert any("non-positive" in e for e in ci.check_attrib(d))
+
+
+def test_attrib_counter_track_gates():
+    d = _attrib_fixture()
+    d["attrib"][0]["counter_tracks"]["pages"].pop()  # one step unsampled
+    assert any("every traced step" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    del d["attrib"][0]["counter_tracks"]["shed_total"]  # track never emitted
+    assert any("'shed_total'" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][1]["counter_tracks"]["preemptions_total"][5] = \
+        {"preemptions": 0.0}  # a running total went backwards
+    assert any("monotone" in e for e in ci.check_attrib(d))
+
+
+def test_attrib_telemetry_gates():
+    d = _attrib_fixture()
+    d["attrib"][0]["telemetry"]["n_scrapes"] = 0
+    assert any("never scraped" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][0]["telemetry"]["parse_errors"] = ["metrics: HELP after TYPE"]
+    assert any("conformance" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][1]["telemetry"]["scrape_errors"] = ["scrape 3: timed out"]
+    assert any("transport" in e for e in ci.check_attrib(d))
+    d = _attrib_fixture()
+    d["attrib"][1]["telemetry"]["livez_ok"] = False
+    assert any("livez" in e for e in ci.check_attrib(d))
+
+
+def test_attrib_kind_inference():
+    assert ci.infer_kind(
+        pathlib.Path("BENCH_serving_attrib_smoke.json")) == "attrib"
+    # attribution *traces* still gate as traces, not as the bench artifact
+    assert ci.infer_kind(
+        pathlib.Path("artifacts/traces/trace_attrib_attn.json")) == "trace"

@@ -73,3 +73,38 @@ def test_straggler_ewma_fires_callback(tmp_path):
     assert seen == [(2, 10.0)]
     # the slow step still folds into the EWMA afterwards
     assert runner._ewma == pytest.approx(0.8 * ewma + 0.2 * 10.0)
+
+
+def test_runner_routes_counters_through_shared_registry(tmp_path):
+    """Passing the serving engine's registry mirrors runner stats as
+    Prometheus families in the SAME exposition (one scrape covers
+    training and serving); without one the runner still self-registers."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.promcheck import check_exposition
+
+    reg = MetricsRegistry()
+    reg.counter("repro_steps_total", "serving steps").inc(4)  # pre-existing
+    ckpt = CheckpointManager(str(tmp_path))
+    fails = {"left": 1}
+
+    def injector(step):
+        if step == 1 and fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("injected")
+
+    runner = FaultTolerantRunner(
+        _counting_step, ckpt, RunnerConfig(ckpt_every=100), registry=reg)
+    _, stats = runner.run({"x": jnp.asarray(0, jnp.int32)}, lambda i: i, 3,
+                          failure_injector=injector)
+    assert reg.counter("repro_train_steps_total").value() == stats.steps == 3
+    assert reg.counter("repro_train_restarts_total").value() == stats.restarts == 1
+    assert reg.counter("repro_train_stragglers_total").value() == stats.stragglers
+    h = reg.histogram("repro_train_step_seconds")
+    assert h.count == 3 and h.sum > 0
+    text = reg.prometheus_text()
+    assert "repro_steps_total" in text and "repro_train_steps_total" in text
+    assert check_exposition(text) == []
+    # registry omitted: the runner makes its own, metrics still accumulate
+    solo = FaultTolerantRunner(_counting_step, CheckpointManager(str(tmp_path / "b")))
+    solo.run({"x": jnp.asarray(0, jnp.int32)}, lambda i: i, 2)
+    assert solo.registry.counter("repro_train_steps_total").value() == 2

@@ -246,8 +246,21 @@ def test_drift_report_structure_and_gate():
     shares = sum(r["measured_share"] for r in report["layers"])
     assert shares == pytest.approx(1.0)
     assert 0 <= report["rank_inversions"] <= report["n_layer_pairs"]
+    # default mode="both": the in-situ block rides along, measured by
+    # attribution sampling inside the fused serving step
+    blk = report["in_situ"]
+    assert blk["n_samples"] >= 1 and blk["attrib_every"] >= 1
+    assert sum(r["measured_share"] for r in blk["layers"]) == pytest.approx(1.0)
+    assert all(r["measured_us"] > 0 for r in blk["layers"])
+    assert 0 <= blk["rank_inversions"] <= blk["n_layer_pairs"]
     # JSON-safe end to end (no NaN, no numpy scalars)
     json.loads(json.dumps(report, allow_nan=False))
+    # gate rejects a doctored in_situ block (no samples)
+    import copy
+
+    bad = copy.deepcopy(report)
+    bad["in_situ"]["n_samples"] = 0
+    assert any("n_samples" in e for e in ci.check_drift(bad))
 
 
 def test_kernel_timer_records_and_bests():
@@ -264,3 +277,311 @@ def test_kernel_timer_records_and_bests():
     # outside the context, labels go nowhere (timer detached, no crash)
     timed(lambda x: x, np.ones(2), label="mul")
     assert len(timer.records["mul"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# trace metadata, counter tracks, incremental segments
+# ---------------------------------------------------------------------------
+
+
+def test_trace_metadata_names_every_used_track():
+    from repro.obs.trace import ATTRIB_TID, ENGINE_PID, REQUEST_PID
+
+    tr = TraceRecorder()
+    t0 = tr.now()
+    tr.complete("step", t0, tr.now(), step=1)
+    tr.complete("layer00 w5a4", t0, tr.now(), tid=ATTRIB_TID)
+    tr.req_begin(3)
+    tr.req_end(3, "ok")
+    ms = tr.name_metadata()
+    # golden shape: process names first, then thread names, deterministic
+    rows = [(e["ph"], e["name"], e["pid"], e["tid"], e["args"]["name"])
+            for e in ms]
+    assert rows == [
+        ("M", "process_name", ENGINE_PID, 0, "repro-engine"),
+        ("M", "process_name", REQUEST_PID, 0, "repro-requests"),
+        ("M", "thread_name", ENGINE_PID, 0, "fused-step"),
+        ("M", "thread_name", ENGINE_PID, ATTRIB_TID, "layer-attribution"),
+        ("M", "thread_name", REQUEST_PID, 0, "requests"),
+    ]
+    # to_chrome prepends exactly these before the payload events
+    evs = tr.to_chrome()["traceEvents"]
+    assert [e["ph"] for e in evs[: len(rows)]] == ["M"] * len(rows)
+
+
+def test_trace_counter_events_and_segment_cursor():
+    tr = TraceRecorder(capacity=4)
+    tr.counter("pages", free=7)
+    tr.counter("slots", active=2, waiting=1)
+    seg, cursor, missed = tr.segment(0)
+    assert [e["ph"] for e in seg] == ["C", "C"]
+    assert seg[0]["args"] == {"free": 7.0}
+    assert seg[1]["args"] == {"active": 2.0, "waiting": 1.0}
+    assert (cursor, missed) == (2, 0)
+    # incremental: nothing new since the cursor
+    assert tr.segment(cursor) == ([], 2, 0)
+    # overflow: old events drop, and a stale cursor reports what it missed
+    for i in range(6):
+        tr.instant(f"e{i}")
+    seg, cursor, missed = tr.segment(2)
+    assert cursor == 8 and missed == 2  # e0/e1 region evicted
+    assert [e["name"] for e in seg] == ["e2", "e3", "e4", "e5"]
+    assert tr.cursor == 8
+    with pytest.raises(ValueError):
+        tr.segment(-1)
+
+
+# ---------------------------------------------------------------------------
+# prometheus exposition conformance
+# ---------------------------------------------------------------------------
+
+
+def test_registry_exposition_passes_conformance_with_hostile_labels():
+    from repro.obs.promcheck import check_exposition
+
+    reg = MetricsRegistry()
+    reg.counter("req_total", "requests by status").inc(2, status='we"ird\\x')
+    reg.counter("req_total").inc(1, status="with\nnewline")
+    reg.gauge("depth", "queue depth").set(3)
+    reg.histogram("lat_seconds", "latency").observe(0.3)
+    text = reg.prometheus_text()
+    assert check_exposition(text) == []
+    # escapes actually applied, not just tolerated
+    assert 'status="we\\"ird\\\\x"' in text
+    assert "\\nnewline" in text
+
+
+@pytest.mark.parametrize("doctored, needle", [
+    ("# TYPE m counter\n# HELP m late\nm 1\n", "HELP for m after its TYPE"),
+    ("# TYPE m counter\nm 1\n# TYPE m counter\n", "duplicate TYPE"),
+    ("# TYPE m bogus\nm 1\n", "unknown TYPE"),
+    ("m 1\n", "no TYPE declaration"),
+    ("# TYPE m counter\n# TYPE n counter\nm 1\nn 1\nm 2\n", "interleave"),
+    ('# TYPE m counter\nm{l="a", l="b"} 1\n', "duplicate label"),
+    ("# TYPE m gauge\nm NaN\n", "non-finite"),
+    ("# TYPE m gauge\nm +Inf\n", "non-finite"),
+    ("# TYPE m counter\nm -4\n", "negative counter"),
+    ("# TYPE m counter\nm{} garbage\n", "unparseable value"),
+    ("# TYPE h histogram\nh_bucket 1\nh_sum 1\nh_count 1\n", "le label"),
+    ('# TYPE h histogram\nh_bucket{le="1"} 5\nh_bucket{le="+Inf"} 3\n'
+     "h_sum 1\nh_count 3\n", "cumulative"),
+    ('# TYPE h histogram\nh_bucket{le="1"} 1\nh_sum 1\nh_count 1\n', "+Inf"),
+    ('# TYPE h histogram\nh_bucket{le="+Inf"} 2\nh_sum 1\nh_count 3\n',
+     "!= _count"),
+])
+def test_promcheck_flags_each_violation(doctored, needle):
+    from repro.obs.promcheck import check_exposition
+
+    errs = check_exposition(doctored)
+    assert any(needle in e for e in errs), (doctored, errs)
+
+
+def test_promcheck_accepts_plain_metric_named_like_histogram_series():
+    from repro.obs.promcheck import check_exposition
+
+    # x_count with its own TYPE is a family, not an orphan histogram leg
+    assert check_exposition("# TYPE x_count counter\nx_count 4\n") == []
+
+
+def test_metric_values_reject_nonfinite():
+    c = Counter("c")
+    with pytest.raises(ValueError):
+        c.inc(float("nan"))
+    with pytest.raises(ValueError):
+        c.inc(float("inf"))
+    g = Gauge("g")
+    with pytest.raises(ValueError):
+        g.set(float("nan"))
+    with pytest.raises(ValueError):
+        g.inc(float("inf"))
+
+
+# ---------------------------------------------------------------------------
+# in-situ attribution
+# ---------------------------------------------------------------------------
+
+
+def test_attrib_sampling_on_engine_matches_counters_and_gate(tmp_path):
+    eng = _engine(attrib_every=2)
+    out = tmp_path / "attrib_trace.json"
+    m = eng.run(realtime=False, trace=str(out))
+    at = eng._attrib
+    assert m["statuses"] == {"ok": 3}
+    assert len(at.samples) == m["steps"] // 2 >= 1
+    assert eng.registry.counter("repro_attrib_steps_total").value() == len(at.samples)
+    for s in at.samples:
+        assert {r["index"] for r in s["layers"]} == set(range(s["n_layers"]))
+        assert sum(r["share"] for r in s["layers"]) == pytest.approx(1.0)
+        assert all(r["seconds"] > 0 for r in s["layers"])
+    # attribution shows up in the exposition alongside engine counters
+    text = eng.prometheus_text()
+    assert "repro_attrib_layer_seconds_total" in text
+    from repro.obs.promcheck import check_exposition
+
+    assert check_exposition(text) == []
+    # the trace still satisfies the gate, carries child spans on the
+    # attribution track and counter samples every step
+    d = json.loads(out.read_text())
+    assert ci.check_trace(d) == []
+    from repro.obs.trace import ATTRIB_TID, ENGINE_PID
+
+    child = [e for e in d["traceEvents"]
+             if e.get("ph") == "X" and e.get("tid") == ATTRIB_TID
+             and e.get("pid") == ENGINE_PID]
+    assert len(child) == len(at.samples) * eng.cfg.n_layers
+    counters = [e for e in d["traceEvents"] if e.get("ph") == "C"]
+    assert {e["name"] for e in counters} == {
+        "pages", "slots", "tokens_per_s_window", "preemptions_total",
+        "shed_total"}
+    summ = at.summary()
+    assert summ["n_samples"] == len(at.samples)
+    assert sum(p["mean_share"] for p in summ["pairs"]) == pytest.approx(1.0)
+
+
+def test_attrib_bit_pairs_from_mixed_plan():
+    from repro.configs import get_config
+    from repro.obs.attrib import LayerAttributor, layer_bit_pair, pair_label
+    from repro.plan.apply import apply_plan
+    from repro.plan.search import plan_from_bits
+    from repro.serving import Engine, EngineConfig
+
+    cfg = get_config("gemma3-1b", smoke=True)
+    plan = plan_from_bits(cfg, arch="gemma3-1b",
+                          bits=[(5, 4), (8, 4), (2, 2)], n_slots=2)
+    params = T_init_mixed = None
+    from repro.models import transformer as T
+
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    params, head = apply_plan(params, cfg, plan)
+    # pair metadata read straight from the packed layer trees
+    assert [layer_bit_pair(p) for p in params["layers"]] == [(5, 4), (8, 4), (2, 2)]
+    assert pair_label((5, 4)) == "w5a4" and pair_label(None) == "fp"
+    eng = Engine(cfg, params,
+                 EngineConfig(n_slots=2, page_size=8, max_len=32,
+                              chunk_tokens=4, attrib_every=2),
+                 head=head)
+    rng = jax.random.PRNGKey(1)
+    for _ in range(2):
+        rng, k = jax.random.split(rng)
+        eng.submit(jax.random.randint(k, (6,), 1, cfg.vocab).tolist(), 4)
+    eng.run(realtime=False)
+    s = eng._attrib.samples[0]
+    assert [r["pair"] for r in s["layers"]] == ["w5a4", "w8a4", "w2a2"]
+    assert sum(r["share"] for r in s["layers"]) == pytest.approx(1.0)
+
+
+def test_attrib_rejects_bad_config():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.obs.attrib import LayerAttributor
+    from repro.serving import Engine, EngineConfig
+
+    cfg = get_config("llama3.2-3b", smoke=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        LayerAttributor(cfg, params, reps=0)
+    with pytest.raises(ValueError):
+        Engine(cfg, params, EngineConfig(n_slots=2, page_size=8, max_len=32,
+                                         attrib_every=-1))
+    with pytest.raises(ValueError):
+        Engine(cfg, params, EngineConfig(n_slots=2, page_size=8, max_len=32,
+                                         trace_checkpoint_every=-1))
+
+
+def test_trace_checkpointing_writes_partial_trace(tmp_path, monkeypatch):
+    out = tmp_path / "ckpt_trace.json"
+    eng = _engine(trace_checkpoint_every=2)
+    saves = []
+    orig = TraceRecorder.save
+    monkeypatch.setattr(
+        TraceRecorder, "save",
+        lambda self, path: saves.append(path) or orig(self, path))
+    m = eng.run(realtime=False, trace=str(out))
+    # a crash-durable save fired every 2 steps, plus the final seal
+    assert len(saves) == m["steps"] // 2 + 1
+    assert all(str(p) == str(out) for p in saves)
+    final = json.loads(out.read_text())
+    assert final["repro"]["statuses"] == {"ok": 3}
+    assert ci.check_trace(final) == []
+    # no path -> checkpointing has nowhere to write, run still succeeds
+    saves.clear()
+    eng2 = _engine(trace_checkpoint_every=2)
+    eng2.run(realtime=False, trace=TraceRecorder())
+    assert saves == []
+
+
+# ---------------------------------------------------------------------------
+# telemetry endpoint
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_server_routes_and_errors():
+    import urllib.error
+    import urllib.request
+
+    from repro.obs import TelemetryServer
+    from repro.obs.promcheck import check_exposition
+
+    reg = MetricsRegistry()
+    reg.counter("t_total", "things").inc(2, kind="a")
+    tr = TraceRecorder()
+    tr.instant("tick")
+
+    def boom():
+        raise RuntimeError("scrape-time failure")
+
+    with TelemetryServer(metrics_fn=reg.prometheus_text,
+                         livez_fn=lambda: {"steps": 3},
+                         trace_fn=tr.segment) as srv:
+        assert srv.port > 0
+        text = urllib.request.urlopen(srv.url + "/metrics").read().decode()
+        assert check_exposition(text) == []
+        live = json.loads(urllib.request.urlopen(srv.url + "/livez").read())
+        assert live == {"steps": 3}
+        seg = json.loads(
+            urllib.request.urlopen(srv.url + "/trace?since=0").read())
+        assert len(seg["events"]) == 1 and seg["missed"] == 0
+        cursor = seg["cursor"]
+        seg2 = json.loads(urllib.request.urlopen(
+            srv.url + f"/trace?since={cursor}").read())
+        assert seg2["events"] == [] and seg2["cursor"] == cursor
+        with pytest.raises(urllib.error.HTTPError) as e404:
+            urllib.request.urlopen(srv.url + "/nope")
+        assert e404.value.code == 404
+    # unwired routes 404; broken callables become 500, not thread death
+    with TelemetryServer(metrics_fn=boom) as srv:
+        with pytest.raises(urllib.error.HTTPError) as e404:
+            urllib.request.urlopen(srv.url + "/livez")
+        assert e404.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as e500:
+            urllib.request.urlopen(srv.url + "/metrics")
+        assert e500.value.code == 500
+        # the thread survived the 500: a second scrape still answers
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(srv.url + "/metrics")
+
+
+# ---------------------------------------------------------------------------
+# live windowed rates across run() boundaries (vclock persistence)
+# ---------------------------------------------------------------------------
+
+
+def test_live_metrics_windows_across_multiple_runs():
+    eng = _engine()
+    eng.warmup()
+    eng.run(realtime=False, max_steps=4)
+    v1 = eng._vclock
+    full1 = eng.live_metrics(window=v1 + 1.0)["steps_per_s_window"]
+    assert full1 == pytest.approx(4 / (v1 + 1.0))
+    eng.run(realtime=False)  # drain: the virtual clock keeps advancing
+    v2 = eng._vclock
+    assert v2 > v1
+    steps = eng.live_metrics(window=v2 + 1.0)["steps"]
+    # a window spanning both runs sees all steps: _vclock never reset,
+    # so first-run samples are not spuriously pruned as "old"
+    spanning = eng.live_metrics(window=v2 + 1.0)["steps_per_s_window"]
+    assert spanning == pytest.approx(steps / (v2 + 1.0))
+    # a narrow window sees only the tail of the second run
+    narrow = eng.live_metrics(window=2.0)["steps_per_s_window"]
+    assert narrow <= 1.0  # at most 1 step per virtual-second by construction
+    assert narrow * 2.0 < steps

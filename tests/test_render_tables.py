@@ -51,14 +51,17 @@ def test_all_tables_tolerate_missing_artifacts(fake_root):
     assert rt.roofline_table() == rt._EMPTY
     assert rt.sweep_delta_table() == rt._EMPTY
     assert rt.plan_drift_table() == rt._EMPTY
+    assert rt.in_situ_attrib_table() == rt._EMPTY
 
 
 def test_main_seeds_skeleton_when_experiments_missing(fake_root, capsys):
     rt.main()
     md = (fake_root / "EXPERIMENTS.md").read_text()
     assert "## Plan drift" in md
+    assert "## In-situ attribution" in md
     assert "<!-- PLAN_DRIFT_TABLE -->" in md and "<!-- /PLAN_DRIFT_TABLE -->" in md
-    assert md.count(rt._EMPTY) == 4
+    assert "<!-- IN_SITU_ATTRIB_TABLE -->" in md
+    assert md.count(rt._EMPTY) == 5
     assert "rendered" in capsys.readouterr().out
 
 
@@ -87,6 +90,36 @@ def test_plan_drift_golden(fake_root):
     assert "| 0 | w5a4 | 0.500 | 0.250 | 0.50x |" in lines
     assert "| 1 | w8a4 | 0.300 | 0.600 | 2.00x |" in lines
     assert "| 2 | w2a2 | — | — | — |" in lines  # null drift renders, not crashes
+
+
+def test_in_situ_attrib_golden(fake_root):
+    art = fake_root / "artifacts"
+    art.mkdir(parents=True)
+    rep = {**DRIFT_REP, "in_situ": {
+        "n_samples": 6, "attrib_every": 2, "steps": 12,
+        "rank_inversions": 2, "n_layer_pairs": 3,
+        "layers": [
+            {"w_bits": 5, "a_bits": 4, "predicted_share": 0.5,
+             "measured_share": 0.4, "drift": 0.8},
+            {"w_bits": 8, "a_bits": 4, "predicted_share": 0.3,
+             "measured_share": 0.45, "drift": 1.5},
+            {"w_bits": 2, "a_bits": 2, "predicted_share": 0.2,
+             "measured_share": 0.15, "drift": None},
+        ],
+    }}
+    (art / "plan_drift.json").write_text(json.dumps(rep))
+    out = rt.in_situ_attrib_table()
+    assert ("**6** sampled steps (every 2 of 12) inside the fused step: "
+            "**2 of 3** layer-cost rank pairs inverted in-situ "
+            "(standalone: 1).") in out
+    lines = out.splitlines()
+    # standalone column comes from the top-level layers, in-situ from the block
+    assert "| 0 | w5a4 | 0.500 | 0.250 | 0.400 | 0.80x |" in lines
+    assert "| 1 | w8a4 | 0.300 | 0.600 | 0.450 | 1.50x |" in lines
+    assert "| 2 | w2a2 | 0.200 | 0.150 | 0.150 | — |" in lines
+    # a standalone-only report has no in-situ table to render
+    (art / "plan_drift.json").write_text(json.dumps(DRIFT_REP))
+    assert rt.in_situ_attrib_table() == rt._EMPTY
 
 
 def test_render_is_idempotent_and_upgrades_legacy_markers(fake_root):
