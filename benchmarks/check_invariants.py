@@ -29,8 +29,12 @@ survive CI-box timing noise:
   (the mixed-precision path stays genuinely mixed);
 * packing efficiency — the overpack density-gain pairs are still
   present, each > 1x denser and verified bit-exact through the kernel;
-* kernel bench — the prepack A/B and K-blocking sections exist with
-  positive timings (the pipeline measured what it claims);
+* kernel bench — the prepack A/B, K-blocking, and paged-gather sections
+  exist with positive timings (the pipeline measured what it claims);
+* paged gather — the gather A/B re-verified the Pallas kernel bit-exact
+  vs ``pool[block_table]`` (values and lane mask) and vs the Python-int
+  oracle on fp and int8 pools in both mask modes, with the int8 dequant
+  error inside the pinned per-row bound;
 * deploy-plan artifact — the CI-compiled plan itself serves >= 3
   distinct bit pairs.
 
@@ -255,9 +259,58 @@ def check_packing(d: dict) -> list[str]:
     return errs
 
 
+def check_gather(d: dict) -> list[str]:
+    """Paged-gather A/B artifact (``kernel_bench.py --gather``).
+
+    Substance, not existence: the sweep must cover fp AND int8 pools and
+    both mask modes (full causal and sliding window), every row must have
+    re-verified the Pallas gather bit-exact against the XLA
+    ``pool[block_table]`` reference (values AND lane mask) and against
+    the Python-int oracle, int8 rows must stay inside the pinned
+    per-page-row dequant error bound (1/254 of the row max, gated with
+    headroom at 4e-3) with row argmaxes preserved up to quantization-
+    level ties, and both arms must carry positive timings.  Timings are
+    NOT compared — interpret-mode CPU emulation inverts the ratio; the
+    win is a TPU claim, the correctness is gated everywhere.
+    """
+    rows = d.get("gather") or []
+    if not rows:
+        return ["gather: no rows"]
+    errs: list[str] = []
+    if {r.get("int8") for r in rows} != {True, False}:
+        errs.append("gather: sweep must cover both fp and int8 pools")
+    windows = {r.get("window", 0) for r in rows}
+    if 0 not in windows or not any(w > 0 for w in windows):
+        errs.append(
+            "gather: sweep must cover both mask modes (window 0 and > 0)"
+        )
+    for r in rows:
+        tag = (f"gather[S{r.get('n_slots')}xB{r.get('n_blocks')}"
+               f"xP{r.get('page_size')} c{r.get('chunk')} w{r.get('window')}"
+               f"{' int8' if r.get('int8') else ''}]")
+        if not r.get("kernel_bitexact_vs_reference", False):
+            errs.append(f"{tag}: kernel gather no longer bit-exact vs pool[block_table]")
+        if not r.get("mask_bitexact", False):
+            errs.append(f"{tag}: in-kernel lane mask diverges from the reference")
+        if not r.get("oracle_match", False):
+            errs.append(f"{tag}: XLA reference diverges from the Python-int oracle")
+        if r.get("us_xla", 0) <= 0 or r.get("us_kernel", 0) <= 0:
+            errs.append(f"{tag}: non-positive timing")
+        if r.get("int8"):
+            err = r.get("int8_max_rel_err")
+            if err is None or err > 4e-3:
+                errs.append(
+                    f"{tag}: int8 dequant error {err} exceeds the pinned "
+                    "4e-3 per-row-max bound"
+                )
+            if not r.get("int8_argmax_preserved", False):
+                errs.append(f"{tag}: int8 dequant flipped a row argmax beyond tie range")
+    return errs
+
+
 def check_kernels(d: dict) -> list[str]:
     errs = []
-    for section in ("prepack", "k_blocking", "kernels"):
+    for section in ("prepack", "k_blocking", "gather", "kernels"):
         rows = d.get(section) or []
         if not rows:
             errs.append(f"kernels: section {section!r} missing/empty")
@@ -565,6 +618,7 @@ CHECKS = {
     "plan": check_plan,
     "packing": check_packing,
     "kernels": check_kernels,
+    "gather": check_gather,
     "deploy-plan": check_deploy_plan,
     "trace": check_trace,
     "drift": check_drift,
@@ -577,10 +631,12 @@ def infer_kind(path: pathlib.Path) -> str | None:
     if "plans" in [p.lower() for p in path.parts[:-1]]:
         return "deploy-plan"
     # order matters: "trace_serving_attn.json" is a trace, not a serving
-    # bench, "plan_drift.json" is a drift report, not a plan bench, and
+    # bench, "plan_drift.json" is a drift report, not a plan bench,
     # "BENCH_serving_attrib_smoke.json" is an attrib artifact, not a
-    # serving bench ("trace_attrib_*.json" still gates as a trace)
-    for kind in ("trace", "drift", "attrib", "serving", "plan", "packing", "kernels"):
+    # serving bench ("trace_attrib_*.json" still gates as a trace), and
+    # "BENCH_gather_smoke.json" is the paged-gather A/B, not the full
+    # kernel bench
+    for kind in ("trace", "drift", "attrib", "gather", "serving", "plan", "packing", "kernels"):
         if kind in name:
             return kind
     return None

@@ -30,6 +30,9 @@ from repro.kernels.quant_matmul.ops import quant_dense
 
 # (M, K, N) sweep; the first entry is the acceptance-gate shape
 PREPACK_SHAPES = [(64, 256, 128), (128, 512, 256), (8, 1024, 512)]
+# paged-gather A/B: (n_slots, n_blocks, page_size, width, chunk) decode
+# shapes; the first entry is the smoke-gate shape
+GATHER_SHAPES = [(4, 8, 16, 64, 1), (8, 8, 16, 64, 4)]
 # mixed-precision pairs for the prepack gate: w4a4 (densest placement,
 # acc_chunk=9 -> peel-bound), w3a4 (acc_chunk=39) and w2a4 (acc_chunk=182
 # -> dot-bound, the paper's ultra-low-weight-width serving regime)
@@ -149,6 +152,97 @@ def run_blocking(wb: int = 4, ab: int = 4, shapes=None) -> list[dict]:
     return out
 
 
+def run_gather(smoke: bool = False) -> list[dict]:
+    """Gathered-view (``pool[block_table]``) vs Pallas paged-gather A/B.
+
+    Every row also re-verifies correctness on its exact operands — the
+    three-way harness inline (kernel vs XLA reference vs Python-int
+    oracle, bit-exact on fp AND int8 pools) plus the int8 dequant error
+    bound vs the fp originals — so the CI gate
+    (``check_invariants.py --kind gather``) gates substance, not just
+    that timings exist.
+    """
+    import numpy as np
+
+    from repro.kernels.paged_gather import ref as pg_ref
+    from repro.kernels.paged_gather.ops import paged_gather_kv
+
+    rows = []
+    shapes = GATHER_SHAPES[:1] if smoke else GATHER_SHAPES
+    for si, (S, NB, PS, D, C) in enumerate(shapes):
+        for int8 in (False, True):
+            for window in (0, PS + 3):  # full causal and sliding window
+                case = pg_ref.GatherCase(
+                    n_slots=S, n_blocks=NB, page_size=PS, width=D, chunk=C,
+                    window=window, int8=int8, seed=40 + si,
+                )
+                ops = pg_ref.make_operands(case)
+                bt, pos = jnp.asarray(ops["block_table"]), jnp.asarray(ops["pos"])
+                win = jnp.asarray(ops["window"])
+                pk, pv = jnp.asarray(ops["pool_k"]), jnp.asarray(ops["pool_v"])
+                ks = None if ops["k_scale"] is None else jnp.asarray(ops["k_scale"])
+                vs = None if ops["v_scale"] is None else jnp.asarray(ops["v_scale"])
+
+                def xla():
+                    return pg_ref.xla_gather_reference(
+                        bt, pos, win, pk, pv, ks, vs,
+                        chunk=C, out_dtype=jnp.float32)
+
+                def kernel():
+                    return paged_gather_kv(
+                        pk, pv, bt, pos, window=win, chunk=C,
+                        k_scale=ks, v_scale=vs, out_dtype=jnp.float32)
+
+                timed = _time_pair(
+                    {"xla": jax.jit(xla), "kernel": kernel}, reps=3, rounds=4)
+                k_ref, v_ref, m_ref = (np.asarray(a) for a in xla())
+                kk, kv_, km = kernel()
+                kk = np.asarray(kk).reshape(k_ref.shape)
+                kv_ = np.asarray(kv_).reshape(v_ref.shape)
+                km = np.asarray(km).reshape(S, C, NB, PS)
+                ok, ov, om = pg_ref.python_oracle(case, ops)
+                row = {
+                    "n_slots": S, "n_blocks": NB, "page_size": PS,
+                    "width": D, "chunk": C, "window": window, "int8": int8,
+                    "us_xla": round(timed["xla"], 1),
+                    "us_kernel": round(timed["kernel"], 1),
+                    "ratio_kernel_vs_xla": round(timed["kernel"] / timed["xla"], 3),
+                    "kernel_bitexact_vs_reference": bool(
+                        (kk == k_ref).all() and (kv_ == v_ref).all()),
+                    "mask_bitexact": bool((km == m_ref).all()),
+                    "oracle_match": bool(
+                        (ok == k_ref).all() and (ov == v_ref).all()
+                        and (om == m_ref).all()),
+                }
+                if int8:
+                    table = ops["block_table"]
+                    live = table != 0
+                    max_rel, flips, rows_n = 0.0, 0, 0
+                    for deq, fp_pool in ((kk, ops["pool_k_fp"]), (kv_, ops["pool_v_fp"])):
+                        fp = fp_pool[table]
+                        row_max = np.max(np.abs(fp), axis=-1, keepdims=True)
+                        rel = np.abs(deq - fp) / (row_max + 1e-12)
+                        max_rel = max(max_rel, float(
+                            np.where(live[..., None, None], rel, 0.0).max()))
+                        am_fp = np.argmax(np.abs(fp), axis=-1)[live].ravel()
+                        am_dq = np.argmax(np.abs(deq), axis=-1)[live].ravel()
+                        fp_rows = np.abs(fp)[live].reshape(-1, fp.shape[-1])
+                        max_rows = row_max[live][..., 0].ravel()
+                        idx = np.arange(len(am_fp))
+                        # a flip only counts against preservation when the
+                        # fp gap exceeds one int8 step (a genuine loss, not
+                        # a quantization-level tie)
+                        gap = max_rows - fp_rows[idx, am_dq]
+                        flips += int(((am_fp != am_dq)
+                                      & (gap > max_rows / 127.0)).sum())
+                        rows_n += len(am_fp)
+                    row["int8_max_rel_err"] = round(max_rel, 6)
+                    row["int8_argmax_preserved"] = flips == 0
+                    row["int8_rows_checked"] = rows_n
+                rows.append(row)
+    return rows
+
+
 def run() -> list[tuple[str, float, str]]:
     rows = []
     key = jax.random.PRNGKey(0)
@@ -198,6 +292,7 @@ def collect(smoke: bool = False) -> dict:
         ),
         "prepack": run_prepack(shapes=shapes),
         "k_blocking": run_blocking(shapes=shapes),
+        "gather": run_gather(smoke=smoke),
         "kernels": [
             {"name": name, "us_per_call": round(us, 1), "derived": derived}
             for name, us, derived in run()
@@ -205,7 +300,33 @@ def collect(smoke: bool = False) -> dict:
     }
 
 
-if __name__ == "__main__":
+def main(argv=None) -> int:
+    import argparse
+    import json
+    import pathlib
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--gather", action="store_true",
+                    help="run only the paged-gather A/B and write its artifact")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sweep (first shape only)")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (gather mode; default BENCH_gather[_smoke].json)")
+    args = ap.parse_args(argv)
+    if args.gather:
+        payload = {
+            "schema": "gather_bench.v1",
+            "smoke": args.smoke,
+            "backend": jax.default_backend(),
+            "interpret": default_interpret(),
+            "gather": run_gather(smoke=args.smoke),
+        }
+        out = pathlib.Path(
+            args.out or ("BENCH_gather_smoke.json" if args.smoke else "BENCH_gather.json")
+        )
+        out.write_text(json.dumps(payload, indent=1, sort_keys=True))
+        print(f"wrote {out} ({len(payload['gather'])} gather rows)")
+        return 0
     for name, us, derived in run():
         print(f"{name},{us:.1f},{derived}")
     for row in run_prepack():
@@ -214,3 +335,8 @@ if __name__ == "__main__":
             f"_m{row['m']}k{row['k']}n{row['n']},{row['us_prepacked']},"
             f"speedup_vs_seed={row['speedup_vs_seed']}x"
         )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

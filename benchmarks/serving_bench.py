@@ -690,6 +690,8 @@ def main(argv=None) -> None:
             skipped += [
                 "chaos_sweep (covered by `serving_bench.py --smoke --chaos`)",
                 "deadline_sweep (covered by `serving_bench.py --smoke --chaos`)",
+                "gather_backend=kernel arm (token identity + A/B covered by "
+                "`kernel_bench.py --gather --smoke` and the paged-gather-smoke job)",
             ]
         else:
             payload["chaos"] = {"fault_rate": CHAOS_RATE,

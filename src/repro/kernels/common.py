@@ -16,10 +16,12 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import inspect
 import time
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 
 @functools.lru_cache(maxsize=1)
@@ -51,6 +53,50 @@ def resolve_block_k(
     if block_k is not None:
         return block_k
     return default_block_k(k_dim, interpret, compiled_default=compiled_default)
+
+
+# -- scalar-prefetch block-spec plumbing -------------------------------------
+#
+# Kernels whose data placement is *data-dependent* (the paged-KV gather:
+# which physical page a grid step loads is decided by the block table,
+# not by the grid indices) use ``pltpu.PrefetchScalarGridSpec``: the
+# first ``num_scalar_prefetch`` operands are small int arrays prefetched
+# to SMEM before the grid runs, and every BlockSpec index map receives
+# them after the grid indices.  These helpers keep the two spec styles
+# composable: table-driven specs read the prefetched refs, plain specs
+# ignore them without each call site hand-writing ``*_`` arity shims.
+
+
+def table_page_spec(page_size: int, width: int, *, table_ref: int = 0) -> pl.BlockSpec:
+    """BlockSpec streaming one physical page per ``(slot, block)`` grid step.
+
+    The pool operand is ``[n_pages, page_size, width]``; the index map
+    reads the scalar-prefetched block table (``scalars[table_ref]``,
+    shaped ``[n_slots, n_blocks]``) so grid step ``(s, b)`` pulls exactly
+    the page ``block_table[s, b]`` into VMEM — pages no table row
+    references are never loaded.
+    """
+
+    def index_map(s, b, *scalars):
+        return (scalars[table_ref][s, b], 0, 0)
+
+    return pl.BlockSpec((1, page_size, width), index_map)
+
+
+def grid_spec(block_shape: tuple[int, ...], index_map) -> pl.BlockSpec:
+    """BlockSpec whose index map uses grid indices only.
+
+    Under ``PrefetchScalarGridSpec`` every index map is called with the
+    scalar-prefetch refs appended; this wrapper truncates the call to the
+    map's declared arity so ordinary grid-indexed maps can sit next to
+    table-driven ones in the same spec list.
+    """
+    n = len(inspect.signature(index_map).parameters)
+
+    def wrapped(*args):
+        return index_map(*args[:n])
+
+    return pl.BlockSpec(block_shape, wrapped)
 
 
 # -- kernel timing hooks -----------------------------------------------------

@@ -1,0 +1,59 @@
+"""Dispatch wrapper for the paged-attention gather kernel.
+
+``attention_decode_paged`` calls :func:`paged_gather_kv` when its gather
+backend is ``"kernel"``; the wrapper flattens the kernel's per-block
+tiles back into the ``[S, T, D]`` view / ``[S, C, T]`` mask layout the
+attention math consumes, so the score/softmax/output code is shared
+verbatim between backends.  ``interpret=None`` keeps the backend-selected
+convention: compiled Mosaic on TPU, interpreter mode elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.paged_gather.kernel import paged_gather_raw
+
+# the gather backends attention_decode_paged / EngineConfig accept:
+# "xla" is the legacy pool[block_table] path, "kernel" the Pallas gather
+GATHER_BACKENDS = ("xla", "kernel")
+
+
+def check_gather_backend(name: str) -> str:
+    if name not in GATHER_BACKENDS:
+        raise ValueError(
+            f"unknown gather backend {name!r} (know {GATHER_BACKENDS})"
+        )
+    return name
+
+
+def paged_gather_kv(
+    pool_k: jax.Array,  # [n_pages, page_size, D] fp or int8 levels
+    pool_v: jax.Array,
+    block_table: jax.Array,  # [S, n_blocks] int32 (0 = null page)
+    pos: jax.Array,  # [S] int32
+    *,
+    window: jax.Array,  # traced int32 scalar (<= 0: full causal)
+    chunk: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    out_dtype,
+    interpret: bool | None = None,
+):
+    """Returns ``(k_view [S,T,D], v_view [S,T,D], mask [S,C,T])``.
+
+    Fp pools are bit-exact with ``pool[block_table]`` on every live page
+    (null pages are zeroed, which the causal mask makes unobservable);
+    int8 pools dequantize in-kernel with the per-page-row scales.
+    """
+    S, n_blocks = block_table.shape
+    page_size, width = pool_k.shape[1], pool_k.shape[2]
+    k4, v4, m4 = paged_gather_raw(
+        block_table, pos, window, pool_k, pool_v, k_scale, v_scale,
+        chunk=chunk, out_dtype=out_dtype, interpret=interpret,
+    )
+    T = n_blocks * page_size
+    return (
+        k4.reshape(S, T, width),
+        v4.reshape(S, T, width),
+        m4.reshape(S, chunk, T),
+    )

@@ -1,0 +1,171 @@
+"""References and fixtures for the paged-gather kernel.
+
+Two consumers share this module:
+
+* the three-way differential harness (``tests/diffcheck.py``) — the
+  vectorized XLA reference here is the middle leg between the Pallas
+  kernel and the Python-int oracle;
+* ``benchmarks/kernel_bench.py`` — the same reference is the "before"
+  arm of the gathered-view-vs-kernel A/B, and :func:`make_operands`
+  builds the decode-shaped fixtures both sides run on.
+
+The reference is exactly the engine's legacy gather
+(``pool[block_table]`` + dequant + mask) with the kernel's null-page
+suppression applied, in the kernel's op order and dtypes — fp pools must
+match bit-for-bit, and int8 pools must too because dequantization is the
+same ``levels.astype(out) * scale.astype(out)`` on both sides.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def xla_gather_reference(
+    block_table,  # [S, n_blocks] int32
+    pos,  # [S] int32
+    window,  # scalar int32 (<= 0: full causal)
+    pool_k,  # [n_pages, page_size, D]
+    pool_v,
+    k_scale=None,
+    v_scale=None,
+    *,
+    chunk: int,
+    out_dtype,
+):
+    """The legacy ``pool[block_table]`` gather, null pages suppressed.
+
+    Pure jnp (runs under jit on any backend); output shapes/dtypes match
+    :func:`repro.kernels.paged_gather.kernel.paged_gather_raw` exactly.
+    """
+    S, n_blocks = block_table.shape
+    page_size = pool_k.shape[1]
+    live = (block_table != 0)[..., None, None]  # [S, n_blocks, 1, 1]
+
+    def gather(pool, scale):
+        view = pool[block_table].astype(out_dtype)  # [S, n_blocks, ps, D]
+        if scale is not None:
+            view = view * scale[block_table].astype(out_dtype)
+        return jnp.where(live, view, jnp.zeros_like(view))
+
+    k_view = gather(pool_k, k_scale)
+    v_view = gather(pool_v, v_scale)
+    kpos = jnp.arange(n_blocks * page_size, dtype=jnp.int32).reshape(
+        1, 1, n_blocks, page_size
+    )
+    posc = (
+        pos.astype(jnp.int32)[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None]
+    )[:, :, None, None]
+    win = jnp.asarray(window, jnp.int32).reshape(())
+    mask = (kpos <= posc) & jnp.where(win > 0, (posc - kpos) < win, True)
+    return k_view, v_view, mask
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherCase:
+    """One paged-gather fixture geometry.
+
+    ``pos_mode`` pins the boundary the case probes: ``"edge"`` puts every
+    slot's position on the last row of its last live page (exactly-full
+    page), ``"start"`` on the first row of a fresh page (empty tail),
+    ``"random"`` anywhere in the last live page (partially-filled last
+    page).  ``n_pages = 0`` sizes the pool to fit every slot fully
+    allocated plus the null page.
+    """
+
+    n_slots: int = 4
+    n_blocks: int = 4
+    page_size: int = 8
+    width: int = 16
+    chunk: int = 1
+    window: int = 0
+    int8: bool = False
+    pos_mode: str = "random"
+    inactive_slots: int = 1  # trailing slots with all-null tables
+    n_pages: int = 0
+    seed: int = 0
+
+
+def make_operands(case: GatherCase) -> dict:
+    """Build numpy operands for one case (allocator-faithful layout).
+
+    Page ids are handed out without replacement from ``1..n_pages-1``
+    (page 0 is the null page and receives deliberate garbage, standing in
+    for inactive-slot scatters); live slots own a dense prefix of blocks
+    with zero tail entries, exactly the engine's block-table shape.
+    """
+    rng = np.random.default_rng(case.seed)
+    n_pages = case.n_pages or case.n_slots * case.n_blocks + 1
+    shape = (n_pages, case.page_size, case.width)
+    # fp rows first (int8 cases quantize them per page row, keeping the
+    # fp originals around for dequant-error measurement)
+    pool_k_fp = rng.normal(size=shape).astype(np.float32)
+    pool_v_fp = rng.normal(size=shape).astype(np.float32)
+    free = list(range(n_pages - 1, 0, -1))  # allocator order: low ids first
+    table = np.zeros((case.n_slots, case.n_blocks), np.int32)
+    pos = np.zeros((case.n_slots,), np.int32)
+    n_live_slots = case.n_slots - case.inactive_slots
+    for s in range(n_live_slots):
+        n_live = int(rng.integers(1, case.n_blocks + 1))
+        n_live = min(n_live, len(free))
+        if n_live == 0:
+            continue
+        table[s, :n_live] = [free.pop() for _ in range(n_live)]
+        if case.pos_mode == "edge":
+            pos[s] = n_live * case.page_size - 1
+        elif case.pos_mode == "start":
+            pos[s] = (n_live - 1) * case.page_size
+        else:
+            pos[s] = int(rng.integers((n_live - 1) * case.page_size,
+                                      n_live * case.page_size))
+    ops = {"block_table": table, "pos": pos,
+           "window": np.int32(case.window),
+           "pool_k_fp": pool_k_fp, "pool_v_fp": pool_v_fp}
+    if case.int8:
+        for name, fp in (("k", pool_k_fp), ("v", pool_v_fp)):
+            scale = (np.max(np.abs(fp), axis=-1, keepdims=True) / 127.0
+                     + 1e-12).astype(np.float32)
+            levels = np.clip(np.round(fp / scale), -127, 127).astype(np.int8)
+            ops[f"pool_{name}"] = levels
+            ops[f"{name}_scale"] = scale
+    else:
+        ops["pool_k"] = pool_k_fp
+        ops["pool_v"] = pool_v_fp
+        ops["k_scale"] = ops["v_scale"] = None
+    return ops
+
+
+def python_oracle(case: GatherCase, ops: dict):
+    """Python-int/-scalar oracle: walks the exact page -> tile -> dequant
+    cadence of the kernel element by element.  Indices and the mask are
+    plain Python ints; values are single np.float32 ops in the kernel's
+    order (``float32(level) * float32(scale)``), so fp *and* int8 cases
+    must match the kernel and the XLA reference bit-for-bit."""
+    table, pos = ops["block_table"], ops["pos"]
+    win = int(ops["window"])
+    S, NB = table.shape
+    PS, D, C = case.page_size, case.width, case.chunk
+    k = np.zeros((S, NB, PS, D), np.float32)
+    v = np.zeros((S, NB, PS, D), np.float32)
+    m = np.zeros((S, C, NB, PS), bool)
+    for s in range(S):
+        for b in range(NB):
+            page = int(table[s, b])
+            if page != 0:  # null pages stay exact zeros
+                for r in range(PS):
+                    for name, out in (("k", k), ("v", v)):
+                        pool, scale = ops[f"pool_{name}"], ops[f"{name}_scale"]
+                        for e in range(D):
+                            val = np.float32(pool[page, r, e])
+                            if scale is not None:
+                                val = val * np.float32(scale[page, r, 0])
+                            out[s, b, r, e] = val
+            for c in range(C):
+                for r in range(PS):
+                    kpos, qpos = b * PS + r, int(pos[s]) + c
+                    causal = kpos <= qpos
+                    in_win = (win <= 0) or (qpos - kpos) < win
+                    m[s, c, b, r] = causal and in_win
+    return k, v, m

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.quant import fake_quant_act, fake_quant_weight
 from repro.kernels.packed_matmul.ops import PackedDenseParams, packed_dense, prepack_dense
+from repro.kernels.paged_gather.ops import check_gather_backend, paged_gather_kv
 from repro.parallel.sharding import shard
 
 
@@ -365,6 +366,7 @@ def attention_decode_paged(
     pool_k_scale: jax.Array | None = None,  # [P, page_size, 1] when pool is int8
     pool_v_scale: jax.Array | None = None,
     lens: jax.Array | None = None,  # [S] int32 valid tokens in each chunk
+    gather: str = "xla",  # "xla": pool[block_table]; "kernel": Pallas gather
 ):
     """One decode/prefill step against a paged KV pool (continuous batching).
 
@@ -394,6 +396,14 @@ def attention_decode_paged(
     ``[P, page_size, 1]`` scale pool); rows are quantized on scatter and
     dequantized on gather, halving paged-KV HBM.  Returns two extra pool
     arrays (the updated scales) in that mode.
+
+    ``gather`` selects how the view is built: ``"xla"`` is the legacy
+    ``pool[block_table]`` gather above, ``"kernel"`` streams pages
+    through the Pallas paged-gather kernel (the scalar-prefetched block
+    table drives the index map; int8 dequant and the per-lane mask are
+    fused into the same pass).  The two backends are bit-exact — fp
+    pools byte-for-byte, int8 pools too because the dequant op order and
+    dtypes match — so the choice is purely a performance knob.
     """
     S, C, d = x.shape
     H, G, hd = s.n_heads, s.kv_heads, s.head_dim
@@ -434,22 +444,38 @@ def attention_decode_paged(
         pool_v = pool_v.at[page, off].set(v_lvl)
         pool_k_scale = pool_k_scale.at[page, off].set(k_sc)
         pool_v_scale = pool_v_scale.at[page, off].set(v_sc)
-        k_deq = pool_k[block_table].astype(x.dtype) * pool_k_scale[block_table].astype(x.dtype)
-        v_deq = pool_v[block_table].astype(x.dtype) * pool_v_scale[block_table].astype(x.dtype)
-        k_view = k_deq.reshape(S, T, G, hd)
-        v_view = v_deq.reshape(S, T, G, hd)
     else:
         pool_k = pool_k.at[page, off].set(k_rows.astype(pool_k.dtype))
         pool_v = pool_v.at[page, off].set(v_rows.astype(pool_v.dtype))
-        k_view = pool_k[block_table].reshape(S, T, G, hd)
-        v_view = pool_v[block_table].reshape(S, T, G, hd)
+    win = jnp.asarray(window, jnp.int32)
+    if check_gather_backend(gather) == "kernel":
+        # Pallas gather: block table drives the index map, int8 dequant
+        # and the per-lane mask fused in-kernel (null pages zeroed, which
+        # the mask below makes unobservable — see kernels/paged_gather).
+        k_flat, v_flat, lane_mask = paged_gather_kv(
+            pool_k, pool_v, block_table, pos,
+            window=win, chunk=C,
+            k_scale=pool_k_scale, v_scale=pool_v_scale,
+            out_dtype=x.dtype,
+        )
+        k_view = k_flat.reshape(S, T, G, hd)
+        v_view = v_flat.reshape(S, T, G, hd)
+        mask = lane_mask[:, None, None, :, :]
+    else:
+        if kv_int8:
+            k_deq = pool_k[block_table].astype(x.dtype) * pool_k_scale[block_table].astype(x.dtype)
+            v_deq = pool_v[block_table].astype(x.dtype) * pool_v_scale[block_table].astype(x.dtype)
+            k_view = k_deq.reshape(S, T, G, hd)
+            v_view = v_deq.reshape(S, T, G, hd)
+        else:
+            k_view = pool_k[block_table].reshape(S, T, G, hd)
+            v_view = pool_v[block_table].reshape(S, T, G, hd)
+        kpos = jnp.arange(T, dtype=jnp.int32)
+        valid = kpos[None, None, :] <= posc[:, :, None]  # [S, C, T] causal per lane
+        in_win = jnp.where(win > 0, (posc[:, :, None] - kpos[None, None, :]) < win, True)
+        mask = (valid & in_win)[:, None, None, :, :]
     scale = 1.0 / jnp.sqrt(hd).astype(x.dtype)
     scores = _gqa_scores(q, k_view.astype(x.dtype), scale=scale)  # [S,G,H/G,C,T]
-    kpos = jnp.arange(T, dtype=jnp.int32)
-    win = jnp.asarray(window, jnp.int32)
-    valid = kpos[None, None, :] <= posc[:, :, None]  # [S, C, T] causal per lane
-    in_win = jnp.where(win > 0, (posc[:, :, None] - kpos[None, None, :]) < win, True)
-    mask = (valid & in_win)[:, None, None, :, :]
     scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     o = jnp.einsum("bghqk,bkgd->bqghd", p, v_view.astype(x.dtype))

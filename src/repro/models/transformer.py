@@ -674,6 +674,7 @@ def decode_paged_layer(
     *,
     window: jax.Array | int = -1,
     lens: jax.Array | None = None,
+    gather: str = "xla",
 ) -> tuple[jax.Array, dict]:
     """One layer of the paged decode/prefill step.
 
@@ -696,12 +697,13 @@ def decode_paged_layer(
                 p["attn"], aspec, h, layer_state["k"], layer_state["v"],
                 block_table, pos, window=window, quant=cfg.quant,
                 pool_k_scale=layer_state["k_scale"],
-                pool_v_scale=layer_state["v_scale"], lens=lens,
+                pool_v_scale=layer_state["v_scale"], lens=lens, gather=gather,
             )
         else:
             h, nk, nv = L.attention_decode_paged(
                 p["attn"], aspec, h, layer_state["k"], layer_state["v"],
                 block_table, pos, window=window, quant=cfg.quant, lens=lens,
+                gather=gather,
             )
             nks = nvs = None
         if cfg.is_moe:
@@ -762,6 +764,7 @@ def forward_decode_paged(
     pos: jax.Array,  # [S] int32 per-slot position of each chunk's first token
     head: Any = None,
     lens: jax.Array | None = None,  # [S] int32 valid tokens per chunk (None: all)
+    gather: str = "xla",  # KV gather backend (see attention_decode_paged)
 ) -> tuple[jax.Array, dict]:
     """One continuous-batching decode/prefill step over the slot set.
 
@@ -796,7 +799,8 @@ def forward_decode_paged(
             if kv_int8:
                 st.update(k_scale=pks, v_scale=pvs)
             h, nst = decode_paged_layer(
-                p, cfg, st, block_table, h, pos, window=win, lens=lens
+                p, cfg, st, block_table, h, pos, window=win, lens=lens,
+                gather=gather,
             )
             return h, nst["k"], nst["v"], nst.get("k_scale"), nst.get("v_scale")
 

@@ -97,6 +97,7 @@ class LayerAttributor:
         reps: int = 1,
         registry: MetricsRegistry | None = None,
         max_samples: int = 1024,
+        gather: str = "xla",  # KV gather backend — must match the fused step
     ):
         if cfg.family not in ("attn", "ssm"):
             raise NotImplementedError(
@@ -111,6 +112,7 @@ class LayerAttributor:
         self.reps = reps
         self.registry = registry if registry is not None else MetricsRegistry()
         self.max_samples = max_samples
+        self.gather = gather
         self.samples: list[dict] = []
         self.n_sample_drops = 0  # samples beyond max_samples (oldest evicted)
         self._warm = False
@@ -139,7 +141,8 @@ class LayerAttributor:
             st = {k: v[i] for k, v in state.items()}
             with use_rules(rules_):
                 return T.decode_paged_layer(
-                    p_i, cfg, st, table, h, pos, window=win, lens=lens
+                    p_i, cfg, st, table, h, pos, window=win, lens=lens,
+                    gather=gather,
                 )
 
         def stacked_layer_fn(layers_, state, i, table, h, pos, win, lens):
@@ -147,7 +150,8 @@ class LayerAttributor:
             st = {k: v[i] for k, v in state.items()}
             with use_rules(rules_):
                 return T.decode_paged_layer(
-                    p_i, cfg, st, table, h, pos, window=win, lens=lens
+                    p_i, cfg, st, table, h, pos, window=win, lens=lens,
+                    gather=gather,
                 )
 
         def head_fn(p, h, lens):

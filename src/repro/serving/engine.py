@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.kernels.paged_gather.ops import check_gather_backend
 from repro.models.layers import prepack_lm_head
 from repro.obs.attrib import LayerAttributor
 from repro.obs.metrics import MetricsRegistry, WindowedSeries, percentile
@@ -114,6 +115,10 @@ class EngineConfig:
     # > 0 with run(trace=<path>): rewrite the partial trace to disk every
     # N steps, so a crashed run still leaves a loadable trace behind
     trace_checkpoint_every: int = 0
+    # KV gather backend inside the fused step: "xla" is the legacy
+    # pool[block_table] gather, "kernel" the Pallas paged-gather kernel
+    # (bit-exact either way — see models.layers.attention_decode_paged)
+    gather_backend: str = "xla"
 
     @property
     def blocks_per_slot(self) -> int:
@@ -153,6 +158,7 @@ class Engine:
             raise ValueError("attrib_every/trace_checkpoint_every must be >= 0")
         if ecfg.attrib_reps < 1:
             raise ValueError("attrib_reps must be >= 1")
+        check_gather_backend(ecfg.gather_backend)
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -192,14 +198,18 @@ class Engine:
             def step_fn(p, state, table, tokens, pos, lens):
                 with use_rules(self.rules):
                     return T.forward_decode_paged(
-                        p, cfg, state, table, tokens, pos, head=head, lens=lens
+                        p, cfg, state, table, tokens, pos, head=head, lens=lens,
+                        gather=ecfg.gather_backend,
                     )
 
         else:
 
             def step_fn(p, state, table, tokens, pos):
                 with use_rules(self.rules):
-                    return T.forward_decode_paged(p, cfg, state, table, tokens, pos, head=head)
+                    return T.forward_decode_paged(
+                        p, cfg, state, table, tokens, pos, head=head,
+                        gather=ecfg.gather_backend,
+                    )
 
         self._step = jax.jit(step_fn, donate_argnums=(1,))
         self._reset = jax.jit(
@@ -236,6 +246,7 @@ class Engine:
             self._attrib = LayerAttributor(
                 cfg, params, head=head, rules=self.rules,
                 reps=ecfg.attrib_reps, registry=self.registry,
+                gather=ecfg.gather_backend,
             )
 
     # -- request intake ----------------------------------------------------

@@ -10,6 +10,7 @@ Supported API (the only parts the test suite touches):
 
   * ``strategies.integers(min_value, max_value)``
   * ``strategies.sampled_from(elements)``
+  * ``strategies.booleans()``
   * ``@given(**kwargs)`` — draws ``max_examples`` deterministic samples
     per test (seeded from the test's qualified name, so runs are
     reproducible and failures can be replayed).
@@ -45,9 +46,14 @@ def _sampled_from(elements) -> _Strategy:
     return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
 
 
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+
 strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = _integers
 strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
 
 
 def given(**strats):

@@ -40,6 +40,8 @@ from repro.kernels.filter_conv.ops import FilterConfig
 from repro.kernels.packed_matmul import ref as pm_ref
 from repro.kernels.packed_matmul.kernel import packed_matmul_raw
 from repro.kernels.packed_matmul.ops import PackConfig, choose_config
+from repro.kernels.paged_gather import ref as pg_ref
+from repro.kernels.paged_gather.kernel import paged_gather_raw
 
 # ---------------------------------------------------------------------------
 # fixture bit pairs (reused by test_plan / test_serving)
@@ -319,3 +321,72 @@ def check_conv_case(case: ConvCase, block_c: int | None = None,
     oracle = run_conv_bitpack(case, s, f)
     np.testing.assert_array_equal(oracle, reference, err_msg=f"oracle vs numpy: {case}")
     np.testing.assert_array_equal(kernel, reference, err_msg=f"kernel vs numpy: {case}")
+
+# ---------------------------------------------------------------------------
+# paged-gather cases: Pallas kernel vs XLA reference vs Python-int oracle
+# ---------------------------------------------------------------------------
+
+# the fixture geometry lives next to the kernel (benchmarks reuse it);
+# the harness re-exports it so tests depend only on diffcheck
+PagedGatherCase = pg_ref.GatherCase
+paged_gather_operands = pg_ref.make_operands
+
+# the boundary family satellite tests and hypothesis sweeps both start
+# from: exactly-full last page, fresh empty page, partially-filled last
+# page, null-page lanes (inactive slots + unallocated tails), int8
+# pools, C == 1 and chunked feeds, full-causal and sliding-window masks
+PAGED_GATHER_BOUNDARY_CASES = [
+    PagedGatherCase(seed=10),                                   # C=1 causal
+    PagedGatherCase(pos_mode="edge", seed=11),                  # page exactly full
+    PagedGatherCase(pos_mode="start", seed=12),                 # fresh page, empty tail
+    PagedGatherCase(chunk=4, seed=13),                          # chunked prefill
+    PagedGatherCase(chunk=4, pos_mode="edge", seed=14),
+    PagedGatherCase(window=5, seed=15),                         # sliding window
+    PagedGatherCase(chunk=3, window=3, seed=16),                # window < chunk span
+    PagedGatherCase(int8=True, seed=17),                        # int8 dequant
+    PagedGatherCase(int8=True, chunk=4, window=5, seed=18),
+    PagedGatherCase(int8=True, pos_mode="edge", seed=19),
+    PagedGatherCase(page_size=2, n_blocks=7, seed=20),          # odd geometry
+    PagedGatherCase(n_slots=2, inactive_slots=2, seed=21),      # all slots null
+    PagedGatherCase(n_pages=6, seed=22),                        # undersized pool
+]
+
+
+def run_paged_gather_kernel(case: PagedGatherCase, ops: dict):
+    k, v, m = paged_gather_raw(
+        jnp.asarray(ops["block_table"]), jnp.asarray(ops["pos"]),
+        jnp.asarray(ops["window"]), jnp.asarray(ops["pool_k"]),
+        jnp.asarray(ops["pool_v"]),
+        None if ops["k_scale"] is None else jnp.asarray(ops["k_scale"]),
+        None if ops["v_scale"] is None else jnp.asarray(ops["v_scale"]),
+        chunk=case.chunk, out_dtype=jnp.float32,
+    )
+    return np.asarray(k), np.asarray(v), np.asarray(m)
+
+
+def run_paged_gather_reference(case: PagedGatherCase, ops: dict):
+    k, v, m = pg_ref.xla_gather_reference(
+        jnp.asarray(ops["block_table"]), jnp.asarray(ops["pos"]),
+        jnp.asarray(ops["window"]), jnp.asarray(ops["pool_k"]),
+        jnp.asarray(ops["pool_v"]),
+        None if ops["k_scale"] is None else jnp.asarray(ops["k_scale"]),
+        None if ops["v_scale"] is None else jnp.asarray(ops["v_scale"]),
+        chunk=case.chunk, out_dtype=jnp.float32,
+    )
+    return np.asarray(k), np.asarray(v), np.asarray(m)
+
+
+def run_paged_gather_oracle(case: PagedGatherCase, ops: dict):
+    """Python-int oracle leg (see :func:`pg_ref.python_oracle`): exact
+    page -> tile -> dequant cadence with scalar np.float32 ops."""
+    return pg_ref.python_oracle(case, ops)
+
+
+def check_paged_gather_case(case: PagedGatherCase) -> None:
+    ops = paged_gather_operands(case)
+    kernel = run_paged_gather_kernel(case, ops)
+    reference = run_paged_gather_reference(case, ops)
+    oracle = run_paged_gather_oracle(case, ops)
+    for name, o, r, kn in zip(("k", "v", "mask"), oracle, reference, kernel):
+        np.testing.assert_array_equal(o, r, err_msg=f"oracle vs xla [{name}]: {case}")
+        np.testing.assert_array_equal(kn, r, err_msg=f"kernel vs xla [{name}]: {case}")

@@ -266,18 +266,80 @@ def test_packing_gate():
                for e in ci.check_packing({"density_gain_pairs": [shrunk]}))
 
 
+def _gather_row(**over):
+    row = {
+        "n_slots": 4, "n_blocks": 8, "page_size": 16, "width": 64,
+        "chunk": 1, "window": 0, "int8": False,
+        "us_xla": 30.0, "us_kernel": 900.0, "ratio_kernel_vs_xla": 30.0,
+        "kernel_bitexact_vs_reference": True, "mask_bitexact": True,
+        "oracle_match": True,
+    }
+    row.update(over)
+    return row
+
+
+def _gather_fixture():
+    return {"gather": [
+        _gather_row(),
+        _gather_row(window=19),
+        _gather_row(int8=True, int8_max_rel_err=0.0039,
+                    int8_argmax_preserved=True, int8_rows_checked=544),
+        _gather_row(int8=True, window=19, int8_max_rel_err=0.0039,
+                    int8_argmax_preserved=True, int8_rows_checked=544),
+    ]}
+
+
 def test_kernels_gate():
     good = {
         "prepack": [{"us_prepacked": 1.0, "us_repack_per_call": 2.0}],
         "k_blocking": [{"us": 1.0}],
+        "gather": _gather_fixture()["gather"],
         "kernels": [{"us_per_call": 1.0}],
     }
     assert ci.check_kernels(good) == []
     assert any("missing" in e for e in ci.check_kernels({"k_blocking": [], **{
-        k: good[k] for k in ("prepack", "kernels")}}))
+        k: good[k] for k in ("prepack", "gather", "kernels")}}))
+    assert any("missing" in e for e in ci.check_kernels({**good, "gather": []}))
     doctored = copy.deepcopy(good)
     doctored["prepack"][0]["us_prepacked"] = 0.0
     assert any("non-positive" in e for e in ci.check_kernels(doctored))
+
+
+def test_gather_gate_passes_honest_fixture():
+    assert ci.check_gather(_gather_fixture()) == []
+
+
+def test_gather_gate_rejects_doctored_fixtures():
+    assert any("no rows" in e for e in ci.check_gather({}))
+    # dropped coverage: fp-only, int8-only, single mask mode
+    fp_only = {"gather": [r for r in _gather_fixture()["gather"] if not r["int8"]]}
+    assert any("both fp and int8" in e for e in ci.check_gather(fp_only))
+    causal_only = {"gather": [r for r in _gather_fixture()["gather"]
+                              if r["window"] == 0]}
+    assert any("both mask modes" in e for e in ci.check_gather(causal_only))
+    # doctored correctness bits must each trip their own invariant
+    for field, needle in (
+        ("kernel_bitexact_vs_reference", "no longer bit-exact"),
+        ("mask_bitexact", "lane mask"),
+        ("oracle_match", "oracle"),
+    ):
+        d = _gather_fixture()
+        d["gather"][0][field] = False
+        assert any(needle in e for e in ci.check_gather(d)), field
+    # int8 bound: over-bound error and missing error both trip
+    d = _gather_fixture()
+    d["gather"][2]["int8_max_rel_err"] = 0.02
+    assert any("4e-3" in e for e in ci.check_gather(d))
+    d = _gather_fixture()
+    del d["gather"][2]["int8_max_rel_err"]
+    assert any("4e-3" in e for e in ci.check_gather(d))
+    d = _gather_fixture()
+    d["gather"][3]["int8_argmax_preserved"] = False
+    assert any("argmax" in e for e in ci.check_gather(d))
+    # zeroed timing
+    d = _gather_fixture()
+    d["gather"][1]["us_kernel"] = 0.0
+    assert any("non-positive timing" in e for e in ci.check_gather(d))
 
 
 def test_deploy_plan_gate():
@@ -452,6 +514,7 @@ def test_kind_inference_and_cli(tmp_path, serving_fixture):
     # trace/drift outrank the older kinds their filenames also contain
     assert ci.infer_kind(pathlib.Path("artifacts/traces/trace_serving_attn.json")) == "trace"
     assert ci.infer_kind(pathlib.Path("artifacts/plan_drift.json")) == "drift"
+    assert ci.infer_kind(pathlib.Path("BENCH_gather_smoke.json")) == "gather"
     good = tmp_path / "BENCH_serving.json"
     good.write_text(json.dumps(serving_fixture))
     assert ci.main([str(good)]) == 0

@@ -444,3 +444,161 @@ def test_quant_dense_accuracy_vs_fp32():
     q = quant_dense(x, w)
     rel = float(jnp.linalg.norm(q - exact) / jnp.linalg.norm(exact))
     assert rel < 0.02, rel
+
+# ---------------------------------------------------------------------------
+# paged_gather (block-table-driven KV gather): three-way differential harness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", diffcheck.PAGED_GATHER_BOUNDARY_CASES,
+                         ids=lambda c: f"s{c.seed}")
+def test_paged_gather_boundary_cases(case):
+    """The curated boundary family (exactly-full page, fresh page,
+    partial last page, null-page lanes, int8, chunked, windowed) runs
+    kernel vs XLA reference vs Python-int oracle, all bit-exact."""
+    diffcheck.check_paged_gather_case(case)
+
+
+@settings(max_examples=MAX_EXAMPLES or 12, deadline=None)
+@given(
+    n_slots=st.integers(1, 5),
+    n_blocks=st.integers(1, 6),
+    page_size=st.sampled_from([1, 2, 4, 8]),
+    chunk=st.sampled_from([1, 2, 4]),
+    window=st.sampled_from([0, 1, 3, 7]),
+    int8=st.booleans(),
+    pos_mode=st.sampled_from(["random", "edge", "start"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_gather_matches_oracle(
+    n_slots, n_blocks, page_size, chunk, window, int8, pos_mode, seed
+):
+    """Random geometry sweep through the three-way harness: any page
+    count / chunking / masking / quantization the engine can produce
+    must gather bit-exactly."""
+    diffcheck.check_paged_gather_case(diffcheck.PagedGatherCase(
+        n_slots=n_slots, n_blocks=n_blocks, page_size=page_size,
+        width=8, chunk=chunk, window=window, int8=int8,
+        pos_mode=pos_mode, inactive_slots=min(1, n_slots - 1), seed=seed,
+    ))
+
+
+def test_paged_gather_rejects_int8_without_scales():
+    from repro.kernels.paged_gather.kernel import paged_gather_raw
+
+    ops = diffcheck.paged_gather_operands(diffcheck.PagedGatherCase(int8=True))
+    with pytest.raises(ValueError, match="scale"):
+        paged_gather_raw(
+            jnp.asarray(ops["block_table"]), jnp.asarray(ops["pos"]),
+            jnp.asarray(ops["window"]), jnp.asarray(ops["pool_k"]),
+            jnp.asarray(ops["pool_v"]), chunk=1, out_dtype=jnp.float32,
+        )
+
+
+def test_gather_backend_names():
+    from repro.kernels.paged_gather.ops import GATHER_BACKENDS, check_gather_backend
+
+    assert GATHER_BACKENDS == ("xla", "kernel")
+    for name in GATHER_BACKENDS:
+        assert check_gather_backend(name) == name
+    with pytest.raises(ValueError, match="gather backend"):
+        check_gather_backend("fused")
+
+
+# ---------------------------------------------------------------------------
+# int8 paged-KV dequant error bounds (regression pin)
+# ---------------------------------------------------------------------------
+
+
+# Per-page-row symmetric int8: the worst rounding error per element is
+# scale/2 = row_max/254, i.e. rel-to-row-max error <= 1/254.  Pinned with
+# headroom at 1/250; the CI gather gate pins the same bound at 4e-3.
+INT8_KV_REL_ERR_BOUND = 1.0 / 250.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_int8_paged_kv_dequant_error_pinned(seed):
+    """Dequantized int8 KV, read back through the exact scatter -> pool ->
+    kernel-gather cadence, stays within the per-row-max relative error
+    bound, and every row's argmax (the attention-relevant winner) is
+    preserved."""
+    case = diffcheck.PagedGatherCase(int8=True, chunk=4, seed=100 + seed)
+    ops = diffcheck.paged_gather_operands(case)
+    k_deq, v_deq, _ = diffcheck.run_paged_gather_kernel(case, ops)
+    table = ops["block_table"]
+    live = table != 0
+    for deq, fp_pool in ((k_deq, ops["pool_k_fp"]), (v_deq, ops["pool_v_fp"])):
+        fp = fp_pool[table]  # [S, NB, PS, D] original fp rows
+        row_max = np.max(np.abs(fp), axis=-1, keepdims=True)
+        rel = np.abs(deq - fp) / (row_max + 1e-12)
+        rel = np.where(live[..., None, None], rel, 0.0)
+        assert float(rel.max()) <= INT8_KV_REL_ERR_BOUND, float(rel.max())
+        # argmax per row is preserved up to quantization-level ties: if
+        # the winner flips, the fp runner-up was within one int8 step
+        # (scale = row_max/127) of the fp max — indistinguishable at
+        # int8 resolution, so no better bound is achievable
+        D = fp.shape[-1]
+        am_fp = np.argmax(np.abs(fp), axis=-1)[live].ravel()
+        am_dq = np.argmax(np.abs(deq), axis=-1)[live].ravel()
+        fp_live = np.abs(fp)[live].reshape(-1, D)
+        max_live = row_max[live][..., 0].ravel()
+        idx = np.arange(len(am_fp))
+        gap = max_live - fp_live[idx, am_dq]
+        scale_step = max_live / 127.0
+        flipped = am_fp != am_dq
+        assert np.all(gap[flipped] <= scale_step[flipped]), (
+            gap[flipped], scale_step[flipped])
+        # and flips are rare on these fixtures (< 5% of rows)
+        assert flipped.mean() < 0.05, flipped.mean()
+
+
+def test_attention_decode_paged_gather_backends_bit_exact():
+    """attention_decode_paged with gather="kernel" equals gather="xla" on
+    every observable lane (live slots, valid lanes) and on the updated
+    pools — fp and int8, causal and windowed."""
+    from repro.models import layers as L
+    from repro.models.layers import AttnSpec
+
+    rng = np.random.default_rng(0)
+    S, C, d, H, G, hd = 3, 4, 32, 4, 2, 8
+    n_blocks, page_size = 4, 4
+    P = S * n_blocks + 1
+    spec = AttnSpec(d_model=d, n_heads=H, kv_heads=G, head_dim=hd)
+    params = {
+        "ln": {"g": jnp.ones((d,), jnp.float32)},
+        **{nm: {"w": jnp.asarray(rng.normal(size=sh) * 0.05, jnp.float32)}
+           for nm, sh in (("wq", (d, H * hd)), ("wk", (d, G * hd)),
+                          ("wv", (d, G * hd)), ("wo", (H * hd, d)))},
+    }
+    x = jnp.asarray(rng.normal(size=(S, C, d)), jnp.float32)
+    table = np.zeros((S, n_blocks), np.int32)
+    free = list(range(P - 1, 0, -1))
+    pos = np.zeros((S,), np.int32)
+    lens = np.zeros((S,), np.int32)
+    for s in range(S - 1):  # last slot stays inactive (all-null table)
+        n_live = int(rng.integers(1, n_blocks + 1))
+        table[s, :n_live] = [free.pop() for _ in range(n_live)]
+        pos[s] = int(rng.integers(0, (n_live - 1) * page_size + 1))
+        lens[s] = int(rng.integers(1, min(C, n_live * page_size - pos[s]) + 1))
+    for kv_int8 in (False, True):
+        for window in (0, 5):
+            dt = jnp.int8 if kv_int8 else jnp.float32
+            pk = jnp.asarray(rng.integers(-127, 127, (P, page_size, G * hd)), dt)
+            pv = jnp.asarray(rng.integers(-127, 127, (P, page_size, G * hd)), dt)
+            kw = {}
+            if kv_int8:
+                kw = dict(
+                    pool_k_scale=jnp.asarray(rng.random((P, page_size, 1)), jnp.float32),
+                    pool_v_scale=jnp.asarray(rng.random((P, page_size, 1)), jnp.float32),
+                )
+            outs = {
+                g: L.attention_decode_paged(
+                    params, spec, x, pk, pv, jnp.asarray(table), jnp.asarray(pos),
+                    window=window, lens=jnp.asarray(lens), gather=g, **kw)
+                for g in ("xla", "kernel")
+            }
+            ha, hb = np.asarray(outs["xla"][0]), np.asarray(outs["kernel"][0])
+            for s in range(S):
+                np.testing.assert_array_equal(ha[s, :lens[s]], hb[s, :lens[s]])
+            for a, b in zip(outs["xla"][1:], outs["kernel"][1:]):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

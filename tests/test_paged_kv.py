@@ -1,0 +1,159 @@
+"""Property tests for the paged-KV host-side bookkeeping.
+
+Random alloc/free/assign/append/preempt interleavings drive
+``PageAllocator`` + ``BlockTable`` through the exact call sequences the
+scheduler can produce, asserting the invariants the serving engine rests
+on: page 0 is never handed out, ``alloc`` is all-or-nothing, double
+frees and out-of-range frees raise, page accounting balances at every
+step, and ``assert_no_leaks`` holds once everything is released.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.paged_kv import BlockTable, PageAllocator
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_rejects_degenerate_pool():
+    with pytest.raises(ValueError):
+        PageAllocator(1)
+    # 2 pages = null page + one usable page: the smallest legal pool
+    a = PageAllocator(2)
+    assert a.n_usable == 1 and a.alloc(1) == [1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n_pages=st.integers(2, 40),
+    seed=st.integers(0, 2**31 - 1),
+    n_ops=st.integers(1, 120),
+)
+def test_allocator_invariants_under_random_traffic(n_pages, seed, n_ops):
+    """Random alloc/free interleavings: page 0 never allocated, handed-out
+    pages unique and in range, all-or-nothing allocation, and
+    held + free == usable after every operation."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(n_pages)
+    held: list[list[int]] = []
+    for _ in range(n_ops):
+        if held and rng.random() < 0.4:
+            alloc.free(held.pop(int(rng.integers(len(held)))))
+        else:
+            want = int(rng.integers(1, max(2, n_pages // 2)))
+            got = alloc.alloc(want)
+            if got is None:
+                # all-or-nothing: a refusal means the pool really is short
+                assert alloc.n_free < want
+            else:
+                assert len(got) == want
+                assert all(0 < p < n_pages for p in got), got
+                held.append(got)
+        flat = [p for pages in held for p in pages]
+        assert len(flat) == len(set(flat)), "page handed out twice"
+        assert alloc.n_free + len(flat) == alloc.n_usable
+    for pages in held:
+        alloc.free(pages)
+    alloc.assert_no_leaks()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_pages=st.integers(2, 20), seed=st.integers(0, 2**31 - 1))
+def test_allocator_rejects_bad_frees(n_pages, seed):
+    """Double frees, null-page frees, and out-of-range frees all raise —
+    and leave the free list unchanged (failed frees don't corrupt)."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(n_pages)
+    got = alloc.alloc(int(rng.integers(1, n_pages)))
+    assert got is not None
+    alloc.free(got)
+    before = alloc.n_free
+    for bad in ([got[0]], [0], [n_pages], [-3]):
+        with pytest.raises(ValueError):
+            alloc.free(bad)
+    assert alloc.n_free == before
+    alloc.assert_no_leaks()
+
+
+def test_assert_no_leaks_catches_a_leak():
+    alloc = PageAllocator(8)
+    kept = alloc.alloc(3)
+    assert kept is not None
+    with pytest.raises(AssertionError, match="leak"):
+        alloc.assert_no_leaks()
+    alloc.free(kept)
+    alloc.assert_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# BlockTable + allocator, scheduler-shaped traffic
+# ---------------------------------------------------------------------------
+
+
+def test_block_table_capacity_and_dense_prefix():
+    bt = BlockTable(2, 3)
+    with pytest.raises(ValueError):
+        bt.assign(0, [1, 2, 3, 4])
+    bt.assign(0, [5, 6])
+    bt.append(0, [7])
+    np.testing.assert_array_equal(bt.as_array()[0], [5, 6, 7])
+    with pytest.raises(ValueError):
+        bt.append(0, [8])
+    bt.clear(0)
+    np.testing.assert_array_equal(bt.as_array()[0], [0, 0, 0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_slots=st.integers(1, 6),
+    n_blocks=st.integers(1, 6),
+    n_pages=st.integers(2, 30),
+    seed=st.integers(0, 2**31 - 1),
+    n_ops=st.integers(1, 80),
+)
+def test_scheduler_shaped_sequences_never_leak(n_slots, n_blocks, n_pages, seed, n_ops):
+    """Admit (assign) / grow (append) / preempt-or-finish (clear + free)
+    in random order, mirroring the on-demand scheduler: every live row is
+    a dense prefix of unique in-range ids, the null page never appears in
+    a prefix, and draining everything leaves zero leaks."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(n_pages)
+    table = BlockTable(n_slots, n_blocks)
+    owned = {s: [] for s in range(n_slots)}  # mirror of each slot's pages
+    for _ in range(n_ops):
+        s = int(rng.integers(n_slots))
+        op = rng.random()
+        if op < 0.35 and not owned[s]:  # admit
+            want = int(rng.integers(1, n_blocks + 1))
+            got = alloc.alloc(want)
+            if got is not None:
+                table.assign(s, got)
+                owned[s] = list(got)
+        elif op < 0.7 and owned[s] and len(owned[s]) < n_blocks:  # grow
+            got = alloc.alloc(1)
+            if got is not None:
+                table.append(s, got)
+                owned[s] += got
+        elif owned[s]:  # preempt / finish
+            table.clear(s)
+            alloc.free(owned[s])
+            owned[s] = []
+        arr = table.as_array()
+        flat = [p for pages in owned.values() for p in pages]
+        assert len(flat) == len(set(flat))
+        assert alloc.n_free + len(flat) == alloc.n_usable
+        for slot, pages in owned.items():
+            row = arr[slot]
+            np.testing.assert_array_equal(row[: len(pages)], pages)
+            assert not row[len(pages):].any(), "non-dense row"
+            assert 0 not in pages
+    for s, pages in owned.items():
+        if pages:
+            table.clear(s)
+            alloc.free(pages)
+    alloc.assert_no_leaks()
+    assert not table.as_array().any()
