@@ -600,6 +600,70 @@ def check_attrib(d: dict) -> list[str]:
     return errs
 
 
+def check_mesh(d: dict, *, tolerance: float = 0.9) -> list[str]:
+    """Mesh serving A/B artifact (``serving_bench.py --smoke --mesh``).
+
+    Per family (both attn and ssm must be present): every arm —
+    single-device, dp-only, and the full dp x mp mesh — must report
+    token streams identical to the single-device reference, zero leaked
+    pages and slots on EVERY replica, all requests terminal, and every
+    dp > 1 arm's tokens/s at least ``tolerance`` x the single-device
+    arm's (sharding the scheduler must not cost throughput).  Replica
+    accounting lists must carry exactly ``dp`` entries — a shorter list
+    means a replica escaped the leak audit."""
+    mesh = d.get("mesh") or {}
+    rows = mesh.get("results") or []
+    if not rows:
+        return ["mesh: sweep missing/empty"]
+    errs: list[str] = []
+    fams = {r.get("family") for r in rows}
+    if not {"attn", "ssm"} <= fams:
+        errs.append(
+            f"mesh: families {sorted(f for f in fams if f)} must cover both "
+            "attn and ssm — mesh identity must hold for KV caches AND "
+            "recurrent state"
+        )
+    for r in rows:
+        rtag = f"mesh[{r.get('arch', '?')}]"
+        arms = _by(r.get("arms") or [], "arm")
+        if "single" not in arms:
+            errs.append(f"{rtag}: single-device reference arm missing")
+            continue
+        if not any(a.get("dp", 1) > 1 for a in arms.values()):
+            errs.append(f"{rtag}: no dp > 1 arm — nothing was sharded")
+        if not any(a.get("mp", 1) > 1 for a in arms.values()):
+            errs.append(f"{rtag}: no mp > 1 arm — the model axis went untested")
+        base = arms["single"].get("tokens_per_s") or 0
+        for name, a in arms.items():
+            tag = f"{rtag}[{name}]"
+            if not a.get("token_identical", False):
+                errs.append(
+                    f"{tag}: token streams diverge from the single-device "
+                    "reference — mesh sharding must be semantics-preserving"
+                )
+            dp = a.get("dp", 1)
+            for which in ("leaked_pages_per_replica", "leaked_slots_per_replica"):
+                leaks = a.get(which)
+                if not isinstance(leaks, list) or len(leaks) != dp:
+                    errs.append(
+                        f"{tag}: {which} has {len(leaks) if isinstance(leaks, list) else 'no'} "
+                        f"entries for dp={dp} — every replica must be audited"
+                    )
+                elif any(leaks):
+                    errs.append(f"{tag}: {which}={leaks} — nothing may leak")
+            errs += _check_statuses(tag, a, r.get("n_requests", -1))
+            if (a.get("statuses") or {}).get("failed"):
+                errs.append(f"{tag}: {a['statuses']['failed']} request(s) ended 'failed'")
+            if dp > 1 and base > 0:
+                ratio = (a.get("tokens_per_s") or 0) / base
+                if ratio < tolerance:
+                    errs.append(
+                        f"{tag}: tokens/s = {ratio:.3f}x single-device < "
+                        f"{tolerance}x — replica sharding is costing throughput"
+                    )
+    return errs
+
+
 def check_deploy_plan(d: dict) -> list[str]:
     layers = d.get("layers") or []
     if not layers:
@@ -614,6 +678,7 @@ def check_deploy_plan(d: dict) -> list[str]:
 
 
 CHECKS = {
+    "mesh": check_mesh,
     "serving": check_serving,
     "plan": check_plan,
     "packing": check_packing,
@@ -633,10 +698,11 @@ def infer_kind(path: pathlib.Path) -> str | None:
     # order matters: "trace_serving_attn.json" is a trace, not a serving
     # bench, "plan_drift.json" is a drift report, not a plan bench,
     # "BENCH_serving_attrib_smoke.json" is an attrib artifact, not a
-    # serving bench ("trace_attrib_*.json" still gates as a trace), and
-    # "BENCH_gather_smoke.json" is the paged-gather A/B, not the full
-    # kernel bench
-    for kind in ("trace", "drift", "attrib", "gather", "serving", "plan", "packing", "kernels"):
+    # serving bench ("trace_attrib_*.json" still gates as a trace),
+    # "BENCH_serving_mesh_smoke.json" is the mesh A/B, not a serving
+    # bench, and "BENCH_gather_smoke.json" is the paged-gather A/B, not
+    # the full kernel bench
+    for kind in ("trace", "drift", "attrib", "gather", "mesh", "serving", "plan", "packing", "kernels"):
         if kind in name:
             return kind
     return None

@@ -74,6 +74,7 @@ BENCH_JSON = _ROOT / "BENCH_serving.json"
 BENCH_JSON_SMOKE = _ROOT / "BENCH_serving_smoke.json"  # never the committed file
 BENCH_JSON_CHAOS_SMOKE = _ROOT / "BENCH_serving_chaos_smoke.json"  # chaos CI gate
 BENCH_JSON_ATTRIB_SMOKE = _ROOT / "BENCH_serving_attrib_smoke.json"  # obs CI gate
+BENCH_JSON_MESH_SMOKE = _ROOT / "BENCH_serving_mesh_smoke.json"  # mesh CI gate
 TRACES_DIR = _ROOT / "artifacts" / "traces"  # --trace output (CI-gated, not committed)
 
 # the long-prompt admit sweep's chunk budget (on-demand arm)
@@ -117,17 +118,12 @@ def make_workload(
 def run_engine(arch: str, workload: list[dict], *, n_slots: int, page_size: int,
                max_len: int, packed_head: bool = False, policy: str = "continuous",
                admit: str = "reserve", chunk_tokens: int = 1, n_pages: int = 0) -> dict:
-    import jax
-
     from repro.configs import get_config
-    from repro.models import transformer as T
-    from repro.serving import Engine, EngineConfig
+    from repro.serving import EngineConfig, build_engine
 
     cfg = get_config(arch, smoke=True)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(
+    eng = build_engine(
         cfg,
-        params,
         EngineConfig(
             n_slots=n_slots, page_size=page_size, max_len=max_len,
             n_pages=n_pages, policy=policy, admit=admit,
@@ -240,15 +236,11 @@ def long_prompt_sweep(args, rates: list[float], n_requests: int, smoke: bool
 
 def _lifecycle_engine(arch: str, *, chaos=None, **ecfg_kw):
     """Engine under the deterministic virtual clock (chaos/deadline sweeps)."""
-    import jax
-
     from repro.configs import get_config
-    from repro.models import transformer as T
-    from repro.serving import Engine, EngineConfig
+    from repro.serving import EngineConfig, build_engine
 
     cfg = get_config(arch, smoke=True)
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    return Engine(cfg, params, EngineConfig(**ecfg_kw), chaos=chaos)
+    return build_engine(cfg, EngineConfig(**ecfg_kw), chaos=chaos)
 
 
 def trace_sweep(args, smoke: bool) -> dict:
@@ -557,6 +549,91 @@ def deadline_sweep(args, smoke: bool) -> dict:
     }
 
 
+def mesh_sweep(args, smoke: bool) -> dict:
+    """Mesh-parallel serving A/B on BOTH engine families (the mesh gate).
+
+    The SAME backlogged workload runs through three engine arms built by
+    the one :func:`repro.serving.api.build_engine` front door: single
+    (``dp=mp=1``), data-parallel only (``dp``, per-replica dispatch of
+    the identical compiled step — bit-exact), and the full ``dp x mp``
+    ``shard_map`` mesh (sliced-then-packed weights, one psum per block).
+    Arms run under the virtual clock (tokens per virtual time unit, so
+    the dp speedup is a scheduling fact, not host noise) with f32 compute
+    as the identity oracle: greedy tokens must match the single-device
+    arm request-for-request, and every replica must drain with zero
+    leaked pages/slots — exactly what ``check_invariants.py --kind
+    mesh`` enforces on this artifact.
+    """
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.serving import EngineConfig, MeshConfig, build_engine
+
+    mesh = MeshConfig.parse(args.mesh)
+    n_requests = 8 if smoke else 16
+    shape = dict(n_slots=4, page_size=8, max_len=32, chunk_tokens=4)
+    arms = [("single", MeshConfig())]
+    if mesh.dp > 1:
+        arms.append((f"dp{mesh.dp}", MeshConfig(dp=mesh.dp)))
+    if mesh.mp > 1:
+        arms.append((f"{mesh.dp}x{mesh.mp}", mesh))
+    rows = []
+    for arch, family in CHAOS_ARCHS:
+        # f32 compute: the mesh arm's psum/slice numerics stay far inside
+        # the greedy-argmax tie margin, so token identity is a hard gate
+        cfg = dataclasses.replace(get_config(arch, smoke=True), dtype=jnp.float32)
+        wl = make_workload(n_requests, 4.0, seed=args.seed + 7, vocab=cfg.vocab,
+                           prompt_range=(4, 13), gen_range=(4, 11))
+        arm_rows, tokens_by_arm = [], {}
+        for name, mcfg in arms:
+            eng = build_engine(cfg, EngineConfig(mesh=mcfg, **shape))
+            for w in wl:
+                eng.submit(w["prompt"], w["max_new_tokens"], arrival=w["arrival"])
+            eng.warmup()
+            m = eng.run(realtime=False)
+            tokens_by_arm[name] = {r.rid: list(r.out_tokens) for r in eng.finished}
+            arm_rows.append({
+                "arm": name, "dp": eng.dp, "mp": eng.mp,
+                "tokens_per_s": m["tokens_per_s"],
+                "steps": m["steps"],
+                "statuses": m["statuses"],
+                "preemptions": m["preemptions"],
+                "replica_quarantines": m["replica_quarantines"],
+                "leaked_pages_per_replica": [
+                    rep.allocator.n_usable - rep.allocator.n_free
+                    for rep in eng.replicas
+                ],
+                "leaked_slots_per_replica": [
+                    eng.ecfg.n_slots - rep.scheduler.n_free_slots
+                    for rep in eng.replicas
+                ],
+            })
+        ref = tokens_by_arm["single"]
+        for row in arm_rows:
+            row["token_identical"] = tokens_by_arm[row["arm"]] == ref
+        base_tps = arm_rows[0]["tokens_per_s"]
+        row = {
+            "arch": arch, "family": family, "n_requests": n_requests,
+            "workload": {k: list(v) if isinstance(v, tuple) else v
+                         for k, v in shape.items()},
+            "arms": arm_rows,
+            "dp_speedup": {
+                r["arm"]: round(r["tokens_per_s"] / base_tps, 3)
+                for r in arm_rows[1:]
+            },
+        }
+        rows.append(row)
+        for r in arm_rows:
+            print(
+                f"mesh_{family}_{r['arm']},{r['tokens_per_s']:.1f},"
+                f"steps={r['steps']};identical={r['token_identical']};"
+                f"leaks={sum(r['leaked_pages_per_replica'])}"
+            )
+    return {"spec": args.mesh, "dp": mesh.dp, "mp": mesh.mp, "results": rows}
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -569,6 +646,11 @@ def main(argv=None) -> None:
                     help="with --smoke: run ONLY the in-situ attribution + "
                     "live-telemetry sweep and write "
                     "BENCH_serving_attrib_smoke.json (the CI obs gate)")
+    ap.add_argument("--mesh", metavar="DPxMP", default=None,
+                    help="with --smoke: run ONLY the mesh-parallel A/B "
+                    "(single vs dp vs dp x mp engine arms, token-identity "
+                    "checked) and write BENCH_serving_mesh_smoke.json (the "
+                    "CI mesh gate); MP > 1 needs DP*MP JAX devices")
     ap.add_argument("--rates", default=None,
                     help="comma-separated arrival rates for the full sweep "
                     "(incompatible with --smoke, which fixes its rate)")
@@ -602,11 +684,48 @@ def main(argv=None) -> None:
     if args.attrib and args.trace:
         ap.error("--attrib always writes its own traces (trace_attrib_*.json); "
                  "drop --trace")
+    if args.mesh is not None:
+        if not args.smoke:
+            ap.error("--mesh selects the mesh-only smoke artifact; add --smoke")
+        if args.chaos or args.attrib or args.trace:
+            ap.error("--mesh writes its own CI artifact; drop "
+                     "--chaos/--attrib/--trace")
+        import os
+
+        # parse the spec with string ops only: importing repro.serving here
+        # would pull in jax before XLA_FLAGS is set
+        parts = [int(p) for p in args.mesh.lower().split("x")]
+        mesh_mp = parts[1] if len(parts) > 1 else 1
+        if mesh_mp > 1 and "jax" not in sys.modules:
+            # shard_map arms need dp*mp devices; force host devices before
+            # the first jax import (the CI job also sets this in its env)
+            flags = os.environ.get("XLA_FLAGS", "")
+            if "xla_force_host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = (
+                    flags + " --xla_force_host_platform_device_count=8"
+                ).strip()
 
     skipped: list[str] = []  # every scenario a mode drops, logged explicitly
     print("name,tokens_per_s,derived")
 
-    if args.attrib:
+    if args.mesh is not None:
+        skipped += [
+            "policy_sweep (mesh-only artifact; run --smoke without --mesh)",
+            "long_prompt_sweep (mesh-only artifact)",
+            "chaos_sweep (covered by `serving_bench.py --smoke --chaos`; "
+            "mesh-vs-single identity under chaos is gated by "
+            "tests/multidevice_checks.py)",
+            "deadline_sweep (covered by `serving_bench.py --smoke --chaos`)",
+        ]
+        payload = {
+            "arch": args.arch,
+            "smoke": True,
+            "mesh_only": True,
+            "mesh": mesh_sweep(args, smoke=True),
+            "skipped": skipped,
+        }
+        target = BENCH_JSON_MESH_SMOKE
+    elif args.attrib:
         skipped += [
             "policy_sweep (attrib-only artifact; run --smoke without --attrib)",
             "long_prompt_sweep (attrib-only artifact)",

@@ -365,4 +365,39 @@ print(f"  engine token streams identical across gather backends: "
 #   PYTHONPATH=src python benchmarks/kernel_bench.py --gather --smoke
 #   PYTHONPATH=src python benchmarks/check_invariants.py --kind gather \
 #       BENCH_gather_smoke.json
+
+# -- 13. mesh-parallel serving (one front door: repro.serving.api) -----------
+print("== Mesh-parallel serving via build_engine ==")
+# build_engine is how every consumer (serve.py, serving_bench.py, tests)
+# constructs engines now: quantization mode, deployment plans, chaos, and
+# mesh options all enter through it — never through Engine(...) wiring by
+# hand.  MeshConfig(dp=R) runs R data-parallel replicas, each with its own
+# page pool, block tables, and scheduler shard; the same compiled step is
+# dispatched per replica, so tokens are BIT-identical to a single-replica
+# engine (asserted below).  dp works on a single device; mp>1 (tensor
+# parallelism: head-sharded attention, N-sharded packed weights via
+# per-shard prepack_dense, expert-sharded MoE) needs real or XLA host
+# devices — see tests/multidevice_checks.py, which sets
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 before importing jax.
+from repro.serving import MeshConfig, build_engine
+
+mesh_toks = {}
+for mesh in (MeshConfig(), MeshConfig(dp=2)):
+    eng = build_engine(cfg, EngineConfig(n_slots=2, page_size=4, max_len=32,
+                                         chunk_tokens=4, mesh=mesh),
+                       params=params)
+    reqs = [eng.submit(list(range(1, 2 + ln)), 5) for ln in (5, 7, 4, 6)]
+    m = eng.run(realtime=False)
+    eng.assert_no_leaks()  # audits every replica's page/slot books
+    mesh_toks[mesh.dp] = [r.out_tokens for r in reqs]
+    print(f"  dp={mesh.dp}: {m['n_requests']} requests @ "
+          f"{m['tokens_per_s']:.1f} tok/s, "
+          f"replica quarantines {m['replica_quarantines']}")
+assert mesh_toks[1] == mesh_toks[2]
+print("  dp=2 token streams bit-identical to single-replica: True")
+# the same knob from the shell (serve + the A/B bench + the CI gate):
+#   PYTHONPATH=src python -m repro.launch.serve --mesh 2x2 --packed
+#   PYTHONPATH=src python benchmarks/serving_bench.py --smoke --mesh 2x2
+#   PYTHONPATH=src python benchmarks/check_invariants.py --kind mesh \
+#       BENCH_serving_mesh_smoke.json
 print("quickstart complete.")

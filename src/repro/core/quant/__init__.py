@@ -4,6 +4,7 @@ from .fake_quant import (
     fake_quant_weight,
     quantize_unit,
     ste_round,
+    weight_tanh_max,
     weight_to_int_levels,
 )
 
@@ -13,5 +14,6 @@ __all__ = [
     "fake_quant_weight",
     "quantize_unit",
     "ste_round",
+    "weight_tanh_max",
     "weight_to_int_levels",
 ]

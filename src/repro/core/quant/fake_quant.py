@@ -42,7 +42,21 @@ def fake_quant_act(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     return quantize_unit(jnp.clip(x, 0.0, 1.0), bits)
 
 
-def weight_to_int_levels(w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, float, int]:
+def weight_tanh_max(w: jnp.ndarray) -> jnp.ndarray:
+    """The tanh-domain normalizer max|tanh(w)| used by the DoReFa transform.
+
+    Exposed so tensor-parallel shards of one weight matrix can quantize
+    against the *global* normalizer: per-shard levels then equal column
+    slices of the global levels exactly, which is what makes pre-packing
+    per shard (no repack after collectives) token-identical to the
+    single-device path.
+    """
+    return jnp.max(jnp.abs(jnp.tanh(w)))
+
+
+def weight_to_int_levels(
+    w: jnp.ndarray, bits: int, *, t_max: jnp.ndarray | float | None = None
+) -> tuple[jnp.ndarray, float, int]:
     """Decompose a trained weight tensor into unsigned integer levels.
 
     Returns (levels uint, scale, zero_point) with
@@ -50,10 +64,16 @@ def weight_to_int_levels(w: jnp.ndarray, bits: int) -> tuple[jnp.ndarray, float,
     matching :func:`fake_quant_weight` exactly, so packed integer compute
     (levels are unsigned -> packable per Fig. 2) reproduces the QAT
     forward bit-for-bit up to float rounding of the final rescale.
+
+    ``t_max`` overrides the tanh-domain normalizer (see
+    :func:`weight_tanh_max`); shards of a larger matrix must pass the
+    whole matrix's normalizer to get slice-exact levels.
     """
     n = (1 << bits) - 1
     t = jnp.tanh(w)
-    t = t / (2.0 * jnp.max(jnp.abs(t)) + 1e-12) + 0.5
+    if t_max is None:
+        t_max = jnp.max(jnp.abs(t))
+    t = t / (2.0 * t_max + 1e-12) + 0.5
     levels = jnp.round(t * n).astype(jnp.int32)  # in [0, n]
     # w_q = 2*levels/n - 1 = (2/n) * (levels - n/2)
     return levels, 2.0 / n, n / 2.0

@@ -113,7 +113,12 @@ class PackedDenseParams:
 
 
 def prepack_dense(
-    w: jax.Array, *, w_bits: int, a_bits: int, block_k: int | None = None
+    w: jax.Array,
+    *,
+    w_bits: int,
+    a_bits: int,
+    block_k: int | None = None,
+    t_max: jax.Array | float | None = None,
 ) -> PackedDenseParams:
     """Quantize + pack a float weight matrix once, at load time.
 
@@ -122,14 +127,28 @@ def prepack_dense(
     leading axes map so level normalization stays per-matrix, matching
     the QAT fake-quant forward.  ``block_k`` pins the kernel's K-tile
     (deployment-plan autotuning); None keeps the backend default.
+
+    ``t_max`` overrides the tanh-domain level normalizer (see
+    :func:`repro.core.quant.weight_tanh_max`): a tensor-parallel shard
+    passes the *whole* matrix's normalizer so its levels — and therefore
+    its packed words — equal a column slice of the global prepack, with
+    identical (w_scale, w_zero) metadata across shards.  With stacked
+    leading axes, ``t_max`` must carry the same leading shape (one
+    normalizer per matrix).
     """
     if w.ndim in (3, 4):
+        if t_max is None:
+            return jax.vmap(
+                lambda wl: prepack_dense(wl, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
+            )(w)
         return jax.vmap(
-            lambda wl: prepack_dense(wl, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
-        )(w)
+            lambda wl, tm: prepack_dense(
+                wl, w_bits=w_bits, a_bits=a_bits, block_k=block_k, t_max=tm
+            )
+        )(w, jnp.asarray(t_max))
     cfg = choose_config(w_bits, a_bits)
     n = w.shape[1]
-    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits)
+    w_lvl, w_scale, w_zero = weight_to_int_levels(w, w_bits, t_max=t_max)
     if cfg is None:
         return PackedDenseParams(
             None, w_lvl.astype(jnp.int32), w_bits, a_bits, w_scale, w_zero, None, n, block_k

@@ -8,7 +8,11 @@ step advances every active slot per iteration, refilling slots as
 sequences finish.  ``--chunk-tokens N`` prefills prompts N tokens per
 step (chunked prefill) instead of one, and ``--admit on-demand`` swaps
 worst-case page reservation for just-in-time page growth with
-lowest-progress preemption/requeue on pool exhaustion.  ``--engine
+lowest-progress preemption/requeue on pool exhaustion.  ``--mesh DPxMP``
+shards the engine across a data x model mesh (per-replica page pools and
+schedulers; sliced-then-packed weights, sharded heads/experts) — engine
+construction goes through :func:`repro.serving.api.build_engine`, the
+unified front door.  ``--engine
 static`` keeps the original monolithic ``[L, B, T, ...]``-cache loop as
 the A/B baseline.
 
@@ -65,55 +69,9 @@ from repro.launch import steps as S
 from repro.models import transformer as T
 from repro.parallel.sharding import ShardingRules
 
-
-# canonical projection/MoE weight patterns live with the plan compiler
-from repro.plan.apply import MOE_WEIGHT_RE as _MOE_WEIGHT_RE  # noqa: E402
-from repro.plan.apply import PROJ_WEIGHT_RE as _PROJ_WEIGHT_RE  # noqa: E402
-
-
-def quantize_params_int8(params):
-    """Convert every matmul weight to int8 levels + scales (in place-ish)."""
-    import re
-
-    def one(path, leaf):
-        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
-        matched = re.search(_PROJ_WEIGHT_RE, pstr) or re.search(_MOE_WEIGHT_RE, pstr)
-        if matched and leaf.ndim >= 2:
-            # per-out-channel symmetric int8 over the contraction dim (-2);
-            # keepdims preserves the stacked layer axis for the decode scan
-            n = 127
-            scale = jnp.max(jnp.abs(leaf), axis=-2, keepdims=True) / n + 1e-12
-            levels = jnp.clip(jnp.round(leaf / scale), -n, n).astype(jnp.int8)
-            return {"levels": levels, "scale": scale.astype(jnp.float32)}
-        return leaf
-
-    return jax.tree_util.tree_map_with_path(one, params)
-
-
-def quantize_params_packed(params, *, w_bits: int, a_bits: int, verbose: bool = True):
-    """One-time quantize + bit-pack of every projection weight at load.
-
-    Attention/MLP projection matrices ([K, N] or scan-stacked [L, K, N])
-    and MoE expert tensors ([E, d, f] or scan-stacked [L, E, d, f])
-    become :class:`PackedDenseParams` leaves; ``models.layers.dense`` and
-    ``models.moe._expert_ffn`` detect them and dispatch each decode-step
-    matmul straight into the Pallas Kernel-Packing kernel.  Any
-    projection-shaped tensor left in float is counted and reported so
-    silent precision gaps are visible.
-
-    This is the *global* (one bit pair) special case of
-    ``repro.plan.apply``; per-layer mixed precision comes from
-    ``--plan`` / :func:`repro.plan.apply.apply_plan`, which shares the
-    tree walk below so uniform plans stay bit-identical to this path.
-    """
-    from repro.plan.apply import prepack_tree
-
-    skipped: list[str] = []
-    out = prepack_tree(params, w_bits=w_bits, a_bits=a_bits, skipped=skipped)
-    if skipped and verbose:
-        print(f"quantize_params_packed: {len(skipped)} projection tensors left in float: "
-              + ", ".join(skipped))
-    return out
+# weight preparation lives with the unified engine-construction API now;
+# re-exported here because callers historically imported it from serve
+from repro.serving.api import quantize_params_int8, quantize_params_packed  # noqa: F401
 
 
 def _serve_static(args, cfg, params, head) -> dict:
@@ -145,35 +103,20 @@ def _serve_static(args, cfg, params, head) -> dict:
     return {"tokens_per_s": tps, "latency_ms_per_step": dt / (args.tokens - 1) * 1e3}
 
 
-def _serve_continuous(args, cfg, params, head=None) -> dict:
-    """Continuous-batching engine over a synthetic same-arrival workload."""
-    from repro.serving import ChaosConfig, Engine, EngineConfig
+def _serve_continuous(args, cfg, params, plan=None) -> dict:
+    """Continuous-batching engine over a synthetic same-arrival workload.
 
-    chaos = ChaosConfig(
-        seed=args.chaos_seed,
-        step_fault_rate=args.chaos_step_rate,
-        alloc_fault_rate=args.chaos_alloc_rate,
-        nan_rate=args.chaos_nan_rate,
-    )
-    eng = Engine(
-        cfg,
-        params,
-        EngineConfig(
-            n_slots=args.batch,
-            page_size=args.page_size,
-            max_len=args.max_len,
-            n_pages=args.pages,
-            chunk_tokens=args.chunk_tokens,
-            admit=args.admit,
-            packed_head=args.packed_head,
-            head_bits=(args.wbits, args.abits) if args.packed else (8, 8),
-            max_waiting=args.max_waiting,
-            attrib_every=args.attrib_every,
-            attrib_reps=args.attrib_reps,
-            trace_checkpoint_every=args.trace_checkpoint_every,
-        ),
-        head=head,
-        chaos=chaos if chaos.enabled else None,
+    Weight preparation is *declared* (``quant=``/``plan=``) rather than
+    pre-applied, so ``--mesh DPxMP`` engines get sliced-then-packed
+    per-rank shards from the same flags.
+    """
+    from repro.serving import EngineConfig, build_engine
+
+    ecfg = EngineConfig.from_cli(args)
+    quant = "packed" if args.packed else ("int8" if args.int8 else None)
+    eng = build_engine(
+        cfg, ecfg, params=params, quant=quant,
+        w_bits=args.wbits, a_bits=args.abits, plan=plan,
     )
     rng = jax.random.PRNGKey(2)
     for i in range(args.requests or 2 * args.batch):
@@ -185,7 +128,7 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
         )
     eng.warmup()  # compile outside the timed run, like the static loop
     server = None
-    if args.telemetry_port is not None:
+    if ecfg.obs.telemetry_port is not None:
         from repro.obs.server import TelemetryServer
 
         def trace_segment(since):
@@ -196,7 +139,7 @@ def _serve_continuous(args, cfg, params, head=None) -> dict:
             metrics_fn=eng.prometheus_text,
             livez_fn=eng.live_metrics,
             trace_fn=trace_segment,
-            port=args.telemetry_port,
+            port=ecfg.obs.telemetry_port,
         )
         print(f"telemetry at {server.url} (/metrics /livez /trace)")
     try:
@@ -251,6 +194,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--admit", choices=("reserve", "on-demand"), default="reserve",
                     help="continuous engine: worst-case page reservation at "
                     "admit, or on-demand growth with lowest-progress preemption")
+    ap.add_argument("--mesh", metavar="DPxMP", default=None,
+                    help="continuous engine: shard across a data x model mesh "
+                    "(e.g. 2x2: two data replicas with their own page pools/"
+                    "schedulers, two tensor/expert-parallel model shards; "
+                    "needs DP*MP JAX devices when MP > 1)")
     ap.add_argument("--int8", action="store_true", help="mixed-precision int8 weights")
     ap.add_argument(
         "--plan", metavar="JSON",
@@ -335,10 +283,12 @@ def main(argv=None) -> dict:
     engine = args.engine
     if engine is None:
         engine = "continuous" if cfg.family in ("attn", "ssm") else "static"
-    if engine != "continuous" and (args.chunk_tokens != 1 or args.admit != "reserve"):
+    if engine != "continuous" and (
+        args.chunk_tokens != 1 or args.admit != "reserve" or args.mesh is not None
+    ):
         raise SystemExit(
-            "--chunk-tokens/--admit drive the continuous engine; they have no "
-            "effect on --engine static — drop them or switch engines"
+            "--chunk-tokens/--admit/--mesh drive the continuous engine; they "
+            "have no effect on --engine static — drop them or switch engines"
         )
     lifecycle_flags = (
         args.deadline is not None or args.ttft_deadline is not None
@@ -372,19 +322,20 @@ def main(argv=None) -> dict:
             "add --trace PATH or drop it"
         )
     params = T.init_params(jax.random.PRNGKey(0), cfg)
-    head = None
-    if plan is not None:
-        from repro.plan import apply_plan
-
-        params, head = apply_plan(params, cfg, plan)
-    elif args.packed:
-        params = quantize_params_packed(params, w_bits=args.wbits, a_bits=args.abits)
-    elif args.int8:
-        params = quantize_params_int8(params)
-
     if engine == "continuous":
-        out = _serve_continuous(args, cfg, params, head=head)
+        # weight prep is declared to build_engine (so --mesh engines get
+        # sliced-then-packed per-rank shards), not pre-applied here
+        out = _serve_continuous(args, cfg, params, plan=plan)
     else:
+        head = None
+        if plan is not None:
+            from repro.plan import apply_plan
+
+            params, head = apply_plan(params, cfg, plan)
+        elif args.packed:
+            params = quantize_params_packed(params, w_bits=args.wbits, a_bits=args.abits)
+        elif args.int8:
+            params = quantize_params_int8(params)
         if head is None and args.packed_head:
             from repro.models.layers import prepack_lm_head
 
@@ -400,9 +351,10 @@ def main(argv=None) -> dict:
         mode += "+packed_head"
     tps = out["tokens_per_s"]
     tps_str = f"{tps:.1f}" if tps is not None else "n/a"
+    mesh_str = f" mesh={args.mesh}" if args.mesh else ""
     print(
-        f"arch={cfg.name} engine={engine} weights={mode} batch={args.batch} "
-        f"tokens/s={tps_str} "
+        f"arch={cfg.name} engine={engine} weights={mode} batch={args.batch}"
+        f"{mesh_str} tokens/s={tps_str} "
         f"latency={out['latency_ms_per_step']:.1f} ms/step"
     )
     if "statuses" in out:

@@ -367,6 +367,7 @@ def attention_decode_paged(
     pool_v_scale: jax.Array | None = None,
     lens: jax.Array | None = None,  # [S] int32 valid tokens in each chunk
     gather: str = "xla",  # "xla": pool[block_table]; "kernel": Pallas gather
+    axis_name: str | None = None,  # mesh model axis: heads are sharded over it
 ):
     """One decode/prefill step against a paged KV pool (continuous batching).
 
@@ -404,6 +405,14 @@ def attention_decode_paged(
     fused into the same pass).  The two backends are bit-exact — fp
     pools byte-for-byte, int8 pools too because the dequant op order and
     dtypes match — so the choice is purely a performance knob.
+
+    Under tensor parallelism (``axis_name`` set inside a shard_map), ``s``
+    is the *local* spec (``n_heads/mp`` heads, ``kv_heads/mp`` kv groups),
+    the projections are contiguous column (wq/wk/wv) / row (wo) shards,
+    and the pool's feature dim holds only the local kv groups — per-head
+    attention runs exactly as on one device, and the row-parallel output
+    projection is psum-reduced *before* the residual add (the residual is
+    replicated; summing after would scale it by the mesh axis size).
     """
     S, C, d = x.shape
     H, G, hd = s.n_heads, s.kv_heads, s.head_dim
@@ -480,6 +489,8 @@ def attention_decode_paged(
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
     o = jnp.einsum("bghqk,bkgd->bqghd", p, v_view.astype(x.dtype))
     out = dense(params["wo"], o.reshape(S, C, H * hd), name="attn_o", quant=quant)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
     if kv_int8:
         return x + out, pool_k, pool_v, pool_k_scale, pool_v_scale
     return x + out, pool_k, pool_v
@@ -490,28 +501,53 @@ def attention_decode_paged(
 # ---------------------------------------------------------------------------
 
 
-def prepack_lm_head(embed: jax.Array, *, w_bits: int = 8, a_bits: int = 8) -> PackedDenseParams:
+def prepack_lm_head(
+    embed: jax.Array,
+    *,
+    w_bits: int = 8,
+    a_bits: int = 8,
+    t_max: jax.Array | float | None = None,
+) -> PackedDenseParams:
     """One-time quantize + bit-pack of the tied LM head (``embed.T``).
 
     The head is the last — and, at 256k vocabs, much the widest — matmul
     of every decode step; prepacking routes it through the same Pallas
     Kernel-Packing kernel as the projections instead of leaving it in
-    full precision.
+    full precision.  ``t_max`` is the tensor-parallel override: a
+    vocab-shard of the embedding passes the whole embedding's tanh
+    normalizer so its packed head equals a column slice of the global
+    one (see :func:`repro.kernels.packed_matmul.ops.prepack_dense`).
     """
-    return prepack_dense(jnp.asarray(embed).T, w_bits=w_bits, a_bits=a_bits)
+    return prepack_dense(jnp.asarray(embed).T, w_bits=w_bits, a_bits=a_bits, t_max=t_max)
 
 
-def lm_head(x: jax.Array, embed: jax.Array, dtype, packed: PackedDenseParams | None = None) -> jax.Array:
+def lm_head(
+    x: jax.Array,
+    embed: jax.Array,
+    dtype,
+    packed: PackedDenseParams | None = None,
+    *,
+    axis_name: str | None = None,  # mesh model axis: vocab sharded over it
+) -> jax.Array:
     """Final-logits matmul: x [B, d] -> [B, V] float32.
 
     With ``packed`` set, activations go through the same bounded sigmoid
     proxy as :func:`dense`'s packed path and the matmul runs in the packed
     integer kernel; otherwise the tied-embedding float matmul.
+
+    With ``axis_name`` set (inside a shard_map), ``embed``/``packed`` hold
+    a contiguous rank-order vocab shard and the local logits are
+    all-gathered along the vocab axis — an exact concatenation, so mesh
+    logits are bit-identical to the single-device matmul per column.
     """
     if packed is not None:
         xq = jax.nn.sigmoid(x).astype(jnp.float32)
-        return packed_dense(xq, packed).astype(jnp.float32)
-    return (x @ embed.astype(dtype).T).astype(jnp.float32)
+        logits = packed_dense(xq, packed).astype(jnp.float32)
+    else:
+        logits = (x @ embed.astype(dtype).T).astype(jnp.float32)
+    if axis_name is not None:
+        logits = jax.lax.all_gather(logits, axis_name, axis=1, tiled=True)
+    return logits
 
 
 # ---------------------------------------------------------------------------
@@ -564,7 +600,14 @@ def mlp_init(key, s: MLPSpec) -> dict:
     return p
 
 
-def mlp(params: dict, s: MLPSpec, x: jax.Array, *, quant: QuantConfig = NO_QUANT) -> jax.Array:
+def mlp(
+    params: dict,
+    s: MLPSpec,
+    x: jax.Array,
+    *,
+    quant: QuantConfig = NO_QUANT,
+    axis_name: str | None = None,  # mesh model axis: d_ff sharded over it
+) -> jax.Array:
     h = rmsnorm(params["ln"], x)
     up = dense(params["w_up"], h, name="mlp_up", quant=quant)
     up = shard(up, "batch", None, "ff")
@@ -578,4 +621,8 @@ def mlp(params: dict, s: MLPSpec, x: jax.Array, *, quant: QuantConfig = NO_QUANT
     else:
         act = jax.nn.gelu(up)
     out = dense(params["w_down"], act, name="mlp_down", quant=quant)
+    if axis_name is not None:
+        # column-parallel up/gate, row-parallel down: one psum per block,
+        # before the (replicated) residual add
+        out = jax.lax.psum(out, axis_name)
     return x + shard(out, "batch", None, None)

@@ -27,9 +27,18 @@ class MambaSpec:
     expand: int = 2
     conv_width: int = 4
     chunk: int = 256
+    # TP-local head count (None: all heads).  A mesh shard runs the block
+    # with its contiguous group of heads: in_z / the x-part of in_xbc /
+    # conv channels / in_dt / a_log / dt_bias / d_skip sliced per head
+    # group, B and C columns replicated (they feed every head's state,
+    # MQA-style), out_norm reduced globally via psum, out_proj
+    # row-parallel.  d_inner then means the *local* inner width.
+    shard_heads: int | None = None
 
     @property
     def d_inner(self) -> int:
+        if self.shard_heads is not None:
+            return self.shard_heads * self.head_dim
         return self.expand * self.d_model
 
     @property
@@ -157,6 +166,18 @@ def mamba_train(params: dict, s: MambaSpec, x: jax.Array, *, quant: QuantConfig 
     return x + shard(out, "batch", None, None)
 
 
+def _out_norm(params: dict, y: jax.Array, axis_name: str | None, eps: float = 1e-6) -> jax.Array:
+    """Gated-output RMSNorm; under TP the mean-square reduces over the
+    *global* d_inner (psum of local sums of squares)."""
+    if axis_name is None:
+        return rmsnorm(params, y)
+    sq = jnp.sum(jnp.square(y), axis=-1, keepdims=True, dtype=jnp.float32)
+    tot = jax.lax.psum(sq, axis_name)
+    d = jax.lax.psum(jnp.asarray(y.shape[-1], jnp.float32), axis_name)
+    var = tot / d
+    return (y * jax.lax.rsqrt(var + eps).astype(y.dtype)) * params["g"].astype(y.dtype)
+
+
 def mamba_decode(
     params: dict,
     s: MambaSpec,
@@ -165,8 +186,16 @@ def mamba_decode(
     conv_state: jax.Array,  # [B, conv_width-1, conv_dim]
     *,
     quant: QuantConfig = NO_QUANT,
+    axis_name: str | None = None,  # mesh model axis: heads sharded over it
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """One-token recurrent step; returns (out, ssm_state, conv_state)."""
+    """One-token recurrent step; returns (out, ssm_state, conv_state).
+
+    With ``axis_name`` set (inside a shard_map), ``s`` carries
+    ``shard_heads`` and ``params`` hold this shard's head-group slices
+    (see :class:`MambaSpec`); per-head recurrence is computed exactly as
+    on one device, and the row-parallel out_proj is psum-reduced before
+    the replicated residual add.
+    """
     B = x.shape[0]
     H, P, N = s.n_heads, s.head_dim, s.d_state
     h = rmsnorm(params["ln"], x)
@@ -189,8 +218,10 @@ def mamba_decode(
     y = jnp.einsum("bs,bhsp->bhp", c.astype(jnp.float32), new_state).astype(x.dtype)
     y = y + params["d_skip"].astype(x.dtype)[None, :, None] * xs
     y = y.reshape(B, 1, s.d_inner) * jax.nn.silu(z)
-    y = rmsnorm(params["out_norm"], y)
+    y = _out_norm(params["out_norm"], y, axis_name)
     out = dense(params["out_proj"], y, name="ssm_out", quant=quant)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
     return x + out, new_state, new_conv_state
 
 
@@ -203,6 +234,7 @@ def mamba_decode_chunk(
     *,
     lens: jax.Array | None = None,  # [B] int32 valid lanes (None: all C)
     quant: QuantConfig = NO_QUANT,
+    axis_name: str | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Recurrent step over a C-token chunk (chunked-prefill serving).
 
@@ -217,7 +249,7 @@ def mamba_decode_chunk(
     def body(carry, j):
         st, cv = carry
         xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=1)
-        h, ns, nc = mamba_decode(params, s, xj, st, cv, quant=quant)
+        h, ns, nc = mamba_decode(params, s, xj, st, cv, quant=quant, axis_name=axis_name)
         if lens is not None:
             ok = j < lens  # [B]
             ns = jnp.where(ok[:, None, None, None], ns, st)

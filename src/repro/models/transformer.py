@@ -75,6 +75,11 @@ class ModelConfig:
     cache_shard: str = "kv_heads"
     # decode KV cache storage: "bf16" | "int8" (per-token scales)
     kv_dtype: str = "bf16"
+    # tensor-parallel degree the *specs* are local to: a mesh shard runs
+    # the decode path with replace(cfg, tp_shards=mp), so attn heads /
+    # kv groups / d_ff / SSM heads divide by mp while d_model, vocab and
+    # the quant assignment stay global.  1 (default) = whole model.
+    tp_shards: int = 1
 
     @property
     def hd(self) -> int:
@@ -83,8 +88,8 @@ class ModelConfig:
     def attn_spec(self) -> L.AttnSpec:
         return L.AttnSpec(
             d_model=self.d_model,
-            n_heads=self.n_heads,
-            kv_heads=self.kv_heads,
+            n_heads=self.n_heads // self.tp_shards,
+            kv_heads=self.kv_heads // self.tp_shards,
             head_dim=self.hd,
             rope_theta=self.rope_theta,
             use_mrope=self.use_mrope,
@@ -92,7 +97,9 @@ class ModelConfig:
         )
 
     def mlp_spec(self) -> L.MLPSpec:
-        return L.MLPSpec(d_model=self.d_model, d_ff=self.d_ff, kind=self.mlp_kind)
+        return L.MLPSpec(
+            d_model=self.d_model, d_ff=self.d_ff // self.tp_shards, kind=self.mlp_kind
+        )
 
     def moe_spec(self) -> X.MoESpec:
         return X.MoESpec(
@@ -105,11 +112,16 @@ class ModelConfig:
         )
 
     def ssm_spec(self) -> M.MambaSpec:
+        shard_heads = None
+        if self.tp_shards > 1:
+            n_heads = (2 * self.d_model) // self.ssm_head_dim  # expand=2
+            shard_heads = n_heads // self.tp_shards
         return M.MambaSpec(
             d_model=self.d_model,
             d_state=self.ssm_state,
             head_dim=self.ssm_head_dim,
             chunk=self.ssm_chunk,
+            shard_heads=shard_heads,
         )
 
     @property
@@ -614,7 +626,10 @@ def init_paged_state(
     if not kv_int8 and kv_dtype is not None and not isinstance(kv, str):
         dtype = kv  # explicit float override (e.g. jnp.float32 pools)
     if cfg.family == "attn":
-        shape = (cfg.n_layers, n_pages, page_size, cfg.kv_heads * cfg.hd)
+        # under TP (cfg.tp_shards > 1) this is the *local* pool: each mesh
+        # rank owns the pages of its contiguous kv-head group
+        g_loc = cfg.kv_heads // cfg.tp_shards
+        shape = (cfg.n_layers, n_pages, page_size, g_loc * cfg.hd)
         if kv_int8:
             return {
                 "k": jnp.zeros(shape, jnp.int8),
@@ -675,6 +690,7 @@ def decode_paged_layer(
     window: jax.Array | int = -1,
     lens: jax.Array | None = None,
     gather: str = "xla",
+    axis_name: str | None = None,
 ) -> tuple[jax.Array, dict]:
     """One layer of the paged decode/prefill step.
 
@@ -688,6 +704,12 @@ def decode_paged_layer(
     (:mod:`repro.obs.attrib`) times it segment by segment — identical
     math by construction, so segmented re-execution attributes the real
     fused step, not a lookalike.
+
+    With ``axis_name`` set (a tensor-parallel shard inside a shard_map),
+    ``cfg`` carries ``tp_shards = mp``, ``p`` and ``layer_state`` hold
+    this rank's slices, and each block psums once before its residual;
+    MoE routes through the expert-sharded psum path directly (the
+    rules-driven :func:`_moe_block` cannot nest another shard_map here).
     """
     if cfg.family == "attn":
         aspec = cfg.attn_spec()
@@ -698,18 +720,26 @@ def decode_paged_layer(
                 block_table, pos, window=window, quant=cfg.quant,
                 pool_k_scale=layer_state["k_scale"],
                 pool_v_scale=layer_state["v_scale"], lens=lens, gather=gather,
+                axis_name=axis_name,
             )
         else:
             h, nk, nv = L.attention_decode_paged(
                 p["attn"], aspec, h, layer_state["k"], layer_state["v"],
                 block_table, pos, window=window, quant=cfg.quant, lens=lens,
-                gather=gather,
+                gather=gather, axis_name=axis_name,
             )
             nks = nvs = None
         if cfg.is_moe:
-            h = _moe_block(p["moe"], cfg, h)
+            if axis_name is not None:
+                s_, c_, d_ = h.shape
+                out = X._local_moe_expert_sharded(
+                    p["moe"], cfg.moe_spec(), h.reshape(s_ * c_, d_), axis_name=axis_name
+                )
+                h = h + out.reshape(s_, c_, d_)
+            else:
+                h = _moe_block(p["moe"], cfg, h)
         else:
-            h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant)
+            h = L.mlp(p["mlp"], cfg.mlp_spec(), h, quant=cfg.quant, axis_name=axis_name)
         new_state = {"k": nk, "v": nv}
         if kv_int8:
             new_state.update(k_scale=nks, v_scale=nvs)
@@ -720,12 +750,12 @@ def decode_paged_layer(
             # recurrent over the lane axis; invalid lanes leave state alone
             h, ns, nc = M.mamba_decode_chunk(
                 p, sspec, h, layer_state["ssm"], layer_state["conv"],
-                lens=lens, quant=cfg.quant,
+                lens=lens, quant=cfg.quant, axis_name=axis_name,
             )
         else:
             h, ns, nc = M.mamba_decode(
                 p, sspec, h, layer_state["ssm"], layer_state["conv"],
-                quant=cfg.quant,
+                quant=cfg.quant, axis_name=axis_name,
             )
         return h, {"ssm": ns, "conv": nc}
     raise NotImplementedError(
@@ -739,9 +769,16 @@ def head_paged(
     x: jax.Array,  # [S, C, d] final hidden states
     lens: jax.Array | None = None,
     head: Any = None,
+    axis_name: str | None = None,
 ) -> jax.Array:
     """Final norm + last-valid-lane gather + LM head — the exit segment
-    of :func:`forward_decode_paged`, shared with the in-situ attributor."""
+    of :func:`forward_decode_paged`, shared with the in-situ attributor.
+
+    Under tensor parallelism the head is vocab-sharded: the shard tree
+    carries the full ``embed`` for the (replicated) token lookup plus a
+    ``head_embed`` vocab-row slice (or a per-shard prepacked ``head``),
+    and the local logits are all-gathered — an exact concatenation.
+    """
     x = L.rmsnorm(params["final_ln"], x)
     if lens is not None:
         # only each slot's last valid lane is ever sampled; gather it before
@@ -752,7 +789,8 @@ def head_paged(
         # lens=None: every lane valid, so the newest token is the last lane
         # (identical to lane 0 on the legacy C == 1 call sites)
         x_last = x[:, -1, :]
-    return L.lm_head(x_last, params["embed"], cfg.dtype, packed=head)
+    emb = params.get("head_embed", params["embed"])
+    return L.lm_head(x_last, emb, cfg.dtype, packed=head, axis_name=axis_name)
 
 
 def forward_decode_paged(
@@ -765,6 +803,7 @@ def forward_decode_paged(
     head: Any = None,
     lens: jax.Array | None = None,  # [S] int32 valid tokens per chunk (None: all)
     gather: str = "xla",  # KV gather backend (see attention_decode_paged)
+    axis_name: str | None = None,  # mesh model axis (tensor-parallel shard)
 ) -> tuple[jax.Array, dict]:
     """One continuous-batching decode/prefill step over the slot set.
 
@@ -800,7 +839,7 @@ def forward_decode_paged(
                 st.update(k_scale=pks, v_scale=pvs)
             h, nst = decode_paged_layer(
                 p, cfg, st, block_table, h, pos, window=win, lens=lens,
-                gather=gather,
+                gather=gather, axis_name=axis_name,
             )
             return h, nst["k"], nst["v"], nst.get("k_scale"), nst.get("v_scale")
 
@@ -848,7 +887,8 @@ def forward_decode_paged(
 
         def ssm_step(h, p, st, cv):
             h, nst = decode_paged_layer(
-                p, cfg, {"ssm": st, "conv": cv}, block_table, h, pos, lens=lens
+                p, cfg, {"ssm": st, "conv": cv}, block_table, h, pos, lens=lens,
+                axis_name=axis_name,
             )
             return h, nst["ssm"], nst["conv"]
 
@@ -873,7 +913,7 @@ def forward_decode_paged(
             f"continuous-batching serving supports attn/ssm families, not {cfg.family!r}"
         )
 
-    logits = head_paged(params, cfg, x, lens=lens, head=head)
+    logits = head_paged(params, cfg, x, lens=lens, head=head, axis_name=axis_name)
     return logits, new_state
 
 

@@ -129,6 +129,163 @@ def param_shardings(params_shape, rules: "ShardingRules"):
     return _jax.tree_util.tree_map_with_path(one, params_shape)
 
 
+# ---------------------------------------------------------------------------
+# tensor-parallel decode shards (mesh serving: repro.serving mesh engine)
+#
+# A mesh rank runs the paged decode path on a *contiguous rank-order slice*
+# of every sharded matrix: wq/wk/wv/w_up/w_gate/in_z/in_xbc/in_dt column-
+# parallel, wo/w_down/out_proj row-parallel, MoE experts on the expert
+# axis, the LM head on vocab rows.  Contiguity is what makes per-shard
+# quantize+prepack (global t_max) equal a slice of the global prepack and
+# keeps kv-head groups / SSM head groups adjacent in their state pools.
+# ---------------------------------------------------------------------------
+
+
+def _tp_check(n: int, mp: int, what: str) -> None:
+    if n % mp != 0:
+        raise ValueError(f"tensor parallelism: {what} ({n}) must divide by mp={mp}")
+
+
+def _w_cols(leaf, start: int, size: int):
+    """Column (output) slice of a dense weight: float array or int8
+    serving dict {"levels", "scale"} (per-column scales slice exactly)."""
+    if isinstance(leaf, dict):
+        return {
+            "levels": leaf["levels"][..., start : start + size],
+            "scale": leaf["scale"][..., start : start + size],
+        }
+    return leaf[..., start : start + size]
+
+
+def _w_rows(leaf, start: int, size: int):
+    """Row (input) slice of a dense weight; int8 per-column scales stay full."""
+    if isinstance(leaf, dict):
+        return {
+            "levels": leaf["levels"][..., start : start + size, :],
+            "scale": leaf["scale"],
+        }
+    return leaf[..., start : start + size, :]
+
+
+def _w_col_concat(leaf, ranges: list[tuple[int, int]]):
+    """Concatenate several column ranges (SSM in_xbc: local x-part + full B/C)."""
+    import jax.numpy as jnp
+
+    def cat(a):
+        return jnp.concatenate([a[..., s : s + n] for s, n in ranges], axis=-1)
+
+    if isinstance(leaf, dict):
+        return {"levels": cat(leaf["levels"]), "scale": cat(leaf["scale"])}
+    return cat(leaf)
+
+
+def slice_decode_params(params: dict, cfg, mp: int, rank: int) -> dict:
+    """Rank ``rank``'s tensor-parallel slice of a decode params tree.
+
+    ``cfg`` is the *global* ModelConfig (``tp_shards == 1``); ``params``
+    holds float or int8-dict weights in the stacked decode layout
+    (``quantize_params_for_serving`` output is fine; prepacked leaves are
+    rejected — mesh construction slices first, then prepacks per shard
+    with the global tanh normalizer).  The returned tree carries the full
+    ``embed`` (replicated token lookup) plus a ``head_embed`` vocab-row
+    slice for the float LM head.
+    """
+    from repro.kernels.packed_matmul.ops import PackedDenseParams
+
+    for leaf in _jax.tree.leaves(params):
+        if isinstance(leaf, PackedDenseParams):
+            raise ValueError(
+                "slice_decode_params needs unpacked weights: slice per shard "
+                "first, then prepack with the global t_max"
+            )
+    if cfg.family not in ("attn", "ssm"):
+        raise NotImplementedError(
+            f"tensor-parallel serving supports attn/ssm families, not {cfg.family!r}"
+        )
+    vocab = params["embed"].shape[0]
+    _tp_check(vocab, mp, "vocab")
+    vs = vocab // mp
+    out = {
+        "embed": params["embed"],
+        "final_ln": params["final_ln"],
+        "head_embed": params["embed"][rank * vs : (rank + 1) * vs],
+    }
+    lp = params["layers"]
+    if cfg.family == "attn":
+        _tp_check(cfg.n_heads, mp, "n_heads")
+        _tp_check(cfg.kv_heads, mp, "kv_heads")
+        hd = cfg.hd
+        q_loc = cfg.n_heads // mp * hd
+        kv_loc = cfg.kv_heads // mp * hd
+        a = lp["attn"]
+        block = {
+            "attn": {
+                "ln": a["ln"],
+                "wq": {"w": _w_cols(a["wq"]["w"], rank * q_loc, q_loc)},
+                "wk": {"w": _w_cols(a["wk"]["w"], rank * kv_loc, kv_loc)},
+                "wv": {"w": _w_cols(a["wv"]["w"], rank * kv_loc, kv_loc)},
+                "wo": {"w": _w_rows(a["wo"]["w"], rank * q_loc, q_loc)},
+            }
+        }
+        if cfg.is_moe:
+            _tp_check(cfg.n_experts, mp, "n_experts")
+            e_loc = cfg.n_experts // mp
+            m = lp["moe"]
+            moe = {"router": m["router"], "ln": m["ln"]}
+            for k in ("w_up", "w_down", "w_gate"):
+                if k in m:
+                    # stacked [L, E, d, f]: experts shard on the E axis
+                    moe[k] = m[k][:, rank * e_loc : (rank + 1) * e_loc]
+            block["moe"] = moe
+        else:
+            _tp_check(cfg.d_ff, mp, "d_ff")
+            f_loc = cfg.d_ff // mp
+            m = lp["mlp"]
+            mlp = {
+                "ln": m["ln"],
+                "w_up": {"w": _w_cols(m["w_up"]["w"], rank * f_loc, f_loc)},
+                "w_down": {"w": _w_rows(m["w_down"]["w"], rank * f_loc, f_loc)},
+            }
+            if "w_gate" in m:
+                mlp["w_gate"] = {"w": _w_cols(m["w_gate"]["w"], rank * f_loc, f_loc)}
+            block["mlp"] = mlp
+        out["layers"] = block
+        return out
+    # ssm: heads shard contiguously; B/C columns feed every head (replicated)
+    sspec = cfg.ssm_spec()
+    H, P_, N = sspec.n_heads, sspec.head_dim, sspec.d_state
+    d_in = sspec.d_inner
+    _tp_check(H, mp, "ssm heads")
+    h_loc = H // mp
+    di_loc = h_loc * P_
+    x0 = rank * di_loc
+    xbc_ranges = [(x0, di_loc), (d_in, N), (d_in + N, N)]
+    out["layers"] = {
+        "ln": lp["ln"],
+        "in_z": {"w": _w_cols(lp["in_z"]["w"], x0, di_loc)},
+        "in_xbc": {"w": _w_col_concat(lp["in_xbc"]["w"], xbc_ranges)},
+        "in_dt": {"w": _w_cols(lp["in_dt"]["w"], rank * h_loc, h_loc)},
+        "conv_w": _w_col_concat(lp["conv_w"], xbc_ranges),
+        "conv_b": _w_col_concat(lp["conv_b"], xbc_ranges),
+        "a_log": lp["a_log"][..., rank * h_loc : (rank + 1) * h_loc],
+        "dt_bias": lp["dt_bias"][..., rank * h_loc : (rank + 1) * h_loc],
+        "d_skip": lp["d_skip"][..., rank * h_loc : (rank + 1) * h_loc],
+        "out_norm": {"g": lp["out_norm"]["g"][..., x0 : x0 + di_loc]},
+        "out_proj": {"w": _w_rows(lp["out_proj"]["w"], x0, di_loc)},
+    }
+    return out
+
+
+def stack_decode_shards(shards: list):
+    """Stack per-rank param trees on a new leading [mp] axis (the mesh
+    step's in_spec puts the model axis there; static metadata — packed
+    scales, PackConfigs — must be identical across ranks, which the
+    global-t_max prepack guarantees)."""
+    import jax.numpy as jnp
+
+    return _jax.tree.map(lambda *xs: jnp.stack(xs), *shards)
+
+
 def regather_layer_params(layer_params, rules: "ShardingRules | None"):
     """ZeRO-3 regather point: constrain a layer's params to be replicated
     over the fsdp axis *inside* the layer scan, so XLA re-gathers each

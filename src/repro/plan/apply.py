@@ -14,6 +14,7 @@ from __future__ import annotations
 import re
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels.packed_matmul.ops import prepack_dense
 from repro.models.layers import prepack_lm_head
@@ -25,6 +26,24 @@ PROJ_WEIGHT_RE = r"(wq|wk|wv|wo|w_up|w_gate|w_down|in_z|in_xbc|out_proj)/w$"
 MOE_WEIGHT_RE = r"(w_up|w_gate|w_down)$"
 
 
+def tanh_max_tree(tree):
+    """Per-matrix tanh-domain normalizers for every leaf of a params
+    subtree (leading stack axes preserved: [L, K, N] -> [L]).
+
+    Fed to :func:`prepack_tree` as ``t_max_tree`` when packing a
+    tensor-parallel *slice* of ``tree``: each shard quantizes against the
+    whole matrix's normalizer, so per-shard packed words equal column
+    slices of the global prepack exactly.
+    """
+
+    def one(leaf):
+        if getattr(leaf, "ndim", 0) < 2:
+            return jnp.zeros(())  # never consumed (non-projection leaf)
+        return jnp.max(jnp.abs(jnp.tanh(leaf)), axis=(-2, -1))
+
+    return jax.tree.map(one, tree)
+
+
 def prepack_tree(
     tree,
     *,
@@ -32,6 +51,7 @@ def prepack_tree(
     a_bits: int,
     block_k: int | None = None,
     skipped: list | None = None,
+    t_max_tree=None,
 ):
     """Quantize + bit-pack every projection weight in a params subtree.
 
@@ -40,23 +60,56 @@ def prepack_tree(
     :class:`~repro.kernels.packed_matmul.ops.PackedDenseParams` leaves.
     Projection-shaped tensors left in float are appended to ``skipped``
     so silent precision gaps stay visible.
+
+    ``t_max_tree`` (same structure as ``tree``) supplies per-matrix
+    level normalizers — the tensor-parallel path packs each rank's slice
+    against the *global* matrix's normalizer (see :func:`tanh_max_tree`).
     """
 
-    def one(path, leaf):
+    def one(path, leaf, t_max):
         pstr = "/".join(str(getattr(k, "key", k)) for k in path)
         if re.search(PROJ_WEIGHT_RE, pstr) and leaf.ndim in (2, 3):
-            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
+            return prepack_dense(
+                leaf, w_bits=w_bits, a_bits=a_bits, block_k=block_k, t_max=t_max
+            )
         if re.search(MOE_WEIGHT_RE, pstr) and leaf.ndim in (3, 4):
-            return prepack_dense(leaf, w_bits=w_bits, a_bits=a_bits, block_k=block_k)
+            return prepack_dense(
+                leaf, w_bits=w_bits, a_bits=a_bits, block_k=block_k, t_max=t_max
+            )
         if (re.search(PROJ_WEIGHT_RE, pstr) or re.search(MOE_WEIGHT_RE, pstr)) and leaf.ndim >= 2:
             if skipped is not None:
                 skipped.append(pstr)
         return leaf
 
-    return jax.tree_util.tree_map_with_path(one, tree)
+    if t_max_tree is None:
+        return jax.tree_util.tree_map_with_path(lambda p, l: one(p, l, None), tree)
+    return jax.tree_util.tree_map_with_path(one, tree, t_max_tree)
 
 
-def apply_plan(params: dict, cfg, plan: DeployPlan, *, verbose: bool = True):
+def _tp_tmax_tree(global_layers, sliced_layers):
+    """t_max tree for a tensor-parallel slice: projection weights take the
+    *global* matrix's normalizer (their columns/rows were sliced); MoE
+    expert tensors take the sliced tree's own (experts are whole matrices
+    sliced on the E axis, so per-expert normalizers are unchanged)."""
+
+    def one(path, g, s):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        leaf = s if re.search(MOE_WEIGHT_RE, pstr) and not pstr.endswith("/w") else g
+        if getattr(leaf, "ndim", 0) < 2:
+            return jnp.zeros(())
+        return jnp.max(jnp.abs(jnp.tanh(leaf)), axis=(-2, -1))
+
+    return jax.tree_util.tree_map_with_path(one, global_layers, sliced_layers)
+
+
+def apply_plan(
+    params: dict,
+    cfg,
+    plan: DeployPlan,
+    *,
+    verbose: bool = True,
+    tp: tuple[int, int] | None = None,
+):
     """Turn float params + a plan into serveable mixed-precision params.
 
     Returns ``(new_params, packed_head)``; ``packed_head`` is None when
@@ -64,6 +117,12 @@ def apply_plan(params: dict, cfg, plan: DeployPlan, *, verbose: bool = True):
     weights for :func:`repro.models.layers.lm_head` / the serving
     engine.  The float ``embed`` stays in the params (token embedding
     lookups read it); only the head *matmul* goes sub-8-bit.
+
+    ``tp=(mp, rank)`` produces mesh-rank ``rank``'s tensor-parallel
+    shard: weights are sliced *first* (contiguous rank order), then
+    quantized + packed against the global normalizers, so each shard's
+    packed words — the LM head's vocab shard included — equal slices of
+    the single-device prepack and no repacking ever follows a collective.
     """
     plan.validate()
     if plan.family != cfg.family:
@@ -74,6 +133,17 @@ def apply_plan(params: dict, cfg, plan: DeployPlan, *, verbose: bool = True):
         raise ValueError(
             f"plan has {len(plan.layers)} layers, config {cfg.name!r} has {cfg.n_layers}"
         )
+    global_layers = params["layers"]
+    head_embed = params["embed"]
+    head_tmax = None
+    if tp is not None:
+        from repro.core.quant import weight_tanh_max
+        from repro.parallel.sharding import slice_decode_params
+
+        mp, rank = tp
+        head_tmax = weight_tanh_max(params["embed"])
+        params = slice_decode_params(params, cfg, mp, rank)
+        head_embed = params["head_embed"]
     skipped: list[str] = []
     out = dict(params)
     if plan.uniform:
@@ -81,22 +151,28 @@ def apply_plan(params: dict, cfg, plan: DeployPlan, *, verbose: bool = True):
         out["layers"] = prepack_tree(
             params["layers"], w_bits=lp.w_bits, a_bits=lp.a_bits,
             block_k=lp.block_k, skipped=skipped,
+            t_max_tree=None if tp is None else _tp_tmax_tree(global_layers, params["layers"]),
         )
     else:
         per_layer = []
         for i, lp in enumerate(plan.layers):
             layer_tree = jax.tree.map(lambda a: a[i], params["layers"])
+            tmt = None
+            if tp is not None:
+                g_i = jax.tree.map(lambda a: a[i], global_layers)
+                tmt = _tp_tmax_tree(g_i, layer_tree)
             per_layer.append(
                 prepack_tree(
                     layer_tree, w_bits=lp.w_bits, a_bits=lp.a_bits,
-                    block_k=lp.block_k, skipped=skipped,
+                    block_k=lp.block_k, skipped=skipped, t_max_tree=tmt,
                 )
             )
         out["layers"] = per_layer
     head = None
     if plan.lm_head is not None:
         head = prepack_lm_head(
-            params["embed"], w_bits=plan.lm_head.w_bits, a_bits=plan.lm_head.a_bits
+            head_embed, w_bits=plan.lm_head.w_bits, a_bits=plan.lm_head.a_bits,
+            t_max=head_tmax,
         )
     if skipped and verbose:
         uniq = sorted(set(skipped))

@@ -14,12 +14,21 @@ classes with deterministic load shedding and cooperative cancellation
 (:mod:`repro.serving.chaos`) that injects step faults, transient
 allocation failures, and NaN-poisoned logits to prove the engine's
 retry / quarantine / token-identical-replay machinery in CI.
+
+PR 10 adds mesh parallelism (``EngineConfig.mesh = MeshConfig(dp, mp)``:
+per-replica page pools/schedulers on the data axis, sliced-then-packed
+weights + sharded heads/experts on the model axis) behind one unified
+construction front door, :func:`repro.serving.api.build_engine` — the
+only place quantization, deployment plans, and mesh sharding compose.
 """
 from repro.serving.chaos import ChaosConfig, InjectedFault
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import Engine, EngineConfig, MeshConfig, ObsConfig
 from repro.serving.lifecycle import SLO, TERMINAL_STATUSES, Request
 from repro.serving.paged_kv import BlockTable, PageAllocator
 from repro.serving.scheduler import Scheduler
+
+# api imports Engine/EngineConfig from engine — keep this import last
+from repro.serving.api import build_engine
 
 __all__ = [
     "BlockTable",
@@ -27,9 +36,12 @@ __all__ = [
     "Engine",
     "EngineConfig",
     "InjectedFault",
+    "MeshConfig",
+    "ObsConfig",
     "PageAllocator",
     "Request",
     "SLO",
     "Scheduler",
     "TERMINAL_STATUSES",
+    "build_engine",
 ]

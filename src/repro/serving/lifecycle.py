@@ -69,6 +69,7 @@ class Request:
     slo: str | None = None  # SLO class name, for per-class reporting
     # runtime state (engine-owned)
     slot: int = -1
+    replica: int = 0  # data-parallel replica shard this request is routed to
     pages: list[int] = dataclasses.field(default_factory=list)
     n_fed: int = 0  # tokens of `seq` resident in the cache (this residency)
     out_tokens: list[int] = dataclasses.field(default_factory=list)

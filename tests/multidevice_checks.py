@@ -5,6 +5,18 @@ Asserts the properties that make the distribution layer trustworthy:
   2. MoE with real all_to_all expert parallelism == dense reference
   3. checkpoint saved from mesh A restores bit-exactly onto mesh B
   4. gradient compression roundtrip sanity under sharding
+  5. mesh serving (dp=2 x mp=2) token-identical to the single-device
+     engine — including under forced preemption and seeded chaos — with
+     zero leaked pages/slots on every replica, for attn and ssm alike
+  6. per-shard prepack_dense == a column slice of the global prepack
+     (the sliced-then-packed invariant: no repacking after a collective)
+
+The serving identity checks run the model in float32: the mp > 1 step
+reduces partial products with one psum per block, and at bf16 the
+reduction-order noise (~2e-3) can flip a greedy argmax on a near-tie.
+f32 keeps every tie far above reduction noise, so token equality is
+exact; dp-only sharding is bit-exact at any dtype (same compiled step
+per replica) and is asserted in-process by tests/test_serving.py.
 """
 import os
 
@@ -133,9 +145,110 @@ def check_moe_decode_psum():
     print("moe decode psum parity ok")
 
 
+def _serve_tokens(cfg, mesh, *, chaos=None):
+    """Run the forced-preemption workload on one engine arm; return
+    (per-rid token streams, metrics)."""
+    from repro.serving import ChaosConfig, EngineConfig, build_engine  # noqa: F401
+
+    ecfg = EngineConfig(n_slots=3, page_size=4, max_len=32, n_pages=6,
+                        chunk_tokens=4, admit="on-demand", mesh=mesh)
+    eng = build_engine(cfg, ecfg, chaos=chaos)
+    rng = np.random.default_rng(17)
+    for ln in (9, 6, 11, 9, 6, 11):
+        eng.submit(rng.integers(1, cfg.vocab, size=ln).tolist(), 6, arrival=0.0)
+    m = eng.run(realtime=False)
+    eng.assert_no_leaks()  # audits every replica's pool + slots
+    assert m["n_ok"] == 6, m["statuses"]
+    return {r.rid: r.out_tokens for r in eng.finished}, m
+
+
+def check_mesh_serving_token_identity():
+    """dp=2 x mp=2 serving == single-device serving, token for token,
+    while the undersized pool forces preemption + chunked replay on both
+    arms, for the KV family and the recurrent-state SSM family."""
+    from repro.serving import MeshConfig
+
+    for arch in ("llama3.2-3b", "mamba2-130m"):
+        cfg = dataclasses.replace(get_config(arch, smoke=True), dtype=jnp.float32)
+        want, m_1 = _serve_tokens(cfg, MeshConfig())
+        got, m_m = _serve_tokens(cfg, MeshConfig(dp=2, mp=2))
+        assert m_1["preemptions"] > 0, "undersized pool must force preemption"
+        assert m_m["preemptions"] > 0, "undersized pool must force preemption"
+        assert want == got, f"{arch}: mesh tokens diverged from single-device"
+        print(f"mesh serving identity ok ({arch}): "
+              f"preempt {m_1['preemptions']}/{m_m['preemptions']}")
+
+
+def check_mesh_serving_under_chaos():
+    """Seeded fault injection (step faults, transient alloc failures,
+    NaN-poisoned logits) on the mesh engine: the retry / quarantine /
+    replay machinery must keep the token streams equal to the clean
+    single-device ground truth."""
+    from repro.serving import ChaosConfig, MeshConfig
+
+    chaos = ChaosConfig(seed=3, step_fault_rate=0.1, alloc_fault_rate=0.1,
+                        nan_rate=0.05)
+    for arch in ("llama3.2-3b", "mamba2-130m"):
+        cfg = dataclasses.replace(get_config(arch, smoke=True), dtype=jnp.float32)
+        want, _ = _serve_tokens(cfg, MeshConfig())
+        got, m = _serve_tokens(cfg, MeshConfig(dp=2, mp=2), chaos=chaos)
+        injected = sum(m["injected"].values())
+        assert injected > 0, "chaos harness injected nothing"
+        assert want == got, f"{arch}: chaos-arm tokens diverged"
+        print(f"mesh serving chaos identity ok ({arch}): {injected} faults")
+
+
+def check_prepack_shard_equality():
+    """A tensor-parallel shard packed against the *global* tanh
+    normalizer equals a column slice of the single-device prepack —
+    words, scales, and kernel outputs alike — so mesh engines never
+    repack after a collective."""
+    from repro.core.quant import weight_tanh_max
+    from repro.kernels.packed_matmul.ops import (
+        choose_config, packed_dense, prepack_dense,
+    )
+
+    mp = 2
+    for w_bits, a_bits in ((4, 4), (4, 8)):  # packed words / unpacked fallback
+        pack = choose_config(w_bits, a_bits)
+        n_seg = pack.n_seg if pack is not None else 1
+        K, Nl = 32, 4 * n_seg  # per-shard width stays word-aligned
+        w = jax.random.normal(jax.random.PRNGKey(5), (K, mp * Nl)) * 0.4
+        x = jax.random.uniform(jax.random.PRNGKey(6), (3, K))
+        full = prepack_dense(w, w_bits=w_bits, a_bits=a_bits)
+        t_max = weight_tanh_max(w)
+        full_words = full.w_packed if pack is not None else full.w_lvl
+        full_out = packed_dense(x, full)
+        for r in range(mp):
+            shard = prepack_dense(
+                w[:, r * Nl:(r + 1) * Nl], w_bits=w_bits, a_bits=a_bits,
+                t_max=t_max,
+            )
+            words = Nl // n_seg
+            shard_words = shard.w_packed if pack is not None else shard.w_lvl
+            np.testing.assert_array_equal(
+                np.asarray(shard_words),
+                np.asarray(full_words[:, r * words:(r + 1) * words]),
+                err_msg=f"w{w_bits}a{a_bits} rank {r}: packed words differ "
+                        "from global slice",
+            )
+            assert float(shard.w_scale) == float(full.w_scale)
+            assert float(shard.w_zero) == float(full.w_zero)
+            np.testing.assert_array_equal(
+                np.asarray(packed_dense(x, shard)),
+                np.asarray(full_out[:, r * Nl:(r + 1) * Nl]),
+                err_msg=f"w{w_bits}a{a_bits} rank {r}: shard output differs "
+                        "from global column slice",
+            )
+    print("prepack shard equality ok (packed words + unpacked fallback)")
+
+
 if __name__ == "__main__":
     check_train_parity()
     check_moe_all_to_all()
     check_moe_decode_psum()
     check_checkpoint_reshard()
+    check_prepack_shard_equality()
+    check_mesh_serving_token_identity()
+    check_mesh_serving_under_chaos()
     print("ALL MULTIDEVICE CHECKS PASSED")

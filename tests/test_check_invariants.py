@@ -532,6 +532,7 @@ def test_real_committed_artifacts_pass():
     for name in ("BENCH_serving.json", "BENCH_serving_smoke.json",
                  "BENCH_serving_chaos_smoke.json",
                  "BENCH_serving_attrib_smoke.json",
+                 "BENCH_serving_mesh_smoke.json",
                  "artifacts/packing_efficiency.json",
                  "artifacts/plan_drift.json"):
         path = ROOT / name
@@ -666,3 +667,104 @@ def test_attrib_kind_inference():
     # attribution *traces* still gate as traces, not as the bench artifact
     assert ci.infer_kind(
         pathlib.Path("artifacts/traces/trace_attrib_attn.json")) == "trace"
+
+
+# ---------------------------------------------------------------------------
+# mesh gates (PR 10): every clause must fail on a doctored fixture
+# ---------------------------------------------------------------------------
+
+
+def _mesh_arm(arm, dp, mp, *, tps=10.0):
+    return {
+        "arm": arm, "dp": dp, "mp": mp, "tokens_per_s": tps, "steps": 14,
+        "statuses": {"ok": 8}, "preemptions": 0, "replica_quarantines": 0,
+        "leaked_pages_per_replica": [0] * dp,
+        "leaked_slots_per_replica": [0] * dp,
+        "token_identical": True,
+    }
+
+
+def _mesh_row(arch, family):
+    return {
+        "arch": arch, "family": family, "n_requests": 8,
+        "arms": [_mesh_arm("single", 1, 1, tps=10.0),
+                 _mesh_arm("dp2", 2, 1, tps=15.0),
+                 _mesh_arm("2x2", 2, 2, tps=15.0)],
+        "dp_speedup": {"dp2": 1.5, "2x2": 1.5},
+    }
+
+
+def _mesh_fixture():
+    return {"smoke": True, "mesh_only": True,
+            "mesh": {"spec": "2x2", "dp": 2, "mp": 2,
+                     "results": [_mesh_row("llama3.2-3b", "attn"),
+                                 _mesh_row("mamba2-130m", "ssm")]},
+            "skipped": ["policy_sweep (mesh-only artifact)"]}
+
+
+def test_mesh_good_fixture_passes():
+    assert ci.check_mesh(_mesh_fixture()) == []
+
+
+def test_mesh_requires_both_families():
+    d = _mesh_fixture()
+    d["mesh"]["results"] = [r for r in d["mesh"]["results"]
+                            if r["family"] == "attn"]
+    assert any("attn and ssm" in e for e in ci.check_mesh(d))
+    assert ci.check_mesh({"mesh": {"results": []}}) == ["mesh: sweep missing/empty"]
+    assert ci.check_mesh({}) == ["mesh: sweep missing/empty"]
+
+
+def test_mesh_token_divergence_fails():
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"][2]["token_identical"] = False
+    assert any("token streams diverge" in e for e in ci.check_mesh(d))
+
+
+def test_mesh_replica_leak_and_short_audit_fail():
+    d = _mesh_fixture()
+    d["mesh"]["results"][1]["arms"][1]["leaked_pages_per_replica"] = [0, 3]
+    assert any("nothing may leak" in e for e in ci.check_mesh(d))
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"][2]["leaked_slots_per_replica"] = [0, 1]
+    assert any("nothing may leak" in e for e in ci.check_mesh(d))
+    # a replica silently escaped the audit: list shorter than dp
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"][1]["leaked_pages_per_replica"] = [0]
+    assert any("every replica must be audited" in e for e in ci.check_mesh(d))
+
+
+def test_mesh_throughput_regression_fails():
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"][1]["tokens_per_s"] = 8.0  # 0.8x single
+    errs = ci.check_mesh(d)
+    assert any("costing throughput" in e for e in errs)
+    # the slack is tunable, mirroring the serving gate
+    assert ci.check_mesh(d, tolerance=0.7) == []
+
+
+def test_mesh_missing_arms_fail():
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"] = [a for a in d["mesh"]["results"][0]["arms"]
+                                       if a["arm"] != "single"]
+    assert any("reference arm missing" in e for e in ci.check_mesh(d))
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"] = [_mesh_arm("single", 1, 1)]
+    errs = ci.check_mesh(d)
+    assert any("no dp > 1 arm" in e for e in errs)
+    assert any("no mp > 1 arm" in e for e in errs)
+
+
+def test_mesh_status_gates():
+    d = _mesh_fixture()
+    d["mesh"]["results"][0]["arms"][1]["statuses"] = {"ok": 7}  # one vanished
+    assert any("terminal status" in e for e in ci.check_mesh(d))
+    d = _mesh_fixture()
+    d["mesh"]["results"][1]["arms"][2]["statuses"] = {"ok": 7, "failed": 1}
+    assert any("'failed'" in e for e in ci.check_mesh(d))
+
+
+def test_mesh_kind_inference():
+    # "mesh" outranks the "serving" the filename also contains
+    assert ci.infer_kind(
+        pathlib.Path("BENCH_serving_mesh_smoke.json")) == "mesh"
